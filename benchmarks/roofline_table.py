@@ -1,0 +1,63 @@
+"""Roofline rows from the dry-run results (results/dryrun.jsonl).
+
+Reads the stored per-cell analysis; emits one row per (arch x shape x mesh)
+with the three terms, the bottleneck and the roofline fraction.  Run the
+dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+      --out results/dryrun.jsonl --hlo-dir results/hlo
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str, str]
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# prefer the reanalyzed table (current hlo_analysis model) when present
+RESULTS_V2 = os.path.join(_ROOT, "results", "dryrun_v2.jsonl")
+RESULTS_V1 = os.path.join(_ROOT, "results", "dryrun.jsonl")
+RESULTS = RESULTS_V2 if os.path.exists(RESULTS_V2) else RESULTS_V1
+
+
+def load_cells(path: str = None):
+    path = path or (RESULTS_V2 if os.path.exists(RESULTS_V2) else RESULTS_V1)
+    if not os.path.exists(path):
+        return []
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+                rows[r["cell"]] = r       # last write wins
+            except Exception:
+                pass
+    return list(rows.values())
+
+
+def roofline_rows() -> List[Row]:
+    cells = load_cells()
+    out: List[Row] = []
+    if not cells:
+        out.append(("roofline.NO_DRYRUN_RESULTS", 0.0, "", ""))
+        return out
+    for r in sorted(cells, key=lambda x: x["cell"]):
+        cell = r["cell"].replace("|", ".")
+        out.append((f"roofline.{cell}.t_compute", r["t_compute_s"], "s", ""))
+        out.append((f"roofline.{cell}.t_memory", r["t_memory_s"], "s", ""))
+        out.append((f"roofline.{cell}.t_collective", r["t_collective_s"],
+                    "s", ""))
+        out.append((f"roofline.{cell}.bottleneck",
+                    {"compute": 0.0, "memory": 1.0, "collective": 2.0}[
+                        r["bottleneck"]], "0=comp/1=mem/2=coll", ""))
+        out.append((f"roofline.{cell}.roofline_frac",
+                    r.get("roofline_frac", 0.0), "frac", ""))
+    n_ok = len(cells)
+    out.append(("roofline.cells_compiled", float(n_ok), "count", "80"))
+    return out
+
+
+ALL = [roofline_rows]

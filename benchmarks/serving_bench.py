@@ -1,0 +1,52 @@
+"""Serving-engine benchmark: TTFT / TPOT / throughput on the reduced model,
+comparing the paper's mapping strategies end to end (the system-level
+counterpart of Fig. 7, measured on real execution of this framework's
+serving engine rather than the analytical model)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, str, str]
+
+
+def bench_serving() -> List[Row]:
+    from repro.configs.base import get_config
+    from repro.models.transformer import init_params
+    from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.scheduler import PhaseAwareConfig
+
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    for strategy in ("halo", "cent", "attacc"):
+        sc = ServeConfig(max_batch=4, max_len=96,
+                         phase=PhaseAwareConfig(strategy=strategy,
+                                                max_decode_batch=4))
+        eng = ServingEngine(cfg, params, sc)
+        t0 = time.monotonic()
+        for _ in range(8):
+            eng.submit(rng.integers(0, cfg.vocab_size, (24,),
+                                    dtype=np.int32), max_new_tokens=8)
+        done = eng.run_until_drained()
+        wall = time.monotonic() - t0
+        toks = sum(len(r.generated) for r in done)
+        rows.append((f"serve.{strategy}.ttft_p50_ms",
+                     float(np.median([r.ttft for r in done])) * 1e3,
+                     "ms", ""))
+        rows.append((f"serve.{strategy}.tpot_p50_ms",
+                     float(np.median([r.tpot for r in done])) * 1e3,
+                     "ms", ""))
+        rows.append((f"serve.{strategy}.throughput",
+                     toks / wall, "tok/s", ""))
+    return rows
+
+
+ALL = [bench_serving]

@@ -1,0 +1,66 @@
+"""Reproduce the paper's architecture study (Sections V-B .. V-D):
+sweep every mapping over the (L_in, L_out) grid and print the normalized
+end-to-end table — Fig. 7's data — plus the fully-CiD vs fully-CiM extremes
+(Fig. 5/6) and the batch crossover (Fig. 9).
+
+Run:  PYTHONPATH=src python examples/mapping_study.py [--model qwen3-8b]
+"""
+
+import argparse
+
+from repro.configs.base import get_config
+from repro.core.scheduler import (
+    DEFAULT_GRID,
+    PREFILL_LENGTHS,
+    evaluate,
+    geomean,
+    gmean_speedup,
+)
+
+MAPPINGS = ("halo1", "halo2", "cent", "attacc1", "attacc2")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama2-7b")
+    args = ap.parse_args()
+    cfg = get_config(args.model)
+
+    print(f"=== {cfg.name}: normalized e2e per (L_in, L_out) — Fig. 7 ===")
+    header = f"{'L_in':>6} {'L_out':>6}" + "".join(
+        f"{m:>10}" for m in MAPPINGS)
+    print(header)
+    for li, lo in DEFAULT_GRID:
+        res = {m: evaluate(cfg, m, li, lo).e2e for m in MAPPINGS}
+        worst = max(res.values())
+        print(f"{li:>6} {lo:>6}" + "".join(
+            f"{res[m]/worst:>10.3f}" for m in MAPPINGS))
+
+    print("\n=== fully-CiD vs fully-CiM (Fig. 5/6) ===")
+    for L in PREFILL_LENGTHS:
+        cid = evaluate(cfg, "full_cid", L, 1)
+        cim = evaluate(cfg, "full_cim", L, 1)
+        print(f"TTFT L={L:<6} CiD {cid.ttft*1e3:9.1f}ms  "
+              f"CiM {cim.ttft*1e3:9.1f}ms  ({cid.ttft/cim.ttft:.1f}x)")
+    t_cid = evaluate(cfg, "full_cid", 2048, 512)
+    t_cim = evaluate(cfg, "full_cim", 2048, 512)
+    print(f"TPOT @2048: CiD {t_cid.tpot*1e3:.2f}ms vs CiM "
+          f"{t_cim.tpot*1e3:.2f}ms ({t_cim.tpot/t_cid.tpot:.0f}x)")
+
+    print("\n=== batch-size crossover (Fig. 9; L_in=128, L_out=2048) ===")
+    print(f"{'batch':>6}" + "".join(f"{m:>10}" for m in
+                                    ("halo1", "cent", "attacc1")))
+    for bs in (1, 4, 16, 64):
+        vals = [evaluate(cfg, m, 128, 2048, batch=bs).e2e
+                for m in ("halo1", "cent", "attacc1")]
+        print(f"{bs:>6}" + "".join(f"{v:>10.2f}" for v in vals))
+
+    print("\n=== headline gmeans ===")
+    print(f"e2e vs AttAcc1: {gmean_speedup(cfg, 'attacc1', 'halo1'):5.1f}x "
+          "(paper: 18x)")
+    print(f"e2e vs CENT:    {gmean_speedup(cfg, 'cent', 'halo1'):5.1f}x "
+          "(paper: 2.4x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Regenerate the roofline table from every saved dry-run HLO with the
+CURRENT analyzer (launch/hlo_analysis.py) — no recompilation.
+
+  PYTHONPATH=src python scripts/reanalyze_all.py results/hlo results/dryrun_v2.jsonl
+  PYTHONPATH=src python scripts/reanalyze_all.py results/hlo_perf results/perf_v2.jsonl --flash
+"""
+
+import json
+import os
+import sys
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.reanalyze import FLASH_REGIONS, analyze_file
+from repro.launch.roofline import model_flops_for
+
+
+def cell_from_filename(name: str):
+    # <arch>_<shape>_<pod>[ _variant].hlo ; shape names contain '_'
+    base = name[:-4]
+    for shape in SHAPES:
+        tag = f"_{shape}_"
+        if tag in base:
+            arch, rest = base.split(tag)
+            parts = rest.split("_")
+            pod = parts[0]
+            variant = "_".join(parts[1:]) if len(parts) > 1 else ""
+            return arch, shape, pod, variant
+    return None
+
+
+def main():
+    hlo_dir = sys.argv[1]
+    out_path = sys.argv[2]
+    flash = "--flash" in sys.argv
+    regions = FLASH_REGIONS if flash else ()
+    rows = []
+    for name in sorted(os.listdir(hlo_dir)):
+        if not name.endswith(".hlo"):
+            continue
+        parsed = cell_from_filename(name)
+        if not parsed:
+            print(f"skip {name}", file=sys.stderr)
+            continue
+        arch, shape, pod, variant = parsed
+        cfg = get_config(arch)
+        sh = SHAPES[shape]
+        n_chips = 512 if pod == "pod2" else 256
+        mf = model_flops_for(cfg, sh.kind, sh.seq_len, sh.global_batch)
+        row = analyze_file(os.path.join(hlo_dir, name), regions,
+                           n_chips=n_chips, model_flops=mf)
+        cid = f"{arch}|{shape}|{pod}"
+        if variant:
+            cid += f"|{variant}"
+        if flash:
+            cid += "|flashkrn"
+        row["cell"] = cid
+        row["arch"], row["shape"], row["n_chips"] = arch, shape, n_chips
+        row.pop("top_shapes", None)
+        rows.append(row)
+        print(f"{cid:50s} t_c {row['t_compute_s']:8.3f} "
+              f"t_m {row['t_memory_s']:8.3f} t_l {row['t_collective_s']:8.3f} "
+              f"{row['bottleneck'][:4]} roof {row.get('roofline_frac', 0):.4f}",
+              flush=True)
+    with open(out_path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r, default=str) + "\n")
+    print(f"wrote {len(rows)} rows to {out_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

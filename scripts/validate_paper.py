@@ -1,0 +1,44 @@
+"""Validate the analytical model against every paper claim."""
+from repro.configs import get_config
+from repro.core import evaluate, gmean_speedup, DEFAULT_GRID
+from repro.core.scheduler import PREFILL_LENGTHS, DECODE_GRID, geomean
+
+llama = get_config("llama2-7b")
+qwen = get_config("qwen3-8b")
+
+claims = []
+# Fig 5: fully-CiM prefill 6x faster TTFT than fully-CiD
+r = geomean([evaluate(llama, "full_cid", L, 1).ttft / evaluate(llama, "full_cim", L, 1).ttft
+             for L in PREFILL_LENGTHS])
+claims.append(("Fig5a TTFT  full_cid/full_cim", r, 6.0))
+r = geomean([evaluate(llama, "full_cid", L, 1).prefill_energy /
+             evaluate(llama, "full_cim", L, 1).prefill_energy for L in PREFILL_LENGTHS])
+claims.append(("Fig5b E_pre full_cid/full_cim", r, 2.6))
+# Fig 6: fully-CiD decode 39x faster TPOT than fully-CiM
+r = geomean([evaluate(llama, "full_cim", li, lo).tpot / evaluate(llama, "full_cid", li, lo).tpot
+             for li, lo in DECODE_GRID])
+claims.append(("Fig6a TPOT  full_cim/full_cid", r, 39.0))
+r = geomean([(evaluate(llama, "full_cim", li, lo).decode_energy /
+              evaluate(llama, "full_cid", li, lo).decode_energy) for li, lo in DECODE_GRID])
+claims.append(("Fig6b E_dec full_cim/full_cid", r, 3.9))
+# Fig 7: HALO1 prefill vs CENT 6.54x
+r = gmean_speedup(llama, "cent", "halo1", metric="ttft")
+claims.append(("Fig7 TTFT   cent/halo1", r, 6.54))
+# decode vs attacc1: 34x
+r = gmean_speedup(llama, "attacc1", "halo1", metric="tpot")
+claims.append(("Fig7 TPOT   attacc1/halo1", r, 34.0))
+# e2e: 18x vs attacc1, 2.4x vs cent (gmean across models)
+for m, name in [(llama, "llama2"), (qwen, "qwen3")]:
+    claims.append((f"Fig7 e2e    attacc1/halo1 {name}", gmean_speedup(m, "attacc1", "halo1"), 18.0))
+    claims.append((f"Fig7 e2e    cent/halo1    {name}", gmean_speedup(m, "cent", "halo1"), 2.4))
+# HALO2 vs HALO1 e2e: 10% slowdown
+claims.append(("Fig7 e2e    halo2/halo1", gmean_speedup(llama, "halo2", "halo1"), 1.10))
+# Fig 8 energy: 2x vs attacc1, 1.8x vs cent
+claims.append(("Fig8 E e2e  attacc1/halo1", gmean_speedup(llama, "attacc1", "halo1", metric="energy"), 2.0))
+claims.append(("Fig8 E e2e  cent/halo1", gmean_speedup(llama, "cent", "halo1", metric="energy"), 1.8))
+# Fig 10: HALO-CiM1 1.3x over HALO-SA
+claims.append(("Fig10 e2e   halo_sa/halo1", gmean_speedup(llama, "halo_sa", "halo1"), 1.3))
+
+print(f"{'claim':<38} {'model':>8} {'paper':>7} {'ratio':>6}")
+for name, got, want in claims:
+    print(f"{name:<38} {got:>8.2f} {want:>7.2f} {got/want:>6.2f}")

@@ -1,0 +1,7 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    save_pytree,
+    load_pytree,
+)
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

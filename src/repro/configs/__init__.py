@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    REGISTRY,
+    SHAPES,
+    AttnConfig,
+    HybridConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    ShapeConfig,
+    SSMConfig,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "REGISTRY", "SHAPES", "AttnConfig", "HybridConfig", "MLAConfig",
+    "MoEConfig", "ModelConfig", "ShapeConfig", "SSMConfig",
+    "applicable_shapes", "get_config", "list_archs", "register",
+]

@@ -1,0 +1,22 @@
+"""arctic-480b — 128-expert top-2 MoE with a parallel dense residual FFN.
+
+[hf:Snowflake/snowflake-arctic-base; hf]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2, dense residual.
+"""
+from repro.configs.base import AttnConfig, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    attn=AttnConfig(rope_theta=10000.0),
+    moe=MoEConfig(n_experts=128, top_k=2, d_ff_expert=4864,
+                  dense_residual=True, d_ff_dense=4864),
+    source="hf:Snowflake/snowflake-arctic-base",
+    notes="dense-MoE hybrid: every layer = dense FFN residual + 128e top-2 MoE",
+))

@@ -1,0 +1,25 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + 160-expert top-6 MoE with 2 shared.
+
+[arXiv:2405.04434; hf]  60L d_model=5120 128H d_ff=1536(expert) vocab=102400,
+MoE 160e top-6, 2 shared experts, first layer dense (d_ff 12288).
+"""
+from repro.configs.base import AttnConfig, MLAConfig, MoEConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,          # MLA: kv heads materialized from the latent
+    d_head=128,
+    d_ff=12288,              # dense-FFN width for the first dense layer
+    vocab_size=102400,
+    attn=AttnConfig(rope_theta=10000.0),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, n_shared_experts=2, d_ff_expert=1536,
+                  first_dense_layers=1),
+    source="arXiv:2405.04434",
+    notes="MLA compressed KV cache (c_kv=512 + rope 64 per token per layer)",
+))

@@ -1,0 +1,26 @@
+"""gemma3-1b — 5:1 local:global attention, 128k-class context.
+
+[hf:google/gemma-3-1b-pt; unverified]  26L d_model=1152 4H (GQA kv=1)
+d_ff=6912 vocab=262144.  Five sliding-window (512) layers per one global
+layer; local layers use rope_theta=10k, global layers 1M.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=6912,
+    vocab_size=262144,
+    tie_embeddings=True,
+    act="gelu",
+    attn=AttnConfig(sliding_window=512, local_global_ratio=5,
+                    qk_norm=True, rope_theta=1_000_000.0,
+                    rope_local_theta=10_000.0),
+    source="hf:google/gemma-3-1b-pt",
+    notes="5:1 local:global; runs long_500k (only 1/6 of layers keep a full cache)",
+))

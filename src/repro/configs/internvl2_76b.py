@@ -1,0 +1,24 @@
+"""internvl2-76b — InternViT frontend (STUB) + InternLM2/llama3-70b-like backbone.
+
+[arXiv:2404.16821; unverified]  80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.  Per the task sheet the modality frontend is a stub:
+``input_specs()`` provides precomputed patch embeddings occupying the first
+``n_frontend_tokens`` positions of the sequence.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    attn=AttnConfig(rope_theta=500_000.0),
+    frontend="vision",
+    n_frontend_tokens=256,
+    source="arXiv:2404.16821",
+    notes="vision frontend stubbed; backbone only",
+))

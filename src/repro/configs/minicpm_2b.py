@@ -1,0 +1,20 @@
+"""minicpm-2b — llama-like dense LM trained with the WSD schedule.
+
+[arXiv:2404.06395; hf]  40L d_model=2304 36H (GQA kv=36) d_ff=5760 vocab=122753.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,
+    attn=AttnConfig(rope_theta=10000.0),
+    source="arXiv:2404.06395",
+    notes="WSD learning-rate schedule (implemented in training/schedule.py)",
+))

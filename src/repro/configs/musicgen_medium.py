@@ -1,0 +1,25 @@
+"""musicgen-medium — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048.
+4 parallel codebooks with the delay interleaving pattern.  The EnCodec
+frontend is a STUB: input_specs() provides per-codebook token ids; the model
+sums the K codebook embeddings per position and predicts K heads.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    act="gelu",
+    attn=AttnConfig(rope_theta=10000.0),
+    frontend="audio",
+    n_codebooks=4,
+    source="arXiv:2306.05284",
+    notes="EnCodec frontend stubbed; 4 codebooks, sum-embed + 4 lm heads",
+))

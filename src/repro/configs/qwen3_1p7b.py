@@ -1,0 +1,21 @@
+"""qwen3-1.7b — dense GQA with qk_norm.
+
+[hf:Qwen/Qwen3-8B; hf]  28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+"""
+from repro.configs.base import AttnConfig, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=6144,
+    vocab_size=151936,
+    tie_embeddings=True,
+    attn=AttnConfig(qk_norm=True, rope_theta=1_000_000.0),
+    source="hf:Qwen/Qwen3-1.7B",
+    notes="qk_norm per-head RMSNorm; GQA 16/8",
+))

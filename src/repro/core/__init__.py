@@ -1,0 +1,17 @@
+from repro.core.hardware import DEFAULT_HW, TPU_V5E, HaloHardware, TPUv5e
+from repro.core.mapping import MAPPINGS, Mapping, get_mapping
+from repro.core.opgraph import Op, decode_ops, prefill_ops, total_flops, total_stream
+from repro.core.scheduler import (
+    DEFAULT_GRID,
+    RunResult,
+    evaluate,
+    geomean,
+    gmean_speedup,
+)
+
+__all__ = [
+    "DEFAULT_HW", "TPU_V5E", "HaloHardware", "TPUv5e",
+    "MAPPINGS", "Mapping", "get_mapping",
+    "Op", "decode_ops", "prefill_ops", "total_flops", "total_stream",
+    "DEFAULT_GRID", "RunResult", "evaluate", "geomean", "gmean_speedup",
+]

@@ -1,0 +1,10 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLM,
+    PackedDocuments,
+    ShardedLoader,
+    make_loader,
+)
+
+__all__ = ["DataConfig", "SyntheticLM", "PackedDocuments", "ShardedLoader",
+           "make_loader"]

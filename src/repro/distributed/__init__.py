@@ -1,0 +1,12 @@
+from repro.distributed.sharding import (
+    param_pspecs,
+    batch_pspec,
+    cache_pspecs,
+    train_state_pspecs,
+    shardings_from_pspecs,
+)
+
+__all__ = [
+    "param_pspecs", "batch_pspec", "cache_pspecs", "train_state_pspecs",
+    "shardings_from_pspecs",
+]

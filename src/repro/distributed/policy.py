@@ -1,0 +1,159 @@
+"""Activation-sharding policy: explicit with_sharding_constraint points.
+
+GSPMD propagates parameter shardings to activations, but propagation alone
+picks pathological layouts at scale (observed: the embedding gather output
+left the batch axis replicated, turning every FFN activation into a
+[B_global, T, ff/16] tensor — 1.6 GB/chip per instance).  Production JAX
+frameworks (MaxText et al.) pin activation layouts at module boundaries;
+we do the same through a process-global policy object so model code stays
+mesh-agnostic and single-device smoke tests pay zero overhead (policy None
+-> constraints are identity).
+
+Constraint names used by the model code:
+  "act_btd"   [B, T, d]        batch over (pod,data); d replicated
+  "act_btf"   [B, T, ff]       batch over (pod,data); ff over model (TP)
+  "act_bthd"  [B, T, H, dh]    batch over (pod,data); heads over model
+  "logits"    [B, T, V]        batch over (pod,data); vocab over model
+  "moe_ecd"   [E, C, d]        experts over model (EP), capacity over data
+  "kv_cache"  [L, B, S, ...]   batch over data, S over model (decode)
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: Optional["ShardingPolicy"] = None
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...] = ("data",)     # ("pod","data") multi-pod
+    model_axis: str = "model"
+    # decode-time override: shard the cache sequence axis over these axes
+    seq_axes: Tuple[str, ...] = ("model",)
+    # batch too small to shard (long_500k): batch axes become None
+    shard_batch: bool = True
+    # SEQUENCE-PARALLEL mode (§Perf prefill iteration): activations are
+    # sharded over the token axis on ``model`` instead of TP on heads/ff;
+    # weights are gathered per layer (FSDP-style) and attention all-gathers
+    # K/V — replaces the per-layer [B,T,d] activation all-reduces of
+    # Megatron TP (the dominant prefill collective) with far smaller
+    # weight/KV all-gathers.
+    seq_parallel: bool = False
+
+    def _b(self):
+        return self.batch_axes if self.shard_batch else None
+
+    def spec(self, name: str) -> P:
+        b = self._b()
+        m = self.model_axis
+        s = self.seq_axes if len(self.seq_axes) > 1 else self.seq_axes[0]
+        if self.seq_parallel:
+            table = {
+                "act_btd": P(b, m, None),
+                "act_btf": P(b, m, None),
+                "act_bthd": P(b, m, None, None),
+                "act_bd": P(b, None),
+                "logits": P(b, m, None),
+                "logits4": P(b, m, None, None),
+                "kv_full": P(b, None, None, None),   # gathered K/V
+                "moe_ecd": P(m, None, None),
+                "moe_dsd": P(b, None, None),
+                "kv_cache": P(None, b, s, None, None),
+                "kv_cache_latent": P(None, b, s, None),
+                "kv_bshd": P(b, s, None, None),
+                "latent_bsr": P(b, s, None),
+                "decode_scores": P(b, m, None, None),
+            }
+            return table[name]
+        table = {
+            "act_btd": P(b, None, None),
+            "act_btf": P(b, None, m),
+            "act_bthd": P(b, None, m, None),
+            "act_bd": P(b, None),
+            "logits": P(b, None, m),
+            "moe_ecd": P(m, None, None),
+            "moe_dsd": P(b, None, None),       # [D_shards, S_loc, d]
+            "kv_cache": P(None, b, s, None, None),
+            "kv_cache_latent": P(None, b, s, None),
+            "kv_bshd": P(b, s, None, None),
+            "latent_bsr": P(b, s, None),
+            "logits4": P(b, None, None, m),
+            "kv_full": P(b, None, None, None),
+            "decode_scores": P(b, m, None, None),
+        }
+        return table[name]
+
+    @property
+    def sp_enabled(self) -> bool:
+        return self.seq_parallel
+
+    def _axis_size(self, axes) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return sizes[axes]
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        return n
+
+    def constrain(self, x, name: str):
+        spec = self.spec(name)
+        # drop axes that do not divide the dim (e.g. 4 heads on a 16-way
+        # model axis) — GSPMD would pad; replication is cheaper and exact.
+        fixed = []
+        for i, axes in enumerate(spec):
+            if i >= x.ndim:
+                break
+            fixed.append(axes if x.shape[i] % self._axis_size(axes) == 0
+                         else None)
+        fixed += [None] * (x.ndim - len(fixed))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed)))
+
+
+def set_policy(p: Optional[ShardingPolicy]) -> None:
+    global _POLICY
+    _POLICY = p
+
+
+def get_policy() -> Optional[ShardingPolicy]:
+    return _POLICY
+
+
+@contextlib.contextmanager
+def sharding_policy(p: Optional[ShardingPolicy]):
+    prev = get_policy()
+    set_policy(p)
+    try:
+        yield p
+    finally:
+        set_policy(prev)
+
+
+def constrain(x, name: str):
+    """Pin activation ``x`` to the named layout (no-op without a policy)."""
+    p = get_policy()
+    if p is None:
+        return x
+    return p.constrain(x, name)
+
+
+def replicate(x):
+    """Force ``x`` fully replicated (no-op without a policy).  Used to pin
+    weight all-gathers to the STORED dtype: without it GSPMD hoists the
+    int8->f32 dequant (or bf16->f32 convert) above the gather and moves f32
+    over the network (observed 2-4x collective inflation, §Perf B3)."""
+    p = get_policy()
+    if p is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(p.mesh, P(*([None] * x.ndim))))

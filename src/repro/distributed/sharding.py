@@ -1,0 +1,312 @@
+"""Sharding rules: params / batches / caches -> PartitionSpec trees.
+
+Strategy (the TPU mapping of HALO's two engines — DESIGN.md §Adaptation):
+
+* Parameters use 2D sharding: the TP dimension (heads / d_ff / experts /
+  d_inner) over the ``model`` axis and the other matrix dimension over the
+  ``data`` axis (FSDP-style).  GSPMD all-gathers the ``data``-sharded factor
+  just-in-time per layer, which keeps per-chip parameter state O(P/256) —
+  required to fit arctic-480b's Adam state in 16 GB chips.
+
+* Prefill activations: batch over (pod, data), heads/ff over ``model`` —
+  the compute-bound GEMM phase (HALO's CiM side).
+
+* Decode KV caches: the SEQUENCE axis of every cache is sharded over
+  ``model`` (and the batch axis over ``data``) so each chip scans only its
+  local cache slice — flash-decode semantics; this is the TPU analogue of
+  HALO's in-bank CiD GEMV (each DRAM bank serves its own slice, partial
+  softmax reduced across banks).  When the batch is too small to fill the
+  data axis (long_500k: batch=1), the sequence is sharded over BOTH axes.
+
+Rules are applied by leaf path, so they work for any config family without
+model-specific code.  ``None`` in a spec means replicated on that dim.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Pytree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# Each rule: (regex on leaf path, spec builder taking (ndim, fsdp_axis)).
+# Specs are written for the UNSTACKED 2D weight; _apply pads leading None
+# dims for scan-stacked / per-expert leading axes automatically by matching
+# from the TRAILING dims.
+
+def _w_in(nd, fsdp):          # [d_in, d_out_tp]: input FSDP, output TP
+    return (fsdp, "model")
+
+
+def _w_out(nd, fsdp):         # [d_in_tp, d_out]: input TP, output FSDP
+    return ("model", fsdp)
+
+
+def _moe_in(nd, fsdp):        # [E, d, ff]: experts EP, d FSDP, ff TP... but
+    # E already consumes "model"; shard d over data only.
+    return ("model", fsdp, None)
+
+
+def _moe_out(nd, fsdp):       # [E, ff, d]
+    return ("model", None, fsdp)
+
+
+def _embed(nd, fsdp):         # [V, d]: vocab TP; d replicated — sharding d
+    # over "data" would make the gather output d-sharded/batch-replicated
+    # and GSPMD then drops batch parallelism everywhere downstream.
+    return ("model", None)
+
+
+def _lm_head(nd, fsdp):       # [d, V]: vocab TP (matches "logits" layout)
+    return (None, "model")
+
+
+def _vec_tp(nd, fsdp):        # [d_tp] vectors living in the TP'd dim
+    return ("model",)
+
+
+def _replicated(nd, fsdp):
+    return ()
+
+
+PARAM_RULES: List[Tuple[str, Any]] = [
+    # --- MoE experts (before generic matchers; path contains 'moe/') -------
+    (r"moe/wi_gate$", _moe_in),
+    (r"moe/wi_up$", _moe_in),
+    (r"moe/wo$", _moe_out),
+    (r"moe/router$", lambda nd, f: (f, None)),       # [d, E] — E tiny
+    (r"moe/(shared|dense)/wi_(gate|up)$", _w_in),
+    (r"moe/(shared|dense)/wo$", _w_out),
+    # --- attention ----------------------------------------------------------
+    (r"attn/w(q|k|v)$", _w_in),
+    (r"attn/wq_(a|b)$", _w_in),
+    (r"attn/wkv_a$", lambda nd, f: (f, None)),       # latent r+dr is small
+    (r"attn/w_u(k|v)$", lambda nd, f: ("model", None, None)),  # [H, r, n]
+    (r"attn/wo$", _w_out),
+    (r"attn/(q|k)_norm$", _replicated),
+    # --- FFN ------------------------------------------------------------
+    (r"ffn/wi_(gate|up)$", _w_in),
+    (r"ffn/wo$", _w_out),
+    # --- SSM --------------------------------------------------------------
+    (r"ssm/in_proj$", _w_in),
+    (r"ssm/out_proj$", _w_out),
+    (r"ssm/conv_w$", lambda nd, f: (None, "model")),
+    (r"ssm/conv_b$", _vec_tp),
+    (r"ssm/(A_log|D|dt_bias)$", _replicated),
+    (r"ssm/norm_scale$", _vec_tp),
+    # --- shared attention block (zamba2) ------------------------------------
+    (r"shared_attn/attn/w(q|k|v)$", _w_in),
+    (r"shared_attn/attn/wo$", _w_out),
+    (r"shared_attn/ffn/wi_(gate|up)$", _w_in),
+    (r"shared_attn/ffn/wo$", _w_out),
+    (r"shared_attn/down$", lambda nd, f: (f, None)),
+    # --- embeddings / head ---------------------------------------------------
+    (r"^embed$", _embed),
+    (r"^lm_head$", _lm_head),
+    # --- norms (catch-all 1D) -------------------------------------------------
+    (r"(ln1|ln2|final_norm|q_norm|kv_norm)(/scale)?$", _replicated),
+    (r"scale$", _replicated),
+]
+
+
+def _spec_for_leaf(path: str, ndim: int, fsdp: Optional[str]) -> P:
+    # int8 weight-only-quantized leaves: ".../<w>/q" shards like the weight,
+    # ".../<w>/scale" (one fewer dim) keeps only the output-dim sharding
+    is_scale = False
+    if path.endswith("/q"):
+        path = path[:-2]
+    elif path.endswith("/scale") and "norm" not in path:
+        path, is_scale = path[:-6], True
+    for pat, builder in PARAM_RULES:
+        if re.search(pat, path):
+            if is_scale:
+                tail = builder(ndim + 1, fsdp)
+                tail = tuple(tail[:-2]) + tuple(tail[-1:])  # drop K-dim axis
+            else:
+                tail = builder(ndim, fsdp)
+            lead = (None,) * (ndim - len(tail))
+            assert len(tail) <= ndim, (path, ndim, tail)
+            return P(*(lead + tuple(tail)))
+    return P()  # replicate anything unmatched (norms, scalars)
+
+
+def param_pspecs(cfg: ModelConfig, *, fsdp_axis: Optional[str] = "data",
+                 params_tree: Optional[Pytree] = None) -> Pytree:
+    """PartitionSpec tree matching init_params(cfg) structure.
+
+    ``fsdp_axis=None`` disables FSDP (params only TP-sharded over 'model') —
+    used by the decode/serving path where weights are read-only and the
+    ``data`` axis carries the request batch.
+    """
+    if params_tree is None:
+        from repro.models.transformer import init_params
+        params_tree = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+    def leaf_spec(path, leaf):
+        return _spec_for_leaf(_path_str(path), len(leaf.shape), fsdp_axis)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation rules
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh_axes: Tuple[str, ...], *, batch_size: int,
+                mesh_shape: Dict[str, int]) -> Tuple:
+    """Axes tuple for the batch dim: as many of (pod, data) as divide it."""
+    axes = []
+    div = 1
+    for a in ("pod", "data"):
+        if a in mesh_axes and batch_size % (div * mesh_shape[a]) == 0:
+            axes.append(a)
+            div *= mesh_shape[a]
+    return tuple(axes) if axes else (None,)
+
+
+def token_pspec(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> P:
+    """Spec for the tokens array [B, T] (or [B, K, T])."""
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b = batch_pspec(mesh.axis_names, batch_size=batch_size, mesh_shape=shape)
+    spec_b = tuple(b) if b != (None,) else None
+    trailing = (None, None) if cfg.n_codebooks > 1 else (None,)
+    return P(spec_b, *trailing)
+
+
+# ---------------------------------------------------------------------------
+# cache rules (decode)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+                 seq_shard_axes: Optional[Tuple[str, ...]] = None,
+                 cache_tree: Optional[List[Any]] = None) -> List[Any]:
+    """Spec tree matching init_cache(cfg, B, S).
+
+    Cache layouts (leading L = scan-stacked layer axis):
+      attn   k/v    [L, B, S, Hkv, Dh]   -> S over seq axes, B over data
+             (+ int8 variant's k_scale/v_scale [L, B, S, Hkv])
+      mla    latent [L, B, S, r+dr]
+      ssm    conv   [L, B, K-1, C]       -> C (d_inner) over model
+             state  [L, B, H, P, N]      -> H over model
+      shared k/v    [B, S, H, Dh]
+
+    ``cache_tree``: optional ShapeDtypeStruct tree (e.g. the quantized
+    arena) — specs are generated per leaf by rank for attn runs.
+    """
+    from repro.models.transformer import build_plan
+
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in data_ax:
+        n_data *= shape[a]
+    batch_sharded = batch_size % n_data == 0 and batch_size >= n_data
+    if seq_shard_axes is None:
+        if batch_sharded:
+            seq_shard_axes = ("model",)
+        else:
+            # small batch (long_500k): sequence takes every axis
+            seq_shard_axes = data_ax + ("model",)
+    b_ax = data_ax if batch_sharded else None
+    seq = seq_shard_axes if len(seq_shard_axes) > 1 else seq_shard_axes[0]
+
+    specs: List[Any] = []
+    for ri, run in enumerate(build_plan(cfg)):
+        if run.kind == "attn" and cache_tree is not None:
+            # rank-based: [L, B, S, ...] for any attn-cache leaf (covers the
+            # int8 arena's value + scale tensors uniformly)
+            piece = cache_tree[ri]
+            specs.append(jax.tree.map(
+                lambda leaf: P(*((None, b_ax, seq)
+                                 + (None,) * (len(leaf.shape) - 3))),
+                piece))
+        elif run.kind == "attn" and cfg.mla.enabled:
+            specs.append({"latent": P(None, b_ax, seq, None)})
+        elif run.kind == "attn":
+            kv = P(None, b_ax, seq, None, None)
+            specs.append({"k": kv, "v": kv})
+        elif run.kind == "ssm":
+            specs.append({
+                "conv": P(None, b_ax, None, "model"),
+                "state": P(None, b_ax, "model", None, None),
+            })
+        else:  # shared_attn: [B, S, H, Dh]
+            specs.append({"k": P(b_ax, seq, None, None),
+                          "v": P(b_ax, seq, None, None)})
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# train state
+# ---------------------------------------------------------------------------
+
+def _map_like(spec_tree: Pytree, state_tree: Pytree) -> Pytree:
+    """Broadcast param specs onto an optimizer-state tree that nests one
+    extra level (e.g. adafactor's {"vr","vc"} per param)."""
+
+    def expand(spec, sub):
+        if isinstance(sub, dict):
+            out = {}
+            for k, v in sub.items():
+                if k == "vr":      # row stats: drop last dim of the spec
+                    out[k] = P(*spec[:-1]) if len(spec) else P()
+                elif k == "vc":    # col stats: drop second-to-last dim
+                    out[k] = (P(*(spec[:-2] + spec[-1:]))
+                              if len(spec) >= 2 else spec)
+                else:
+                    out[k] = spec
+            return out
+        return spec
+
+    return jax.tree.map(expand, spec_tree, state_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_pspecs(cfg: ModelConfig, *, fsdp_axis="data",
+                       opt_state_tree: Optional[Pytree] = None,
+                       params_tree: Optional[Pytree] = None) -> Dict[str, Any]:
+    """Specs for {params, opt_state, step}: optimizer moments inherit the
+    parameter sharding (m/v same shape; adafactor factored stats mapped)."""
+    pspec = param_pspecs(cfg, fsdp_axis=fsdp_axis, params_tree=params_tree)
+    out: Dict[str, Any] = {"params": pspec, "step": P()}
+    if opt_state_tree is not None:
+        opt_spec = {}
+        for k, sub in opt_state_tree.items():
+            if k in ("m",):
+                opt_spec[k] = pspec
+            else:  # "v": may be full (adamw) or factored dicts (adafactor)
+                dictish = jax.tree.leaves(
+                    sub, is_leaf=lambda y: isinstance(y, dict))
+                factored = any(isinstance(x, dict) for x in dictish)
+                opt_spec[k] = _map_like(pspec, sub) if factored else pspec
+        out["opt_state"] = opt_spec
+    return out
+
+
+def shardings_from_pspecs(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

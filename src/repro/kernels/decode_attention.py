@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+The decode GEMV sweep HALO maps to CiD.  Grid: (B, S/bs) — the cache is
+tiled along the sequence axis and each tile is read from HBM exactly once;
+the per-(head) online-softmax state rides in VMEM scratch across tiles.
+Entries beyond ``length`` (unwritten slots / padding) are masked out, so the
+kernel works with ring buffers and right-padded serving batches alike.
+
+Per-tile working set (bs=1024, Hkv=8, D=128, bf16): k/v 2x1024x8x128x2 = 4 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, ns: int, bs: int, scale: float, Hkv: int, G: int, D: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    s_start = si * bs
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0].reshape(Hkv, G, D)                      # [Hkv,G,D]
+        k = k_ref[0]                                         # [bs,Hkv,D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,bs]
+        s = s * scale
+        idx = s_start + jax.lax.broadcasted_iota(jnp.int32, (Hkv, G, bs), 2)
+        s = jnp.where(idx < length, s, NEG_INF)
+
+        m_prev = m_ref[...].reshape(Hkv, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)                               # [Hkv,G,bs]
+        corr = jnp.exp(m_prev - m_new)                       # [Hkv,G,1]
+        l_new = l_ref[...].reshape(Hkv, G, 1) * corr + jnp.sum(
+            p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,D]
+        acc = acc_ref[...].reshape(Hkv, G, D) * corr + pv
+        acc_ref[...] = acc.reshape(Hkv * G, D)
+        m_ref[...] = m_new.reshape(Hkv * G, 1)
+        l_ref[...] = l_new.reshape(Hkv * G, 1)
+
+    @pl.when(si == ns - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)                   # [Hkv*G,1]
+        o_ref[0] = (acc_ref[...].reshape(Hkv * G, D) / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *, bs: int = 1024,
+                     interpret: bool = False):
+    """q: [B,H,D]; caches: [B,S,Hkv,D]; lengths: [B].  Returns [B,H,D]."""
+    B, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    bs = min(bs, S)
+    assert S % bs == 0
+    ns = S // bs
+    scale = 1.0 / math.sqrt(D)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, ns=ns, bs=bs, scale=scale,
+                          Hkv=Hkv, G=G, D=D),
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths.astype(jnp.int32))
+    return out

@@ -1,0 +1,117 @@
+"""Flash attention (prefill) Pallas kernel with causal + sliding-window masks.
+
+Grid: (B*Hkv*G, Tq/bq, Tk/bk) — the KV axis is innermost so the online-
+softmax state (m, l, acc) for one query tile lives in VMEM scratch across KV
+steps.  Causal upper-triangle KV tiles are skipped with pl.when (zero MXU
+work), which is the triangular schedule the pure-JAX blockwise version can't
+express (EXPERIMENTS.md §Perf).
+
+VMEM working set per step (bq=bk=512, D=128, bf16):
+q 512x128x2 + k/v 2x512x128x2 + acc 512x128x4 + p 512x512x4 ~ 1.7 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, nk: int, bq: int, bk: int, scale: float,
+                  causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # does this KV tile intersect the (causal, windowed) mask at all?
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window > 0:
+        run = jnp.logical_and(run, (q_start - (k_start + bk - 1)) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                                         # [bq, D]
+        k = k_ref[0]                                         # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bk]
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[0],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q: [B,H,T,D]; k,v: [B,Hkv,T,D] (GQA).  Returns [B,H,T,D]."""
+    B, H, T, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    bq, bk = min(bq, T), min(bk, T)
+    assert T % bq == 0 and T % bk == 0
+    nq, nk = T // bq, T // bk
+    scale = 1.0 / math.sqrt(D)
+
+    # flatten (B, Hkv, G) into one grid axis; the kv index map drops G
+    qf = q.reshape(B * Hkv * G, T, D)
+    kf = k.reshape(B * Hkv, T, D)
+    vf = v.reshape(B * Hkv, T, D)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, bq=bq, bk=bk, scale=scale,
+                          causal=causal, window=window),
+        grid=(B * Hkv * G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, G=G: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, i, j, G=G: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv * G, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, T, D)

@@ -1,0 +1,60 @@
+"""MXU-tiled matmul kernel — the TPU adaptation of HALO's CiM prefill path.
+
+HALO maps prefill GEMMs onto weight-stationary analog crossbars; the TPU
+analogue is a weight-stationary MXU schedule: the kernel walks the K
+dimension in the innermost grid axis so each (bm, bn) output tile keeps its
+f32 accumulator resident in VMEM scratch while weight tiles stream HBM->VMEM
+exactly once per (m, n) tile — the same "load weights once, stream many
+activations through them" dataflow the crossbar provides.
+
+Block shapes default to 256x256x512 (bf16): working set
+256*512 + 512*256 + 256*256*4 bytes = 0.75 MB << VMEM, and every matmul dim
+is a multiple of the 128x128 MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, w, *, bm: int = 256, bn: int = 256, bk: int = 512,
+           interpret: bool = False):
+    """x: [M, K] @ w: [K, N] -> [M, N] (dtype of x, f32 accumulation)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

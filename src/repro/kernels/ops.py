@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) every kernel executes in interpret mode, which runs
+the kernel body as JAX ops — bit-exact algorithm, no Mosaic.  On TPU the
+same call sites compile to Mosaic with the documented VMEM tilings.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gemm_cim as _gemm
+from repro.kernels import gemv_cid as _gemv
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels.gemv_cid import quantize_int8  # re-export
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(x, w, **kw):
+    """Prefill GEMM (CiM path): [M,K] @ [K,N]."""
+    kw.setdefault("interpret", _interpret())
+    return _gemm.matmul(x, w, **kw)
+
+
+def gemv(x, w, scale=None, **kw):
+    """Decode GEMV (CiD path): [B,K] @ [K,N], optional fused int8 dequant."""
+    kw.setdefault("interpret", _interpret())
+    return _gemv.gemv(x, w, scale, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    """Prefill attention: q [B,H,T,D], kv [B,Hkv,T,D]."""
+    kw.setdefault("interpret", _interpret())
+    return _fa.flash_attention(q, k, v, **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, **kw):
+    """Decode attention: q [B,H,D] vs cache [B,S,Hkv,D]."""
+    kw.setdefault("interpret", _interpret())
+    return _da.decode_attention(q, k_cache, v_cache, lengths, **kw)
+
+
+def ssd_chunk(x, dt, A, Bm, Cm, **kw):
+    """Mamba-2 intra-chunk SSD: see kernels/ssd_scan.py."""
+    kw.setdefault("interpret", _interpret())
+    return _ssd.ssd_chunk(x, dt, A, Bm, Cm, **kw)

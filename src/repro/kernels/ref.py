@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """[M,K] @ [K,N] -> [M,N], f32 accumulation, output in x.dtype."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gemv_ref(x, w, scale=None):
+    """Batched GEMV: x [B,K] @ w [K,N] (w possibly int8 with per-col scale)."""
+    wf = w.astype(jnp.float32)
+    if scale is not None:
+        wf = wf * scale[None, :].astype(jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), wf)
+    return out.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """q,k,v: [B,H,T,D] (kv may have fewer heads -> GQA broadcast)."""
+    B, H, T, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, T, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / math.sqrt(D)
+    idx = jnp.arange(T)
+    mask = jnp.ones((T, T), bool)
+    if causal:
+        mask &= idx[None, :] <= idx[:, None]
+    if window and window > 0:
+        mask &= (idx[:, None] - idx[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, T, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B,H,D]; caches: [B,S,Hkv,D]; lengths: [B] #valid entries.
+
+    Returns [B,H,D].
+    """
+    B, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """Single-chunk SSD (no inter-chunk state): x [Q,H,P], dt [Q,H],
+    A [H], Bm/Cm [Q,N] (1 group).  Returns (y [Q,H,P], state [H,P,N]).
+    """
+    Q, H, P = x.shape
+    N = Bm.shape[1]
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A[None, :]                                   # [Q,H]
+    xb = x.astype(jnp.float32) * dtf[..., None]
+    cs = jnp.cumsum(dA, axis=0)                             # [Q,H]
+    seg = cs[:, None, :] - cs[None, :, :]                   # [i,j,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[..., None], jnp.exp(seg), 0.0)       # [Q,Q,H]
+    CB = Cm.astype(jnp.float32) @ Bm.astype(jnp.float32).T  # [Q,Q]
+    y = jnp.einsum("ij,ijh,jhp->ihp", CB, L, xb)
+    decay_end = jnp.exp(cs[-1:, :] - cs)                    # [Q,H]
+    state = jnp.einsum("qn,qh,qhp->hpn", Bm.astype(jnp.float32), decay_end, xb)
+    return y, state

@@ -1,0 +1,96 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+Computes, for one (sequence-chunk, head-block), the chunk-local SSD output
+and the end-of-chunk state contribution:
+
+    L[i,j]  = exp(cumsum(dA)[i] - cumsum(dA)[j]),  j <= i
+    y_diag  = ((C B^T) * L) @ (dt*x)
+    state   = B^T @ (decay_to_end * dt*x)
+
+The inter-chunk recurrence (combining the per-chunk states) is a tiny
+O(T/Q) ``lax.scan`` outside the kernel.  Grid: (BH/bh, nc).  The chunk never
+leaves VMEM between the three matmuls — this is the fusion the pure-jnp SSD
+cannot get (XLA materializes L and CB in HBM at [B,nc,H,Q,Q]).
+
+Working set (Q=256, bh=4, P=64, N=128, f32):
+x 4x256x64 + B/C 256x128x2 + L 4x256x256 + y 4x256x64 ~ 2.3 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
+                *, Q: int, bh: int, P: int, N: int):
+    # refs (leading singleton = grid block):
+    # x [1,bh,Q,P]  dt [1,bh,Q]  a [bh]  b/c [1,Q,N]
+    dt = dt_ref[0].astype(jnp.float32)                        # [bh,Q]
+    A = a_ref[...].astype(jnp.float32)                        # [bh]
+    dA = dt * A[:, None]                                      # [bh,Q]
+    cs = jnp.cumsum(dA, axis=1)                               # [bh,Q]
+    seg = cs[:, :, None] - cs[:, None, :]                     # [bh,Q,Q]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri[None], jnp.exp(seg), 0.0)               # [bh,Q,Q]
+
+    xb = x_ref[0].astype(jnp.float32) * dt[:, :, None]        # [bh,Q,P]
+    Bm = b_ref[0].astype(jnp.float32)                         # [Q,N]
+    Cm = c_ref[0].astype(jnp.float32)                         # [Q,N]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    G = CB[None] * L                                          # [bh,Q,Q]
+    y = jax.lax.dot_general(G, xb, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)   # [bh,Q,P]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cs[:, -1:] - cs)                      # [bh,Q]
+    xw = xb * decay_end[:, :, None]                           # [bh,Q,P]
+    st = jax.lax.dot_general(
+        jnp.broadcast_to(Bm[None], (bh, Q, N)), xw,
+        (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # [bh,N,P]
+    st_ref[0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def ssd_chunk(x, dt, A, Bm, Cm, *, bh: int = 4, interpret: bool = False):
+    """Intra-chunk SSD over stacked chunks.
+
+    x: [nc, H, Q, P]; dt: [nc, H, Q]; A: [H]; Bm/Cm: [nc, Q, N] (1 group).
+    Returns (y [nc,H,Q,P] f32, states [nc,H,N,P] f32) — per-chunk local
+    output and end-state, before the inter-chunk recurrence.
+    """
+    nc, H, Q, P = x.shape
+    N = Bm.shape[2]
+    bh = min(bh, H)
+    assert H % bh == 0
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q, bh=bh, P=P, N=N),
+        grid=(nc, H // bh),
+        in_specs=[
+            pl.BlockSpec((1, bh, Q, P), lambda c, h: (c, h, 0, 0)),
+            pl.BlockSpec((1, bh, Q), lambda c, h: (c, h, 0)),
+            pl.BlockSpec((bh,), lambda c, h: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Q, N), lambda c, h: (c, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda c, h: (c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bh, Q, P), lambda c, h: (c, h, 0, 0)),
+            pl.BlockSpec((1, bh, N, P), lambda c, h: (c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nc, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((nc, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent: for each cell we
+build the production mesh (16x16 single-pod / 2x16x16 multi-pod), lower the
+appropriate step function against ShapeDtypeStruct inputs with the real
+shardings, compile it, and extract:
+
+  * memory_analysis()  — per-chip bytes: proves the cell fits 16 GB HBM;
+  * cost_analysis()    — per-chip FLOPs / bytes for the roofline terms;
+  * post-SPMD HLO      — collective-op bytes for the collective term.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}|{shape}|{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save_hlo: str | None = None, donate: bool = True,
+             seq_parallel: bool = False, q8_kv: bool = False,
+             int8_weights: bool = False,
+             n_microbatches: int = 1, variant: str = "") -> dict:
+    """Lower + compile one cell; return the stats row."""
+    from repro.configs.base import SHAPES, get_config
+    from repro.distributed.sharding import (
+        shardings_from_pspecs, train_state_pspecs)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import analyze, memory_summary, model_flops_for
+    from repro.launch.specs import (
+        decode_input_specs, prefill_input_specs, train_input_specs)
+    from repro.launch.steps import (
+        make_decode_step, make_prefill_step, make_train_step)
+    from repro.launch.training_config import optimizer_policy
+    from repro.models.transformer import init_params
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.policy import ShardingPolicy, sharding_policy
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    n_data = 32 if multi_pod else 16
+    shard_batch = shape.global_batch % n_data == 0
+    seq_axes = ("model",) if shard_batch else (batch_axes + ("model",))
+    policy = ShardingPolicy(mesh, batch_axes=batch_axes,
+                            seq_axes=seq_axes, shard_batch=shard_batch,
+                            seq_parallel=seq_parallel and shape.kind != "decode")
+
+    params_tree = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if int8_weights and shape.kind != "train":
+        from repro.serving.quantized_weights import quantize_params
+        params_tree = jax.eval_shape(quantize_params, params_tree)
+
+    if shape.kind == "train":
+        optimizer = optimizer_policy(cfg)
+        opt_tree = jax.eval_shape(optimizer.init, params_tree)
+        pspecs = train_state_pspecs(cfg, opt_state_tree=opt_tree,
+                                    params_tree=params_tree)
+        state_shard = shardings_from_pspecs(mesh, pspecs)
+        state_specs = {
+            "params": params_tree,
+            "opt_state": opt_tree,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        in_specs, in_shard = train_input_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, optimizer, n_microbatches=n_microbatches)
+        metrics_shard = {k: NamedSharding(mesh, P()) for k in
+                         ("loss", "ce", "aux", "grad_norm")}
+        with mesh, sharding_policy(policy):
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard, in_shard),
+                out_shardings=(state_shard, metrics_shard),
+                donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state_specs, in_specs)
+            compiled = lowered.compile()
+        mf = model_flops_for(cfg, "train", shape.seq_len, shape.global_batch)
+
+    elif shape.kind == "prefill":
+        params_psp = train_state_pspecs(cfg, params_tree=params_tree)["params"]
+        if seq_parallel:
+            # inference: embed / lm_head stored replicated — GSPMD otherwise
+            # all-gathers the full f32 table per step (§Perf B3)
+            from jax.sharding import PartitionSpec as _P
+            params_psp = dict(params_psp)
+            for k in ("embed", "lm_head"):
+                if k in params_psp:
+                    params_psp[k] = jax.tree.map(
+                        lambda s: _P(), params_psp[k],
+                        is_leaf=lambda x: isinstance(x, _P))
+        pspec = shardings_from_pspecs(mesh, params_psp)
+        in_specs, in_shard = prefill_input_specs(cfg, shape, mesh)
+        step = make_prefill_step(cfg)
+        with mesh, sharding_policy(policy):
+            jitted = jax.jit(step, in_shardings=(pspec, in_shard))
+            lowered = jitted.lower(params_tree, in_specs)
+            compiled = lowered.compile()
+        mf = model_flops_for(cfg, "prefill", shape.seq_len, shape.global_batch)
+
+    else:  # decode
+        # decode weights are read-only: TP-only sharding, data axis = batch
+        pspec = shardings_from_pspecs(
+            mesh, train_state_pspecs(cfg, fsdp_axis=None,
+                                     params_tree=params_tree)["params"])
+        specs, shards = decode_input_specs(cfg, shape, mesh, q8_kv=q8_kv)
+        step = make_decode_step(cfg)
+        with mesh, sharding_policy(policy):
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspec, shards["batch"], shards["cache"],
+                              shards["pos"]),
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_tree, specs["batch"],
+                                   specs["cache"], specs["pos"])
+            compiled = lowered.compile()
+        mf = model_flops_for(cfg, "decode", shape.seq_len, shape.global_batch)
+
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    roof = analyze(compiled, n_chips=n_chips, model_flops=mf, hlo_text=hlo)
+    mem = memory_summary(compiled)
+    cid = _cell_id(arch, shape_name, multi_pod)
+    if variant:
+        cid += f"|{variant}"
+    row = {
+        "cell": cid,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_s": round(compile_s, 1),
+        "memory": mem,
+        "collectives": {
+            "bytes_by_kind": roof.collectives.bytes_by_kind,
+            "count_by_kind": roof.collectives.count_by_kind,
+        },
+        **roof.row(),
+    }
+    return row
+
+
+def applicable_cells(multi_pod: bool):
+    from repro.configs.base import applicable_shapes, get_config, list_archs
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            cells.append((arch, shape.name, multi_pod))
+    return cells
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel prefill/train sharding (§Perf)")
+    ap.add_argument("--q8-kv", action="store_true",
+                    help="int8 KV cache for decode cells (HALO-faithful)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches for train cells")
+    ap.add_argument("--int8-weights", action="store_true",
+                    help="weight-only int8 for inference cells (HALO int8)")
+    ap.add_argument("--variant", default="",
+                    help="label appended to the cell id in the output row")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = applicable_cells(args.multi_pod)
+        if args.both_meshes:
+            cells = applicable_cells(False) + applicable_cells(True)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    done = set()
+    if args.skip_done and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    done.add(json.loads(line)["cell"])
+                except Exception:
+                    pass
+
+    failures = []
+    for arch, shape, mp in cells:
+        cid = _cell_id(arch, shape, mp)
+        if cid in done:
+            print(f"SKIP {cid} (done)", flush=True)
+            continue
+        print(f"==== {cid} ====", flush=True)
+        save_hlo = None
+        if args.hlo_dir:
+            os.makedirs(args.hlo_dir, exist_ok=True)
+            fname = cid + (f"|{args.variant}" if args.variant else "")
+            save_hlo = os.path.join(args.hlo_dir,
+                                    fname.replace("|", "_") + ".hlo")
+        try:
+            row = run_cell(arch, shape, multi_pod=mp, save_hlo=save_hlo,
+                           seq_parallel=args.seq_parallel, q8_kv=args.q8_kv,
+                           int8_weights=args.int8_weights,
+                           n_microbatches=args.microbatches,
+                           variant=args.variant)
+            print(json.dumps(
+                {k: row[k] for k in ("cell", "compile_s", "t_compute_s",
+                                     "t_memory_s", "t_collective_s",
+                                     "bottleneck", "useful_flops_frac")},
+                default=str), flush=True)
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(row, default=str) + "\n")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((cid, repr(e)))
+            print(f"FAIL {cid}: {e}", flush=True)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for cid, err in failures:
+            print(f"  {cid}: {err}")
+        return 1
+    print(f"\nall {len(cells)} cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,522 @@
+"""Static analysis of post-SPMD HLO text: FLOPs / HBM bytes / collective
+bytes WITH while-loop trip-count multiplication.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE.  Our models run layer stacks and CE chunks under ``lax.scan``, so XLA's
+own numbers under-report by the trip count (28-80x for the layer loops) —
+verified empirically (useful_flops_frac > 1 without this pass).
+
+Model:
+  * FLOPs  — 2*M*N*K per ``dot``; elementwise/reduce ops are ignored
+    (consistent with the MODEL_FLOPS = 6*N*D convention, which also counts
+    GEMMs only).  Convolutions would be counted if present (our SSM conv
+    lowers to multiplies, already excluded on both sides).
+  * HBM bytes — ANCHORS-ONLY FUSION MODEL, calibrated for what Mosaic/XLA-TPU
+    materializes rather than what the CPU backend's per-op wrapped fusions
+    suggest (naive operand+result summing was 10-30x inflated: the CPU HLO
+    materializes ~16 separate f32 copies of the residual stream per layer
+    for chains that Mosaic fuses into 1-2 passes, and charges loop-carried
+    buffers in full per iteration):
+      - dot / convolution: operand bytes + result bytes (MXU streams both);
+      - dynamic-slice: 2x slice bytes;  dynamic-update-slice: 2x update
+        bytes (in-place on TPU — NOT the full carried buffer);
+      - reduce / gather / scatter / sort: operands + result;
+      - while / conditional / call: free (bodies counted via call graph,
+        carries are aliased in place);
+      - pointwise / broadcast / convert / transpose / wrapped fusions: FREE —
+        assumed fused into the neighbouring anchors.  This makes the memory
+        term a fusion-optimal LOWER bound; the true TPU number sits between
+        it and +~2 residual-stream passes per norm (small vs the dots).
+      - entry parameters: read once per step.
+  * Collective bytes — result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, weighted by a ring
+    model factor (all-reduce=2, others=1) in the caller (roofline.py).
+  * kernel_regions — names of Python functions whose HLO regions are
+    implemented as Pallas TPU kernels in deployment (e.g. the flash
+    attention inner loop): ops whose stack-frame provenance lands in one of
+    these functions are VMEM-resident on TPU and charged zero HBM traffic.
+    The dry-run resolves ``stack_frame_id`` through the FileLocations /
+    StackFrames tables XLA appends to the HLO dump.  Baseline analyses pass
+    kernel_regions=() — the discount is an explicit, reported modeling step.
+
+Call-graph propagation: fusion -> calls=..., while -> body/condition,
+conditional -> branch computations, sort/reduce/scatter -> to_apply (counted
+but their comparators contribute ~0).  While trip count comes from XLA's
+``backend_config known_trip_count`` annotation (fallback: the literal bound
+in the condition's ``compare(iter, constant(N))``); unknown conditions
+default to 1 and are reported so the caller can see coverage.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# ops that do not touch HBM (metadata / aliasing only)
+FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "opt-barrier", "partition-id",
+    "replica-id", "iota", "copy-start", "copy-done",
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\(")
+_CALL_REF_MULTI = re.compile(r"branch_computations=\{([^}]*)\}")
+_DIMS_ATTR = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_IN_COND = re.compile(r"constant\((\d+)\)")
+# XLA annotates counted loops directly (observed on CPU + TPU backends):
+#   backend_config={"known_trip_count":{"n":"28"},...}
+_KNOWN_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    # (callee, multiplier, count_bytes): multiplier > 1 for while bodies.
+    # count_bytes=False for fusion/to_apply interiors — a fusion's traffic
+    # is its call-site operands/result; only its FLOPs (dots inside TPU
+    # kOutput fusions) propagate.
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+    bytes_by_shape: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+    n_while_known: int = 0
+    n_while_unknown: int = 0
+    bytes_by_shape: Dict[str, float] = field(default_factory=dict)
+
+    def top_shapes(self, n: int = 10) -> List[Tuple[str, float]]:
+        return sorted(self.bytes_by_shape.items(),
+                      key=lambda kv: -kv[1])[:n]
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """name -> op lines.
+
+    Computation headers sit at column 0: ``%name (params...) -> type {`` or
+    ``ENTRY %name (...) -> ... {``.  Params may contain nested parens (tuple
+    types), so we key off the column-0 ``%``/``ENTRY`` + trailing ``{`` only.
+    Body ops are indented; the closing ``}`` is back at column 0.
+    """
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if not line or line[0].isspace():
+                continue
+            is_entry = line.startswith("ENTRY")
+            body = line[5:].lstrip() if is_entry else line
+            if body.startswith("%") and line.endswith("{"):
+                name = body[1:].split(" ", 1)[0].split("(", 1)[0]
+                cur = name
+                comps[cur] = []
+                if is_entry:
+                    entry = cur
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+
+def _dot_flops(line: str, shapes_by_name: Dict[str, Tuple[str, List[int]]]
+               ) -> float:
+    """2 * prod(result dims) * prod(contracted lhs dims).
+
+    Scheduled HLO lists operands by NAME only; lhs dims come from the
+    definition-site shape map."""
+    shapes = _shape_list(line.split(" dot(")[0])
+    if not shapes:
+        return 0.0
+    _, res_dims = shapes[0]
+    _, _, post = line.partition(" dot(")
+    arg_region = post.split(")")[0]
+    opnds = _OPERANDS.findall(arg_region)
+    lhs_dims: List[int] = []
+    if opnds and opnds[0] in shapes_by_name:
+        lhs_dims = shapes_by_name[opnds[0]][1]
+    m = _DIMS_ATTR.search(line)
+    if m:
+        cdims = [int(d) for d in m.group(1).split(",") if d]
+    else:
+        cdims = [len(lhs_dims) - 1] if lhs_dims else []
+    k = 1
+    for ci in cdims:
+        if ci < len(lhs_dims):
+            k *= lhs_dims[ci]
+    out = 1
+    for d in res_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+# ---------------------------------------------------------------------------
+# stack-frame provenance (FileNames / FunctionNames / FileLocations /
+# StackFrames tables at the bottom of the HLO dump)
+# ---------------------------------------------------------------------------
+
+_TABLE_ROW = re.compile(r"^(\d+)\s+(.*)$")
+_STACK_FRAME_ATTR = re.compile(r"stack_frame_id=(\d+)")
+
+
+def parse_stack_tables(text: str):
+    """Returns frame_id -> frozenset(function names on the stack)."""
+    sections: Dict[str, Dict[int, str]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s in ("FileNames", "FunctionNames", "FileLocations", "StackFrames"):
+            cur = s
+            sections[cur] = {}
+            continue
+        if cur is None:
+            continue
+        m = _TABLE_ROW.match(s)
+        if not m:
+            cur = None
+            continue
+        sections[cur][int(m.group(1))] = m.group(2)
+
+    fn_names = {i: v.strip('"') for i, v in
+                sections.get("FunctionNames", {}).items()}
+    loc_fn: Dict[int, str] = {}
+    for i, v in sections.get("FileLocations", {}).items():
+        m = re.search(r"function_name_id=(\d+)", v)
+        if m:
+            loc_fn[i] = fn_names.get(int(m.group(1)), "")
+    frames: Dict[int, Tuple[int, int]] = {}
+    for i, v in sections.get("StackFrames", {}).items():
+        ml = re.search(r"file_location_id=(\d+)", v)
+        mp = re.search(r"parent_frame_id=(\d+)", v)
+        if ml and mp:
+            frames[i] = (int(ml.group(1)), int(mp.group(1)))
+
+    memo: Dict[int, frozenset] = {}
+
+    def chain(fid: int, depth: int = 0) -> frozenset:
+        if fid in memo:
+            return memo[fid]
+        if fid not in frames or depth > 200:
+            return frozenset()
+        loc, parent = frames[fid]
+        names = {loc_fn.get(loc, "")}
+        if parent != fid:
+            names |= chain(parent, depth + 1)
+        out = frozenset(n for n in names if n)
+        memo[fid] = out
+        return out
+
+    return {fid: chain(fid) for fid in frames}
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Largest literal in the condition computation's compare/constant ops.
+
+    XLA lowers counted loops to ``compare(iter, constant(N)), direction=LT``;
+    taking the max literal is robust to extra bookkeeping constants."""
+    best = None
+    for line in cond_lines:
+        if "compare" in line or "constant" in line:
+            for c in _CONST_IN_COND.findall(line):
+                v = int(c)
+                if best is None or v > best:
+                    best = v
+    return best
+
+
+def analyze_hlo(text: str, kernel_regions: Tuple[str, ...] = ()) -> HloStats:
+    comps = _split_computations(text)
+    entry = comps.pop("__entry__")[0]
+    frame_fns = parse_stack_tables(text) if kernel_regions else {}
+    kr = frozenset(kernel_regions)
+
+    stats: Dict[str, CompStats] = {}
+    unknown_whiles = 0
+    known_whiles = 0
+
+    # pass 1: result shapes + producer op + first operand, by op name
+    shapes_by_name: Dict[str, Tuple[str, List[int]]] = {}
+    producer: Dict[str, Tuple[str, Optional[str]]] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            op_name, type_region, opk = m.groups()
+            sh = _shape_list(type_region)
+            if sh and op_name not in shapes_by_name:
+                shapes_by_name[op_name] = sh[0]
+                _, _, post = line.partition(f" {opk}(")
+                first = _OPERANDS.findall(post.split(")")[0]) if post else []
+                producer[op_name] = (opk, first[0] if first else None)
+
+    def _source_dtype(name: str, depth: int = 0) -> str:
+        """Chase through convert/copy/bitcast (incl. CPU's convert-wrapping
+        fusions) to the dtype that actually streams from HBM — a bf16 cache
+        read must not be charged at the f32 width of its fused upcast."""
+        if depth > 4 or name not in shapes_by_name:
+            return shapes_by_name.get(name, ("f32", []))[0]
+        opk, first = producer.get(name, ("", None))
+        same_elems = (first is not None and sorted(
+            shapes_by_name.get(name, ("", [0]))[1]) == sorted(
+            shapes_by_name.get(first, ("", [1]))[1]))
+        passthrough = opk in ("convert", "copy", "bitcast", "transpose",
+                              "reshape") or (opk == "fusion" and same_elems)
+        if passthrough and first:
+            return _source_dtype(first, depth + 1)
+        return shapes_by_name[name][0]
+
+    def _float_bytes(shapes):
+        return _bytes_of([(dt, dims) for dt, dims in shapes
+                          if dt.startswith(("f", "bf", "c"))])
+
+    def _in_kernel_region(line: str) -> bool:
+        """Substring match against (a) the stack-frame function-name chain
+        (``_blockwise_attention.<locals>.q_block_inner``) and (b) the raw
+        op_name metadata (covers VJP-transposed ops, whose op_name keeps the
+        forward einsum labels, e.g. ``bhgqk,bkhd->bhgqd``)."""
+        if not kr:
+            return False
+        mo = re.search(r'op_name="([^"]*)"', line)
+        if mo and any(tok in mo.group(1) for tok in kr):
+            return True
+        m = _STACK_FRAME_ATTR.search(line)
+        if not m:
+            return False
+        fns = frame_fns.get(int(m.group(1)), frozenset())
+        return any(any(tok in fn for fn in fns) for tok in kr)
+
+    # second pass: flops / bytes / collectives per computation
+    for name, lines in comps.items():
+        cs = CompStats()
+        for line in lines:
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            _, type_region, op = m.groups()
+            if op in FREE_OPS:
+                continue
+            # --- flops
+            if op == "dot":
+                cs.flops += _dot_flops(line, shapes_by_name)
+            # --- collectives (use result shape = per-device landed bytes)
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVES:
+                if not op.endswith("-done"):
+                    nbytes = _bytes_of(_shape_list(type_region))
+                    cs.coll_bytes[base_op] = (
+                        cs.coll_bytes.get(base_op, 0.0) + nbytes)
+                    cs.coll_count[base_op] = (
+                        cs.coll_count.get(base_op, 0) + 1)
+            # --- HBM traffic (anchor-based fusion model, see module doc)
+            if op.endswith("-done") or _in_kernel_region(line):
+                continue
+            res_bytes = _float_bytes(_shape_list(type_region))
+            _, _, post = line.partition(f" {op}(")
+            arg_region = post.split(")")[0] if post else ""
+            opnds = _OPERANDS.findall(arg_region)
+
+            def opnd_bytes(i, chase: bool = False):
+                if i < len(opnds) and opnds[i] in shapes_by_name:
+                    dt, dims = shapes_by_name[opnds[i]]
+                    if chase:
+                        dt = _source_dtype(opnds[i])
+                    if dt not in DTYPE_BYTES or not (
+                            dt.startswith(("f", "bf", "c", "s", "u"))):
+                        return 0.0
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    return n * DTYPE_BYTES[dt]
+                return 0.0
+
+            if op in ("dot", "convolution"):
+                # operands charged at their HBM source dtype (int8 caches /
+                # bf16 weights read through fused upcasts stay 1-2 B/elem)
+                contrib = res_bytes + sum(
+                    opnd_bytes(i, chase=True) for i in range(len(opnds)))
+            elif op == "dynamic-slice":
+                # one READ of the slice, at the SOURCE buffer's dtype (a
+                # convert fused into the slice consumer must not double the
+                # charged bytes: bf16 caches were showing up as f32 reads)
+                src_dt = (shapes_by_name.get(opnds[0], ("f32", []))[0]
+                          if opnds else "f32")
+                sh = _shape_list(type_region)
+                if sh and src_dt in DTYPE_BYTES:
+                    n = 1
+                    for d in sh[0][1]:
+                        n *= d
+                    contrib = n * DTYPE_BYTES[src_dt]
+                else:
+                    contrib = res_bytes
+            elif op == "dynamic-update-slice":
+                contrib = opnd_bytes(1)                # in-place slice write
+            elif op in ("reduce", "reduce-window", "sort", "gather",
+                        "scatter"):
+                contrib = res_bytes + sum(
+                    opnd_bytes(i) for i in range(len(opnds)))
+            elif base_op in COLLECTIVES and not op.endswith("-done"):
+                contrib = res_bytes                    # landed buffer write
+            elif op == "fusion":
+                # only slice-update fusions are anchors; classify by the
+                # called computation's name (CPU wraps DS/DUS/gather thus)
+                called = re.search(r"calls=%?([\w\.\-]+)", line)
+                cname = called.group(1) if called else ""
+                if "dynamic-update-slice" in cname or "scatter" in cname:
+                    small = min((opnd_bytes(i) for i in range(len(opnds))
+                                 if opnd_bytes(i) > 0), default=0.0)
+                    contrib = small                    # in-place update write
+                elif "dynamic-slice" in cname:
+                    contrib = res_bytes                # slice read
+                elif "gather" in cname or "reduce" in cname:
+                    contrib = 2 * res_bytes
+                else:
+                    contrib = 0.0                      # pointwise: fused
+            else:
+                contrib = 0.0                          # pointwise / control
+            if contrib:
+                cs.hbm_bytes += contrib
+                sh = _shape_list(type_region)
+                key = f"{op}:{sh[0][0]}{sh[0][1]}" if sh else op
+                cs.bytes_by_shape[key] = (
+                    cs.bytes_by_shape.get(key, 0.0) + contrib)
+            # --- call graph
+            if op == "while":
+                body = cond = None
+                mm = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mm:
+                    body = mm.group(1)
+                if mc:
+                    cond = mc.group(1)
+                mt = _KNOWN_TRIP.search(line)
+                if mt:
+                    tc = int(mt.group(1))
+                else:
+                    tc = _trip_count(comps.get(cond, [])) if cond else None
+                if tc is None:
+                    tc = 1
+                    unknown_whiles += 1
+                else:
+                    known_whiles += 1
+                if body:
+                    cs.calls.append((body, float(tc), True))
+            elif op == "conditional":
+                mb = _CALL_REF_MULTI.search(line)
+                if mb:
+                    for ref in mb.group(1).split(","):
+                        ref = ref.strip().lstrip("%")
+                        if ref:
+                            cs.calls.append((ref, 1.0, True))
+                else:
+                    for ref in re.findall(
+                            r"(?:true_computation=|false_computation=)"
+                            r"%?([\w\.\-]+)", line):
+                        cs.calls.append((ref, 1.0, True))
+            elif op == "call":
+                for ref in re.findall(r"to_apply=%?([\w\.\-]+)", line):
+                    cs.calls.append((ref, 1.0, True))
+            else:
+                # fusion / reduce / sort interiors: FLOPs only
+                for ref in re.findall(
+                        r"(?:calls=|to_apply=)%?([\w\.\-]+)", line):
+                    cs.calls.append((ref, 1.0, False))
+        stats[name] = cs
+
+    # propagate through the call graph (memoized DFS)
+    memo: Dict[str, HloStats] = {}
+    visiting: Set[str] = set()
+
+    def total(name: str) -> HloStats:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in stats:
+            return HloStats()
+        visiting.add(name)
+        cs = stats[name]
+        agg = HloStats(flops=cs.flops, hbm_bytes=cs.hbm_bytes,
+                       coll_bytes=dict(cs.coll_bytes),
+                       coll_count={k: float(v)
+                                   for k, v in cs.coll_count.items()},
+                       bytes_by_shape=dict(cs.bytes_by_shape))
+        for callee, mult, count_bytes in cs.calls:
+            sub = total(callee)
+            agg.flops += mult * sub.flops
+            if not count_bytes:
+                continue
+            agg.hbm_bytes += mult * sub.hbm_bytes
+            for k, v in sub.coll_bytes.items():
+                agg.coll_bytes[k] = agg.coll_bytes.get(k, 0.0) + mult * v
+            for k, v in sub.coll_count.items():
+                agg.coll_count[k] = agg.coll_count.get(k, 0.0) + mult * v
+            for k, v in sub.bytes_by_shape.items():
+                agg.bytes_by_shape[k] = (
+                    agg.bytes_by_shape.get(k, 0.0) + mult * v)
+        visiting.discard(name)
+        memo[name] = agg
+        return agg
+
+    if not entry:
+        # fall back: the computation with the most flops
+        entry = max(stats, key=lambda n: stats[n].flops) if stats else ""
+    out = total(entry)
+    # entry parameters (weights, caches, batch) are streamed once per step
+    for line in comps.get(entry, []):
+        m = _OP_LINE.match(line)
+        if m and m.group(3) == "parameter":
+            out.hbm_bytes += _float_bytes(_shape_list(m.group(2)))
+    out.n_while_known = known_whiles
+    out.n_while_unknown = unknown_whiles
+    return out

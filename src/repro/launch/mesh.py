@@ -1,0 +1,64 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device,
+and only launch/dryrun.py sets XLA_FLAGS for 512 placeholder devices.
+
+Mesh geometry (TPU v5e pods):
+  single-pod   (16, 16)        axes ("data", "model")  — 256 chips
+  multi-pod    (2, 16, 16)     axes ("pod", "data", "model") — 512 chips
+
+The "model" axis carries TP / EP / sequence(cache) sharding; "data" carries
+batch + FSDP parameter sharding; "pod" is pure data parallelism whose
+gradient all-reduce crosses the inter-pod links (the axis gradient
+compression targets — see optim/grad_utils.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    # single-pod mesh on a 512-device host platform: take the first pod
+    assert len(devices) >= n, (
+        f"need {n} devices, have {len(devices)} — dryrun.py must set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=512 first")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh over however many devices this process sees (tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: Optional[int] = None):
+    """Small mesh over the host's actual devices — used by sharded CPU tests
+    (run under XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    n = len(jax.devices())
+    if data is None and model is None:
+        model = 1
+        data = n
+    data = data or n // (model or 1)
+    model = model or n // data
+    assert data * model == n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-sharding axes: ("pod","data") when the pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,267 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms, all in seconds, per (arch x shape x mesh) cell — the module XLA
+gives us after SPMD partitioning is the PER-DEVICE program, so every quantity
+below is per-chip and is divided by per-chip peaks:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = link_bytes_per_chip / ICI_bw             (~50 GB/s/link)
+
+``cost_analysis()`` provides flops and bytes.  Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD HLO (``compiled.as_text()``) and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce x2 (ring = reduce-scatter +
+all-gather).  Per-op shapes like ``bf16[8,128,2048]`` are parsed directly.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (task sheet)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVE_WEIGHT = {
+    "all-reduce": 2.0,        # ring: RS + AG
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of every dtype[dims] group in a shape string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def weighted_bytes(self) -> float:
+        return sum(COLLECTIVE_WEIGHT.get(k, 1.0) * v
+                   for k, v in self.bytes_by_kind.items())
+
+    @property
+    def raw_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum RESULT-shape bytes of every collective op in post-SPMD HLO.
+
+    The result shape (left of '=') is what lands on each device; for
+    all-reduce it equals the operand shape, for all-gather it is the gathered
+    output.  '-start' variants (async) are counted; '-done' ops carry the
+    same buffer and are skipped to avoid double counting.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "-done" in s.split("=")[0] if "=" in s else False:
+            continue
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        kind = m.group(1)
+        if f"{kind}-done" in s:
+            continue
+        # result shape: text between '=' and the op name
+        lhs_rhs = s.split("=", 1)
+        if len(lhs_rhs) != 2:
+            continue
+        result_part = lhs_rhs[1].split(kind)[0]
+        nbytes = _shape_bytes(result_part)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per-chip HLO flops
+    hbm_bytes: float              # per-chip bytes accessed
+    coll_bytes: float             # per-chip weighted collective bytes
+    model_flops: float            # 6*N*D (or 6*N_active*D) useful flops, total
+    n_chips: int
+    collectives: Optional[CollectiveStats] = None
+    xla_flops: float = 0.0        # XLA cost_analysis (loop bodies counted 1x)
+    xla_bytes: float = 0.0
+    n_while_unknown: int = 0      # while loops whose trip count we missed
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline lower bound on step time (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (per-chip HLO flops * chips) — remat/pad waste."""
+        total_hlo = self.flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the dominant-term roofline the USEFUL flops achieve:
+        (model_flops / chips / peak) / t_bound — 1.0 means the step is
+        perfectly compute-bound with zero overhead flops."""
+        t_useful = self.model_flops / self.n_chips / PEAK_FLOPS
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "xla_flops_per_chip": self.xla_flops,
+            "xla_bytes_per_chip": self.xla_bytes,
+            "n_while_unknown": self.n_while_unknown,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, batch: int,
+                    n_new_tokens: int = 1) -> float:
+    """MODEL_FLOPS = 6*N*D for train, 2*N*D for inference forward (per the
+    standard convention), with N = active params (MoE counts top-k only)."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq_len * batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = n_new_tokens * batch
+    flops = 2.0 * n_active * tokens
+    # add KV-cache attention flops (not in param count): 2 * 2 * ctx * H * dh
+    try:
+        if cfg.family in ("ssm",):
+            pass
+        else:
+            dh = cfg.d_head
+            H = cfg.n_heads
+            kinds = cfg.layer_kinds()
+            for k in kinds:
+                if k == "ssm":
+                    continue
+                ctx = seq_len
+                if k == "attn_local" and cfg.attn.sliding_window:
+                    ctx = min(seq_len, cfg.attn.sliding_window)
+                flops += tokens * 4.0 * ctx * H * dh
+    except Exception:
+        pass
+    return flops
+
+
+def analyze(compiled, *, n_chips: int, model_flops: float,
+            hlo_text: Optional[str] = None,
+            kernel_regions: Tuple[str, ...] = ()) -> Roofline:
+    """Roofline terms from the compiled module.
+
+    FLOPs / bytes / collective bytes come from our own HLO static analysis
+    (launch/hlo_analysis.py) because XLA's cost_analysis counts while-loop
+    bodies once — our lax.scan layer stacks would be under-reported 28-80x.
+    XLA's numbers are kept as a cross-check in ``xla_*``.
+
+    ``kernel_regions``: Python function names whose HLO is deployed as a
+    Pallas TPU kernel — their internal tensors are VMEM-resident and charged
+    zero HBM traffic (see hlo_analysis module doc).  Empty for baselines.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):                 # some backends return [dict]
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hs = analyze_hlo(text, kernel_regions=kernel_regions)
+    weighted = sum(COLLECTIVE_WEIGHT.get(k, 1.0) * v
+                   for k, v in hs.coll_bytes.items())
+    coll = CollectiveStats(bytes_by_kind=dict(hs.coll_bytes),
+                           count_by_kind={k: int(v) for k, v
+                                          in hs.coll_count.items()})
+    return Roofline(flops=max(hs.flops, xla_flops),
+                    hbm_bytes=hs.hbm_bytes,
+                    coll_bytes=weighted,
+                    model_flops=model_flops, n_chips=n_chips,
+                    collectives=coll,
+                    xla_flops=xla_flops, xla_bytes=xla_bytes,
+                    n_while_unknown=hs.n_while_unknown)
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_gb": m.argument_size_in_bytes / 2**30,
+            "output_gb": m.output_size_in_bytes / 2**30,
+            "temp_gb": m.temp_size_in_bytes / 2**30,
+            "alias_gb": getattr(m, "alias_size_in_bytes", 0) / 2**30,
+            "code_gb": getattr(m, "generated_code_size_in_bytes", 0) / 2**30,
+        }
+    except Exception as e:                    # backend without the API
+        return {"error": str(e)}

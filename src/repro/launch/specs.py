@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell + their shardings.
+
+``input_specs(cfg, shape)`` returns the exact pytree the corresponding step
+function consumes, built from ShapeDtypeStruct only — no device allocation.
+The dry-run lowers ``jit(step).lower(**specs)`` with these.
+
+Modality frontends are STUBS per the task sheet: vlm archs get a
+``vision_embeds`` [B, F, d] array standing in for precomputed InternViT patch
+embeddings; the audio arch feeds per-codebook token ids directly (the EnCodec
+tokenizer itself is out of scope).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    token_pspec,
+)
+from repro.models.transformer import cache_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes_spec(cfg: ModelConfig, mesh: Mesh, B: int) -> Any:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b = batch_pspec(mesh.axis_names, batch_size=B, mesh_shape=shape)
+    return tuple(b) if b != (None,) else None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(specs, shardings) for the train batch."""
+    B, T = shape.global_batch, shape.seq_len
+    b_ax = _batch_axes_spec(cfg, mesh, B)
+    specs: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        specs["tokens"] = SDS((B, cfg.n_codebooks, T), jnp.int32)
+        shards["tokens"] = NamedSharding(mesh, P(b_ax, None, None))
+    elif cfg.frontend == "vision":
+        F = cfg.n_frontend_tokens
+        specs["tokens"] = SDS((B, T - F), jnp.int32)
+        specs["vision_embeds"] = SDS((B, F, cfg.d_model), jnp.dtype(cfg.dtype))
+        shards["tokens"] = NamedSharding(mesh, P(b_ax, None))
+        shards["vision_embeds"] = NamedSharding(mesh, P(b_ax, None, None))
+    else:
+        specs["tokens"] = SDS((B, T), jnp.int32)
+        shards["tokens"] = NamedSharding(mesh, P(b_ax, None))
+    return specs, shards
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                        ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    return train_input_specs(cfg, shape, mesh)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       *, q8_kv: bool = False
+                       ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Specs for (batch, cache, pos) of a single decode step at full context.
+
+    The cache stands at seq_len occupancy — the worst-case serve_step the
+    shape sheet asks for (one new token against a seq_len KV cache).
+    ``q8_kv``: int8 KV arena (HALO-faithful decode format).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    b_ax = _batch_axes_spec(cfg, mesh, B)
+    if cfg.n_codebooks > 1:
+        tok = SDS((B, cfg.n_codebooks, 1), jnp.int32)
+        tok_s = NamedSharding(mesh, P(b_ax, None, None))
+    else:
+        tok = SDS((B, 1), jnp.int32)
+        tok_s = NamedSharding(mesh, P(b_ax, None))
+    batch = {"tokens": tok}
+    batch_shard = {"tokens": tok_s}
+    if q8_kv:
+        from repro.serving.quantized_cache import quantized_cache_specs
+        cache = quantized_cache_specs(cfg, B, S)
+    else:
+        cache = cache_specs(cfg, B, S)
+    cspec = cache_pspecs(cfg, mesh, B, cache_tree=cache)
+    cache_shard = [
+        jax.tree.map(lambda s: NamedSharding(mesh, s), cs,
+                     is_leaf=lambda x: isinstance(x, P))
+        for cs in cspec
+    ]
+    pos = SDS((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    specs = {"batch": batch, "cache": cache, "pos": pos}
+    shards = {"batch": batch_shard, "cache": cache_shard, "pos": pos_shard}
+    return specs, shards

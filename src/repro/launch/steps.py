@@ -1,0 +1,209 @@
+"""Step functions: the jit boundaries of the framework.
+
+``make_train_step``   (state, batch) -> (state, metrics)
+``make_prefill_step`` (params, batch) -> (last_logits, cache)
+``make_decode_step``  (params, batch, cache, pos) -> (logits, cache)
+
+Memory discipline baked in here (numbers for the 16 GB/chip v5e budget are
+in DESIGN.md §Memory):
+
+* remat (activation checkpointing) on every layer scan during training;
+* cross-entropy is computed CHUNKED over the token axis so the full
+  [tokens, vocab] logits tensor is never materialized (gemma3's 262k vocab
+  at 1M tokens/step would otherwise be 1.1 TB of f32 logits);
+* optional microbatch gradient accumulation (``n_microbatches``) via
+  ``lax.scan`` with f32 (or bf16) accumulators;
+* gradient clipping by global norm before the optimizer update.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (
+    forward,
+    lm_logits,
+    padded_vocab,
+)
+from repro.optim.grad_utils import clip_by_global_norm
+from repro.optim.optimizers import Optimizer
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(params, cfg: ModelConfig, h, labels, mask):
+    """Cross-entropy for one token chunk.  h [B,tc,d]; labels [B,tc] or
+    [B,K,tc] (musicgen).  Returns (sum_loss, sum_count)."""
+    from repro.distributed.policy import constrain
+    logits = lm_logits(params, cfg, h)                     # [B,tc,V] / [B,tc,K,V]
+    logits = constrain(logits, "logits4" if logits.ndim == 4 else "logits")
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    if cfg.n_codebooks > 1:
+        labels = labels.swapaxes(1, 2)                     # [B,tc,K]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if cfg.n_codebooks > 1:
+        nll = nll.mean(axis=-1)                            # avg codebooks
+    nll = nll * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def token_loss(params, cfg: ModelConfig, hidden, labels, mask,
+               chunk: int = 2048):
+    """Chunked next-token CE.  hidden [B,T,d]; labels/mask token-aligned.
+
+    The chunk function is rematerialized so backward re-forms each logits
+    chunk instead of saving it — O(B*chunk*V) live instead of O(B*T*V).
+    """
+    B, T, _ = hidden.shape
+    nc = max(T // chunk, 1)
+    tc = T // nc
+    if nc * tc != T:                                       # ragged tail: one shot
+        loss, cnt = _ce_chunk(params, cfg, hidden, labels, mask)
+        return loss / jnp.maximum(cnt, 1.0)
+
+    hs = hidden.reshape(B, nc, tc, -1).swapaxes(0, 1)      # [nc,B,tc,d]
+    if cfg.n_codebooks > 1:
+        ls = labels.reshape(B, labels.shape[1], nc, tc).transpose(2, 0, 1, 3)
+    else:
+        ls = labels.reshape(B, nc, tc).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, tc).swapaxes(0, 1)
+
+    ce = jax.checkpoint(functools.partial(_ce_chunk, params, cfg))
+
+    def body(carry, inp):
+        h, l, m = inp
+        s, c = ce(h, l, m)
+        return (carry[0] + s, carry[1] + c), None
+
+    (loss, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                  (hs, ls, ms))
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def _shift_labels(cfg: ModelConfig, tokens):
+    """Next-token labels + mask from the token array itself."""
+    if cfg.n_codebooks > 1:                                # [B,K,T]
+        labels = jnp.concatenate(
+            [tokens[..., 1:], jnp.zeros_like(tokens[..., :1])], axis=-1)
+        T = tokens.shape[-1]
+        mask = (jnp.arange(T) < T - 1).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (tokens.shape[0], T))
+        return labels, mask
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    T = tokens.shape[1]
+    mask = jnp.broadcast_to((jnp.arange(T) < T - 1).astype(jnp.float32),
+                            tokens.shape)
+    return labels, mask
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any],
+            aux_weight: float = 1e-2, remat: bool = True):
+    hidden, _, aux = forward(params, cfg, batch, phase="train", remat=remat,
+                             return_hidden=True)
+    if "labels" in batch:
+        labels, mask = batch["labels"], batch.get(
+            "loss_mask",
+            jnp.ones(hidden.shape[:2], jnp.float32))
+    else:
+        labels, mask = _shift_labels(cfg, batch["tokens"])
+        if hidden.shape[1] != mask.shape[-1]:              # vision prefix
+            F = hidden.shape[1] - mask.shape[-1]
+            hidden = hidden[:, F:]
+    ce = token_loss(params, cfg, hidden, labels, mask)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    *, n_microbatches: int = 1, clip_norm: float = 1.0,
+                    accum_dtype: str = "float32",
+                    aux_weight: float = 1e-2,
+                    remat: bool = True) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt_state": ..., "step": int32[]}.
+    batch["tokens"]: [B_global, T] int32 (plus optional vision_embeds/labels).
+    """
+    adt = jnp.dtype(accum_dtype)
+
+    def grads_of(params, batch):
+        (l, (ce, aux)), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, aux_weight, remat)
+        return g, l, ce, aux
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_microbatches <= 1:
+            grads, l, ce, aux = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, b):
+                g_acc, l_acc, ce_acc, aux_acc = carry
+                g, l, ce, aux = grads_of(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(adt), g_acc, g)
+                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, l, ce, aux), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+                mb)
+            inv = 1.0 / n_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            l, ce, aux = l * inv, ce * inv, aux * inv
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(
+            grads, state["opt_state"], params, state["step"])
+        new_state = {"params": new_params, "opt_state": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": l, "ce": ce, "aux": aux, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: Optimizer) -> Pytree:
+    from repro.models.transformer import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt_state": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, _ = forward(params, cfg, batch, phase="prefill")
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, batch, cache, pos):
+        logits, cache, _ = forward(params, cfg, batch, phase="decode",
+                                   cache=cache, pos=pos)
+        return logits, cache
+    return decode_step

@@ -1,0 +1,82 @@
+"""Training driver.
+
+Small-config CPU runs (examples, CI) and production-mesh runs share this
+entrypoint; the mesh/shardings path is exercised for real by the dry-run
+(launch/dryrun.py) and by the 8-device sharded tests.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import sys
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default=None,
+                    help="adamw | adafactor | sgd (default: policy)")
+    ap.add_argument("--schedule", default=None, help="cosine | wsd | constant")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.launch.training_config import optimizer_policy, schedule_policy
+    from repro.optim.optimizers import make_optimizer
+    from repro.optim.schedules import make_schedule
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, dtype="float32")
+
+    if args.optimizer:
+        sched_name = args.schedule or (
+            "wsd" if args.arch.startswith("minicpm") else "cosine")
+        sched = make_schedule(sched_name, args.lr, args.steps,
+                              max(args.steps // 20, 1))
+        opt = make_optimizer(args.optimizer, sched)
+    else:
+        opt = optimizer_policy(cfg, args.lr, args.steps)
+
+    data_cfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                          vocab_size=cfg.vocab_size, seed=args.seed,
+                          n_codebooks=cfg.n_codebooks)
+    tc = TrainerConfig(total_steps=args.steps,
+                       checkpoint_every=args.ckpt_every,
+                       checkpoint_dir=args.ckpt_dir,
+                       n_microbatches=args.microbatches,
+                       log_every=args.log_every, seed=args.seed,
+                       remat=not args.reduced)
+    trainer = Trainer(cfg, opt, data_cfg, tc)
+    out = trainer.run()
+    first = trainer.history[0]["loss"] if trainer.history else float("nan")
+    print(f"arch={cfg.name} steps={out['steps_run']} "
+          f"loss {first:.4f} -> {out['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Per-architecture training policies (optimizer, schedule, memory knobs).
+
+The optimizer choice is a MEMORY policy (DESIGN.md §Memory): at 256 chips x
+16 GB, f32 Adam state (8 bytes/param) fits only models under ~50B params.
+Larger models downgrade the moment dtypes; arctic-480b additionally factors
+the second moment (Adafactor) — 480e9 params * 10B/param would be 4.8 TB of
+optimizer+grad state otherwise.
+
+minicpm-2b uses its own published WSD schedule; everything else defaults to
+cosine.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.optim.optimizers import Optimizer, adafactor, adamw
+from repro.optim.schedules import make_schedule
+
+
+def schedule_policy(cfg: ModelConfig, lr: float = 3e-4,
+                    total_steps: int = 10_000, warmup_steps: int = None):
+    if warmup_steps is None:
+        warmup_steps = min(200, max(total_steps // 10, 1))
+    name = "wsd" if cfg.name.startswith("minicpm") else "cosine"
+    return make_schedule(name, lr, total_steps, warmup_steps)
+
+
+def optimizer_policy(cfg: ModelConfig, lr: float = 3e-4,
+                     total_steps: int = 10_000) -> Optimizer:
+    sched = schedule_policy(cfg, lr, total_steps)
+    n = cfg.param_count()
+    if n > 150e9:
+        # arctic-480b / deepseek-class: factored 2nd moment, bf16 momentum
+        return adafactor(sched, momentum_dtype="bfloat16")
+    if n > 20e9:
+        # mid-size: full Adam but bf16 moments (4 bytes/param state)
+        return adamw(sched, state_dtype="bfloat16")
+    return adamw(sched, state_dtype="float32")
+
+
+def grad_accum_policy(cfg: ModelConfig, shape_tokens: int) -> int:
+    """Microbatch count for train_step (1 = no accumulation; remat +
+    chunked-CE already bound activation memory for every assigned config)."""
+    return 1

@@ -1,0 +1,17 @@
+from repro.models.transformer import (
+    build_plan,
+    cache_specs,
+    decode_step,
+    forward,
+    forward_train,
+    init_cache,
+    init_params,
+    lm_logits,
+    padded_vocab,
+    prefill,
+)
+
+__all__ = [
+    "build_plan", "cache_specs", "decode_step", "forward", "forward_train",
+    "init_cache", "init_params", "lm_logits", "padded_vocab", "prefill",
+]

@@ -1,0 +1,405 @@
+"""Attention: GQA with qk-norm / sliding-window / local-global variants.
+
+Two execution paths, mirroring HALO's phase split:
+
+* ``attn_prefill`` — compute-bound GEMM path.  For long sequences it uses a
+  blockwise (flash-style, online-softmax) pure-JAX implementation so the
+  lowered HLO has O(T * block) live memory instead of O(T^2).  On TPU the
+  Pallas flash kernel (kernels/flash_attention.py) implements the same
+  algorithm with explicit VMEM tiling.
+
+* ``attn_decode`` — memory-bound GEMV path.  One new token attends to a KV
+  cache of S entries.  The cache is laid out [B, S, Hkv, Dh] so that S can be
+  sequence-sharded across the ``model`` mesh axis (the TPU analogue of HALO's
+  bank-level CiD GEMV: every shard scans its local slice of the cache and the
+  softmax is reconstructed with tiny cross-shard reductions).
+
+Sliding-window layers use a ring-buffer cache of length min(W, S): keys are
+stored with RoPE already applied at their absolute position, so the ring
+order does not matter; validity masking only needs the current position.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    head_rmsnorm,
+    matmul,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+              dtype, qk_norm: bool = False, d_model_out: Optional[int] = None):
+    d_out = d_model_out or d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_out, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), dtype)
+        p["k_norm"] = jnp.ones((d_head,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# qkv projection (shared between phases)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, x, n_heads, n_kv_heads, d_head, positions, theta,
+                 qk_norm: bool):
+    from repro.distributed.policy import constrain
+    B = x.shape[0]
+    T = x.shape[1]
+    q = matmul(x, params["wq"]).reshape(B, T, n_heads, d_head)
+    k = matmul(x, params["wk"]).reshape(B, T, n_kv_heads, d_head)
+    v = matmul(x, params["wv"]).reshape(B, T, n_kv_heads, d_head)
+    from repro.distributed.policy import get_policy
+    pol = get_policy()
+    q = constrain(q, "act_bthd")
+    if pol is not None and pol.sp_enabled and T > 1:
+        # sequence-parallel prefill: gather K/V across the token shards
+        # (0.27 GB/layer vs the 4.3 GB/layer of f32 activation all-reduces
+        # that Megatron-style TP costs at 32k context — §Perf iteration 2)
+        k = constrain(k, "kv_full")
+        v = constrain(v, "kv_full")
+    elif n_kv_heads > 1:      # kv=1 (gemma3) cannot shard the head axis
+        k = constrain(k, "act_bthd")
+        v = constrain(v, "act_bthd")
+    if qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _maybe_softcap(scores, softcap: float):
+    if softcap and softcap > 0.0:
+        return softcap * jnp.tanh(scores / softcap)
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# prefill / train
+# ---------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, positions, kv_positions, window, softcap,
+                     pad_mask=None):
+    """Reference masked attention.  q:[B,Tq,H,D] k,v:[B,Tk,Hkv,D]."""
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(D)
+    scores = _maybe_softcap(scores, softcap)
+    # causal + window mask.  window is traced (per-layer); 0 means "full".
+    pq = positions[:, :, None]                       # [B,Tq,1]
+    pk = kv_positions[:, None, :]                    # [B,1,Tk]
+    causal = pk <= pq
+    w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    in_window = (pq - pk) < w
+    valid = causal & in_window
+    if pad_mask is not None:
+        valid = valid & pad_mask[:, None, :]
+    mask = valid[:, None, None]                      # [B,1,1,Tq,Tk]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Tq, H, D).astype(q.dtype)
+
+
+def _blockwise_attention(q, k, v, positions, window, softcap,
+                         block_q: int = 512, block_kv: int = 1024,
+                         pad_mask=None):
+    """Flash-style online-softmax attention; O(T*block) live memory.
+
+    Causal masking is applied at block granularity through the score mask;
+    the FLOP count still includes upper-triangle blocks (see EXPERIMENTS.md
+    §Perf for the triangular-schedule optimization that removes them).
+    """
+    B, T, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    nq = T // block_q
+    nk = T // block_kv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, nq, block_q, Hkv, G, D)
+    kb = k.reshape(B, nk, block_kv, Hkv, D)
+    vb = v.reshape(B, nk, block_kv, Hkv, D)
+    pos_q = positions.reshape(B, nq, block_q)
+    pos_k = positions.reshape(B, nk, block_kv)
+    if pad_mask is None:
+        pad_mask = jnp.ones((B, T), jnp.bool_)
+    pm_k = pad_mask.reshape(B, nk, block_kv)
+    w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.nothing_saveable)
+    def q_block_inner(qblk, pq):
+        """One query block vs all kv blocks.  Rematerialized in backward so
+        the per-(q,kv)-block probabilities are never stacked across blocks
+        (flash-attention memory discipline, pure-JAX edition)."""
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+
+        def kv_block(acc, ki):
+            m, l, a = acc
+            kblk, vblk, pk, pmk = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _maybe_softcap(s, softcap)
+            causal = pk[:, None, None, None, :] <= pq[:, None, None, :, None]
+            in_w = (pq[:, None, None, :, None] - pk[:, None, None, None, :]) < w
+            ok = causal & in_w & pmk[:, None, None, None, :]
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            a_new = a * corr[..., None] + pv
+            return (m_new, l_new, a_new), None
+
+        (m, l, a), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pos_k.swapaxes(0, 1),
+             pm_k.swapaxes(0, 1)))
+        out = a / jnp.maximum(l[..., None], 1e-30)           # [B,Hkv,G,bq,D]
+        out = out.transpose(0, 3, 1, 2, 4)                   # [B,bq,Hkv,G,D]
+        return out.astype(qblk.dtype)
+
+    from repro.distributed.policy import get_policy
+    pol = get_policy()
+    if pol is not None and pol.sp_enabled:
+        # SEQUENCE-PARALLEL: q blocks are sharded over 'model'; a scan would
+        # serialize them globally (GSPMD slices the scan axis), so the block
+        # loop becomes a vmap — batched ops with a sharded leading dim stay
+        # shard-local.  K/V were all-gathered by the caller.
+        outs = jax.vmap(q_block_inner)(
+            qg.swapaxes(0, 1), pos_q.swapaxes(0, 1))         # [nq,B,bq,...]
+    else:
+        def q_block(carry, qi):
+            qblk, pq = qi                                    # [B,bq,Hkv,G,D]
+            return carry, q_block_inner(qblk, pq)
+
+        _, outs = jax.lax.scan(
+            q_block, None,
+            (qg.swapaxes(0, 1), pos_q.swapaxes(0, 1)))       # [nq,B,bq,...]
+    out = outs.swapaxes(0, 1).reshape(B, T, H, D)
+    return out
+
+
+def _can_use_pallas_flash(q, softcap, pad_mask, positions) -> bool:
+    """The Pallas kernel path: TPU backend, no softcap/padding, contiguous
+    positions (the kernel masks by absolute block indices)."""
+    import jax as _jax
+    if _jax.default_backend() != "tpu":
+        return False
+    if softcap or pad_mask is not None:
+        return False
+    T = q.shape[1]
+    return T % 512 == 0
+
+
+def attn_prefill(params, x, positions, *, n_heads, n_kv_heads, d_head,
+                 theta, window, softcap=0.0, qk_norm=False,
+                 dense_threshold: int = 2048, pad_mask=None):
+    """Full-sequence attention.  Returns [B, T, d_model_out] and (k, v) for
+    cache initialization.  ``pad_mask`` [B,T] marks valid (non-pad) keys.
+
+    Dispatch: small T -> dense reference; long T on TPU -> the Pallas flash
+    kernel (kernels/flash_attention.py: triangular tile schedule, VMEM-
+    resident probs); otherwise the pure-JAX blockwise path (same online-
+    softmax algorithm — the CPU/dry-run stand-in the §Roofline kernel-region
+    discount maps back onto the kernel).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, theta, qk_norm)
+    if T <= dense_threshold:
+        out = _dense_attention(q, k, v, positions, positions, window, softcap,
+                               pad_mask=pad_mask)
+    else:
+        use_kernel = _can_use_pallas_flash(q, softcap, pad_mask, positions)
+        w = None
+        if use_kernel:
+            try:
+                w = int(window)        # concrete at trace time (per-run)
+            except Exception:
+                use_kernel = False
+        if use_kernel:
+            from repro.kernels import ops as _kops
+            out = _kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=True,
+                window=w).transpose(0, 2, 1, 3)
+        else:
+            out = _blockwise_attention(q, k, v, positions, window, softcap,
+                                       pad_mask=pad_mask)
+    out = matmul(out.reshape(B, T, n_heads * d_head), params["wo"])
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def attn_decode_q8(params, x, cache, pos, *, n_heads, n_kv_heads,
+                   d_head, theta, window, softcap=0.0, qk_norm=False,
+                   slot=None, extra_mask=None):
+    """int8-KV decode — the HALO-faithful memory format (CiD computes int8
+    end to end; Section IV-A).  The cache stores int8 values with one f32
+    scale per (token, kv-head); BOTH attention contractions run as s8 x s8
+    ``dot_general`` (the MXU's native int8 path, = CiD's 8-bit bank MACs):
+
+      scores[s] = (q_q . k_q[s]) * q_scale * k_scale[s]
+      out       = (p'_q . v_q)   * p'_scale          with p' = p * v_scale[s]
+
+    folding the per-token v_scale into p BEFORE quantizing keeps the second
+    contraction exact up to int8 rounding.  HBM traffic per token: S*(Hkv*Dh
+    + 4) bytes per cache side — 2x less than bf16, 4x less than f32.
+
+    cache: {"k": int8 [B,S,Hkv,Dh], "k_scale": f32 [B,S,Hkv], "v", "v_scale"}
+    """
+    from repro.distributed.policy import constrain
+    from repro.serving.quantized_cache import quantize_token
+
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    pos_in = jnp.asarray(pos, jnp.int32)
+    pos = jnp.broadcast_to(pos_in, (B,))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           pos[:, None], theta, qk_norm)
+    # quantize the new K/V entry (per kv-head) and splice into the arena
+    k_q, k_s = quantize_token(k)                       # [B,1,Hkv,Dh],[B,1,Hkv]
+    v_q, v_s = quantize_token(v)
+    if slot is None:
+        slot = pos_in % S if pos_in.ndim == 0 else pos % S
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 0:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_q, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_s, (0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_q, (0, slot, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_s, (0, slot, 0))
+    else:
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, slot].set(k_q[:, 0])
+        cks = cache["k_scale"].at[bidx, slot].set(k_s[:, 0])
+        cv = cache["v"].at[bidx, slot].set(v_q[:, 0])
+        cvs = cache["v_scale"].at[bidx, slot].set(v_s[:, 0])
+
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    # quantize q per head
+    q_q, q_s = quantize_token(q.reshape(B, Hkv, G, d_head))    # [B,Hkv,G,Dh]
+    # s8 x s8 scores: [B,Hkv,G,Dh] . [B,S,Hkv,Dh] -> [B,Hkv,G,S]
+    s_i32 = jax.lax.dot_general(
+        q_q, ck, (((3,), (3,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.int32)                      # [B,Hkv,G,S]
+    scores = (s_i32.astype(jnp.float32)
+              * q_s[..., None]
+              * cks.transpose(0, 2, 1)[:, :, None, :])
+    scores = scores / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    slots = jnp.arange(S, dtype=jnp.int32)
+    written = slots[None, :] <= pos[:, None]
+    wrapped = pos[:, None] >= S
+    valid = written | wrapped
+    if extra_mask is not None:
+        valid = valid & extra_mask
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                    # [B,Hkv,G,S]
+    # fold v_scale into p, re-quantize, s8 x s8 attn_v
+    p_scaled = probs * cvs.transpose(0, 2, 1)[:, :, None, :]
+    p_q, p_s = quantize_token(p_scaled)                        # scale [B,Hkv,G]
+    ctx_i32 = jax.lax.dot_general(
+        p_q, cv, (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.int32)                      # [B,Hkv,G,Dh]
+    ctx = ctx_i32.astype(jnp.float32) * p_s[..., None]
+    ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+    new_cache = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+    return out, new_cache
+
+
+def attn_decode(params, x, cache_k, cache_v, pos, *, n_heads, n_kv_heads,
+                d_head, theta, window, softcap=0.0, qk_norm=False,
+                slot=None, extra_mask=None):
+    """One-token decode against a (possibly ring-buffer) KV cache.
+
+    x: [B, 1, d_model]; cache_k/v: [B, S, Hkv, Dh]; pos: scalar or [B] int32
+    (absolute position of the NEW token).  Returns (out [B,1,d], new_k, new_v).
+
+    ``slot`` optionally overrides the physical write index (serving engine
+    with right-padded prompts); ``extra_mask`` [B, S] marks additionally
+    invalid cache entries (e.g. prompt padding).
+
+    The cache sequence axis S may be sharded across the 'model' mesh axis;
+    the softmax over S then lowers to local GEMVs + tiny all-reduces
+    (flash-decode semantics via GSPMD).
+    """
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    pos_in = jnp.asarray(pos, jnp.int32)
+    pos = jnp.broadcast_to(pos_in, (B,))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           pos[:, None], theta, qk_norm)
+    # ring-buffer slot for the new entry: scalar -> dynamic_update_slice
+    # (dry-run / aligned batch), per-batch vector -> scatter (serving engine)
+    if slot is None:
+        slot = pos_in % S if pos_in.ndim == 0 else pos % S
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 0:
+        ck = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    else:
+        bidx = jnp.arange(B)
+        ck = cache_k.at[bidx, slot].set(k[:, 0])
+        cv = cache_v.at[bidx, slot].set(v[:, 0])
+    from repro.distributed.policy import constrain
+    ck = constrain(ck, "kv_bshd")
+    cv = constrain(cv, "kv_bshd")
+
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    qg = q.reshape(B, Hkv, G, d_head)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    # validity: slot s was written iff s <= pos (before wrap) else always.
+    slots = jnp.arange(S, dtype=jnp.int32)
+    written = slots[None, :] <= pos[:, None]
+    wrapped = pos[:, None] >= S
+    valid = written | wrapped
+    if extra_mask is not None:
+        valid = valid & extra_mask
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgs,bshd->bhgd", probs.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+    return out, ck, cv

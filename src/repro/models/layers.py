@@ -1,0 +1,158 @@
+"""Shared model-building primitives (pure functional JAX).
+
+All parameters are plain pytrees (nested dicts of jnp arrays).  Modules are
+(init, apply) function pairs; stacked variants (leading layer axis) are used
+with ``jax.lax.scan`` over homogeneous layer segments.
+
+Dtype policy: parameters are stored in ``param_dtype`` (bf16 for full configs,
+f32 for reduced smoke configs); matmuls accumulate in f32
+(``preferred_element_type``); norms/softmax always compute in f32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (llama-style)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (in_dim, out_dim), jnp.float32)
+    return (w * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    w = jax.random.normal(key, (vocab, dim), jnp.float32)
+    return (w * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5, *, gemma_style: bool = False):
+    """RMSNorm in f32.  gemma_style uses (1 + scale) parameterization."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if gemma_style:
+        scale = 1.0 + scale
+    return (xf * scale).astype(dt)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """Per-head RMSNorm over the last (head) dim — qwen3/gemma3 qk_norm."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta) -> jnp.ndarray:
+    """Inverse frequencies [dim//2] (f32).  ``theta`` may be traced."""
+    exponent = jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: [..., T, H, D] (or [..., T, D] with H folded); positions: broadcastable
+    to [..., T].  Rotates pairs (x[2i], x[2i+1]) — interleaved convention.
+    """
+    dt = x.dtype
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                   # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv         # [..., T, d/2]
+    # expand over the head axis: x is [..., T, H, D] -> ang [..., T, 1, d/2]
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def _act(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def ffn(params, x, act: str = "silu"):
+    from repro.distributed.policy import constrain
+    g = matmul(x, params["wi_gate"])
+    u = matmul(x, params["wi_up"])
+    h = _act(g, act) * u
+    if h.ndim == 3:
+        h = constrain(h, "act_btf")
+    return matmul(h.astype(x.dtype), params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# matmul with f32 accumulation
+# ---------------------------------------------------------------------------
+
+def matmul(x, w):
+    """x @ w with f32 accumulation, result cast back to x.dtype.
+
+    ``w`` may be an int8 weight-only-quantized dict {"q","scale"}
+    (serving/quantized_weights.py); the dequant fuses into the operand read
+    on TPU, so HBM/all-gather traffic is the int8 width.
+    """
+    from repro.distributed.policy import get_policy, replicate
+    pol = get_policy()
+    sp = pol is not None and pol.sp_enabled
+    if isinstance(w, dict) and "q" in w:
+        q, scale = w["q"], w["scale"]
+        if sp:
+            # gather the INT8 bytes, dequantize per chip (not vice versa)
+            q, scale = replicate(q), replicate(scale)
+        w = (q.astype(jnp.float32)
+             * scale.astype(jnp.float32)[..., None, :]).astype(x.dtype)
+    elif sp:
+        w = replicate(w)     # gather at the stored (bf16) width
+    out = jnp.einsum("...i,io->...o", x, w,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def softmax_f32(scores, axis: int = -1):
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)

@@ -1,0 +1,172 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Prefill materializes per-head K/V from the compressed latent (compute-bound
+GEMMs -> HALO's CiM path).  Decode uses the *absorbed* formulation: only the
+latent c_kv [B, S, r] and the shared rope-key [B, S, dr] are cached, and the
+per-head up-projections W_UK / W_UV are folded into the query / output sides.
+Per decoded token this is a pure GEMV sweep over the latent cache — exactly
+the memory-bound shape HALO maps to CiD.
+
+Cache layout: [B, S, r + dr] so the S axis can be sequence-sharded over the
+'model' mesh axis like the plain GQA cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.attention import NEG_INF, _maybe_softcap
+from repro.models.layers import apply_rope, dense_init, matmul, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, d_model: int, n_heads: int, m: MLAConfig, dtype):
+    ks = jax.random.split(key, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p: Dict[str, Any] = {}
+    if m.q_lora_rank > 0:
+        p["wq_a"] = dense_init(ks[0], d_model, m.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, n_heads * qk_dim, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d_model, n_heads * qk_dim, dtype)
+    # joint KV down-projection: latent r + shared rope key dr
+    p["wkv_a"] = dense_init(ks[2], d_model, m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_norm"] = rmsnorm_init(m.kv_lora_rank, dtype)
+    # up-projections kept per-head for absorption: [H, r, nope] / [H, r, v]
+    wkv_b = dense_init(
+        ks[3], m.kv_lora_rank,
+        n_heads * (m.qk_nope_head_dim + m.v_head_dim), dtype)
+    wkv_b = wkv_b.reshape(m.kv_lora_rank, n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    p["w_uk"] = wkv_b[:, :, : m.qk_nope_head_dim].transpose(1, 0, 2)  # [H, r, nope]
+    p["w_uv"] = wkv_b[:, :, m.qk_nope_head_dim:].transpose(1, 0, 2)   # [H, r, v]
+    p["wo"] = dense_init(ks[4], n_heads * m.v_head_dim, d_model, dtype)
+    return p
+
+
+def _queries(params, x, n_heads, m: MLAConfig, positions):
+    B, T, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if "wq_a" in params:
+        ql = matmul(x, params["wq_a"])
+        ql = rmsnorm(params["q_norm"], ql)
+        q = matmul(ql, params["wq_b"])
+    else:
+        q = matmul(x, params["wq"])
+    q = q.reshape(B, T, n_heads, qk_dim)
+    from repro.distributed.policy import constrain
+    q = constrain(q, "act_bthd")
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, theta=10000.0)
+    return q_nope, q_rope
+
+
+def _latent(params, x, m: MLAConfig, positions):
+    kv = matmul(x, params["wkv_a"])
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank])
+    k_rope = kv[..., m.kv_lora_rank:]                           # [B,T,dr]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta=10000.0)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_prefill(params, x, positions, *, n_heads, m: MLAConfig,
+                block_q: int = 512, pad_mask=None):
+    """Materialized prefill.  Returns out [B,T,d] and latent cache [B,T,r+dr]."""
+    B, T, _ = x.shape
+    q_nope, q_rope = _queries(params, x, n_heads, m, positions)
+    c_kv, k_rope = _latent(params, x, m, positions)
+    # materialize per-head K (nope) and V from the latent: GEMM (CiM path)
+    k_nope = jnp.einsum("btr,hrn->bthn", c_kv, params["w_uk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btr,hrn->bthn", c_kv, params["w_uv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # blockwise over query blocks to bound live memory at long T
+    nq = max(T // block_q, 1)
+    bq = T // nq
+    qn = q_nope.reshape(B, nq, bq, n_heads, m.qk_nope_head_dim)
+    qr = q_rope.reshape(B, nq, bq, n_heads, m.qk_rope_head_dim)
+    pq = positions.reshape(B, nq, bq)
+
+    def q_block_inner(qnb, qrb, pqb):
+        s = jnp.einsum("bqhn,bthn->bhqt", qnb, k_nope,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhr,btr->bhqt", qrb, k_rope,
+                        preferred_element_type=jnp.float32)
+        s *= scale
+        mask = positions[:, None, None, :] <= pqb[:, None, :, None]
+        if pad_mask is not None:
+            mask = mask & pad_mask[:, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqt,bthv->bqhv", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(x.dtype)
+
+    from repro.distributed.policy import get_policy
+    pol = get_policy()
+    if pol is not None and pol.sp_enabled:
+        # sequence-parallel: K/V stay replicated (they come whole from the
+        # latent), q blocks sharded over 'model' -> vmap keeps them local
+        outs = jax.vmap(q_block_inner)(
+            qn.swapaxes(0, 1), qr.swapaxes(0, 1), pq.swapaxes(0, 1))
+    else:
+        _, outs = jax.lax.scan(
+            lambda _, inp: (None, q_block_inner(*inp)), None,
+            (qn.swapaxes(0, 1), qr.swapaxes(0, 1), pq.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(B, T, n_heads * m.v_head_dim)
+    out = matmul(out, params["wo"])
+    cache = jnp.concatenate([c_kv, k_rope], axis=-1)            # [B,T,r+dr]
+    return out, cache
+
+
+def mla_decode(params, x, cache, pos, *, n_heads, m: MLAConfig,
+               slot=None, extra_mask=None):
+    """Absorbed decode: GEMV sweep over the latent cache (CiD path).
+
+    cache: [B, S, r+dr]; pos: scalar/[B] absolute position of the new token.
+    """
+    from repro.distributed.policy import constrain
+    B = x.shape[0]
+    S = cache.shape[1]
+    pos_in = jnp.asarray(pos, jnp.int32)
+    pos = jnp.broadcast_to(pos_in, (B,))
+    q_nope, q_rope = _queries(params, x, n_heads, m, pos[:, None])
+    c_new, kr_new = _latent(params, x, m, pos[:, None])
+    new_entry = jnp.concatenate([c_new, kr_new], axis=-1)       # [B,1,r+dr]
+    if slot is None:
+        slot = (jnp.minimum(pos_in, S - 1) if pos_in.ndim == 0
+                else jnp.minimum(pos, S - 1))
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 0:
+        cache = jax.lax.dynamic_update_slice(cache, new_entry, (0, slot, 0))
+    else:
+        cache = cache.at[jnp.arange(B), slot].set(new_entry[:, 0])
+    cache = constrain(cache, "latent_bsr")
+    c_kv = cache[..., : m.kv_lora_rank]                         # [B,S,r]
+    k_rope = cache[..., m.kv_lora_rank:]                        # [B,S,dr]
+    # absorb W_UK into q: q_lat [B,H,r]
+    q_lat = jnp.einsum("bqhn,hrn->bhr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bqhr,bsr->bhs", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None]
+    if extra_mask is not None:
+        valid = valid & extra_mask
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    # absorb W_UV on the output side
+    ctx = jnp.einsum("bhr,hrv->bhv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(B, 1, n_heads * m.v_head_dim), params["wo"])
+    return out, cache

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts FFN (sort-based dispatch with static capacity).
+
+Dispatch is MaxText-style sparse routing rather than GShard one-hot einsum:
+token->expert assignments are sorted, packed into a static [E, C, d] buffer
+(gather/scatter, NO S x E x C dispatch tensor), run through a batched expert
+GEMM, and unsorted.  FLOP cost is therefore ~top_k * capacity_factor * active
+FLOPs, which keeps the roofline's MODEL_FLOPS/HLO_FLOPS ratio honest.
+
+Supports: shared (always-on) experts fused into one wide FFN (DeepSeek-V2),
+a parallel dense-residual FFN (Arctic), and a switch-style load-balance aux
+loss.  The expert axis E is sharded over the 'model' mesh axis (EP); GSPMD
+inserts the all-to-all around the pack/unpack gathers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _act, dense_init, ffn, ffn_init, matmul
+
+
+def moe_init(key, d_model: int, m: MoEConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    E, ff = m.n_experts, m.d_ff_expert
+    scale = 1.0 / math.sqrt(d_model)
+    p: Dict[str, Any] = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32, scale=0.02),
+        "wi_gate": (jax.random.truncated_normal(ks[1], -3, 3, (E, d_model, ff),
+                                                jnp.float32) * scale).astype(dtype),
+        "wi_up": (jax.random.truncated_normal(ks[2], -3, 3, (E, d_model, ff),
+                                              jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.truncated_normal(ks[3], -3, 3, (E, ff, d_model),
+                                           jnp.float32)
+               / math.sqrt(ff)).astype(dtype),
+    }
+    if m.n_shared_experts > 0:
+        p["shared"] = ffn_init(ks[4], d_model, m.n_shared_experts * ff, dtype)
+    if m.dense_residual:
+        p["dense"] = ffn_init(ks[5], d_model, m.d_ff_dense, dtype)
+    return p
+
+
+def _route(params, x2d, m: MoEConfig):
+    """Router: softmax over experts then top-k (DeepSeek-V2 convention)."""
+    logits = jnp.einsum("sd,de->se", x2d.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [S,E]
+    weights, idx = jax.lax.top_k(probs, m.top_k)                # [S,K]
+    return probs, weights, idx
+
+
+def _aux_loss(probs, idx, E: int):
+    """Switch-transformer load-balance loss (f32 scalar)."""
+    S = probs.shape[0]
+    counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+def _capacity(S: int, K: int, E: int, cf: float) -> int:
+    """Static per-expert capacity.  A single expert can receive at most S
+    tokens (each token lists an expert once), so C = S is DROPLESS; small
+    token counts (decode steps, tiny smoke batches) use it outright —
+    dropping a decode token would silently corrupt generation."""
+    if S <= 256:
+        return S
+    C = int(math.ceil(S * K / E * cf))
+    C = max(8, -(-C // 8) * 8)                                  # round up to 8
+    return min(C, S)
+
+
+def _dispatch_ffn(params, x2d, weights, idx, m: MoEConfig, act: str, C: int):
+    """Sort-based pack -> expert GEMM -> unpack, over ONE token shard.
+
+    x2d [S, d]; weights/idx [S, K].  Returns out2d [S, d].  When vmapped
+    over a leading data-shard axis, every gather/sort/scatter here is
+    shard-LOCAL — the global version lowered to 120 GB cross-shard gathers
+    and all-reduces under GSPMD (EXPERIMENTS.md §Perf, deepseek train).
+    """
+    S, d = x2d.shape
+    K, E = m.top_k, m.n_experts
+    flat_e = idx.reshape(S * K)                                 # [SK]
+    order = jnp.argsort(flat_e)                                 # stable
+    sorted_e = flat_e[order]
+    sorted_tok = order // K                                     # source token
+    # position within expert = rank - first_rank_of_expert
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos_in_e = (jnp.arange(S * K, dtype=jnp.int32)
+                - starts[sorted_e].astype(jnp.int32))
+    keep = pos_in_e < C
+
+    # ---- pack into [E, C, d] ------------------------------------------------
+    from repro.distributed.policy import constrain
+    buf = jnp.zeros((E, C, d), x2d.dtype)
+    safe_pos = jnp.where(keep, pos_in_e, C - 1)
+    src = x2d[sorted_tok]                                       # gather [SK, d]
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[sorted_e, safe_pos].add(src, mode="drop")
+    # EP layout pin — works under vmap (the data-shard batch dim is inserted
+    # unconstrained); without it multi-pod propagation re-replicates the
+    # buffer across the pod axis (observed 3.3x collective inflation)
+    buf = constrain(buf, "moe_ecd")
+
+    # ---- batched expert FFN (the EP GEMM) -----------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"],
+                   preferred_element_type=jnp.float32)
+    h = (_act(g, act) * u).astype(x2d.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"],
+                         preferred_element_type=jnp.float32).astype(x2d.dtype)
+
+    # ---- unpack + weighted combine ------------------------------------------
+    gathered = out_buf[sorted_e, safe_pos]                      # [SK, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w_sorted = weights.reshape(S * K)[order].astype(x2d.dtype)
+    contrib = gathered * w_sorted[:, None]
+    return jnp.zeros((S, d), x2d.dtype).at[sorted_tok].add(contrib)
+
+
+def _dispatch_shards(x2d) -> int:
+    """Number of token shards for the local-dispatch path: the data-axis
+    size of the active sharding policy (1 = global dispatch)."""
+    from repro.distributed.policy import get_policy
+    p = get_policy()
+    if p is None or not p.shard_batch:
+        return 1
+    n = p._axis_size(p.batch_axes)
+    S = x2d.shape[0]
+    if n > 1 and S % n == 0 and S // n >= 8:
+        return n
+    return 1
+
+
+def moe_apply(params, x, m: MoEConfig, act: str = "silu",
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d] -> (out [B, T, d], aux_loss scalar).
+
+    Under a sharding policy, dispatch runs PER DATA SHARD (vmapped): the
+    sort/pack/unpack stays local to each shard, the packed buffer is laid
+    out [D, E, C_loc, d] -> P(data, model EP, -, -), and only the expert
+    GEMMs touch the network (FSDP weight all-gathers).  Local capacity is
+    C_loc = capacity(S/D), i.e. standard local-capacity MoE semantics.
+    """
+    from repro.distributed.policy import constrain
+
+    Bsz, T, d = x.shape
+    S = Bsz * T
+    K, E = m.top_k, m.n_experts
+    x2d = x.reshape(S, d)
+    probs, weights, idx = _route(params, x2d, m)
+    aux = _aux_loss(probs, idx, E)
+
+    D = _dispatch_shards(x2d)
+    if D == 1:
+        C = _capacity(S, K, E, m.capacity_factor)
+        buf_fn = lambda xs, ws, ix: _dispatch_ffn(params, xs, ws, ix, m,
+                                                  act, C)
+        out2d = buf_fn(x2d, weights, idx)
+    else:
+        S_loc = S // D
+        C = _capacity(S_loc, K, E, m.capacity_factor)
+        xs = constrain(x2d.reshape(D, S_loc, d), "moe_dsd")
+        ws = weights.reshape(D, S_loc, K)
+        ix = idx.reshape(D, S_loc, K)
+        out2d = jax.vmap(
+            lambda a, b, c: _dispatch_ffn(params, a, b, c, m, act, C)
+        )(xs, ws, ix)
+        out2d = constrain(out2d, "moe_dsd").reshape(S, d)
+
+    # ---- always-on paths -----------------------------------------------------
+    if "shared" in params:
+        out2d = out2d + ffn(params["shared"], x2d, act)
+    if "dense" in params:
+        out2d = out2d + ffn(params["dense"], x2d, act)
+    return out2d.reshape(Bsz, T, d), aux
+
+
+def moe_apply_reference(params, x, m: MoEConfig, act: str = "silu"):
+    """Dense oracle: loop over experts, no capacity drops.  Test-only."""
+    Bsz, T, d = x.shape
+    x2d = x.reshape(Bsz * T, d)
+    probs, weights, idx = _route(params, x2d, m)
+    out = jnp.zeros_like(x2d, dtype=jnp.float32)
+    for e in range(m.n_experts):
+        sel = (idx == e).astype(jnp.float32) * weights          # [S,K]
+        w_e = sel.sum(-1)                                       # [S]
+        g = x2d @ params["wi_gate"][e]
+        u = x2d @ params["wi_up"][e]
+        h = (_act(g.astype(jnp.float32), act) * u.astype(jnp.float32))
+        y = h.astype(x.dtype) @ params["wo"][e]
+        out = out + y.astype(jnp.float32) * w_e[:, None]
+    out = out.astype(x.dtype)
+    if "shared" in params:
+        out = out + ffn(params["shared"], x2d, act)
+    if "dense" in params:
+        out = out + ffn(params["dense"], x2d, act)
+    return out.reshape(Bsz, T, d), _aux_loss(probs, idx, m.n_experts)

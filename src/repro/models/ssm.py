@@ -1,0 +1,226 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Training / prefill uses the chunked SSD algorithm (matmul-dominated — the
+compute-bound phase HALO maps to CiM); decode uses the O(1)-per-token
+recurrent state update (pure elementwise/GEMV — HALO's CiD phase).  The
+recurrent state [B, H, P, N] replaces the KV cache and is constant in
+sequence length, which is why the SSM archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, matmul, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def ssm_init(key, d_model: int, s: SSMConfig, dtype) -> Params:
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh          # z, x, B, C, dt
+    p: Params = {
+        "in_proj": dense_init(ks[0], d_model, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        # A in (-exp) parameterization, init in [1, 16] like the reference
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, d_model, dtype),
+    }
+    return p
+
+
+def _split_proj(proj, d_model: int, s: SSMConfig):
+    di = s.d_inner(d_model)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :di]
+    x = proj[..., di: 2 * di]
+    Bm = proj[..., 2 * di: 2 * di + gn]
+    Cm = proj[..., 2 * di + gn: 2 * di + 2 * gn]
+    dt = proj[..., 2 * di + 2 * gn:]
+    return z, x, Bm, Cm, dt
+
+
+def _gated_out(params, y, z, eps=1e-5):
+    dt = y.dtype
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    gf = gf * jax.lax.rsqrt(var + eps) * params["norm_scale"].astype(jnp.float32)
+    return matmul(gf.astype(dt), params["out_proj"])
+
+
+def _causal_conv(xbc, conv_w, conv_b, d_conv: int):
+    """Depthwise causal conv along T.  xbc: [B,T,C]; conv_w: [K,C]."""
+    pad = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    T = xbc.shape[1]
+    for k in range(d_conv):                                     # K=4: unrolled
+        out = out + pad[:, k: k + T].astype(jnp.float32) * conv_w[k].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum(dA):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} dA[..., k] (j<i)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                  # [..., i, j]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, initial_state=None):
+    """Chunked SSD.  x:[B,T,H,P] dt:[B,T,H] A:[H] Bm/Cm:[B,T,G,N] D:[H].
+
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rep = H // G
+
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A[None, None, :]                                 # [B,T,H]
+    xb = (x.astype(jnp.float32) * dtf[..., None])               # dt-weighted input
+
+    # chunked views
+    xc = xb.reshape(Bsz, nc, chunk, H, P)
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, G, N)
+
+    dA_cs = jnp.cumsum(dAc, axis=2)                             # [B,nc,Q,H]
+    seg = _segsum(dAc.transpose(0, 1, 3, 2))                    # [B,nc,H,Q,Q]
+    L = jnp.exp(seg)
+
+    # intra-chunk (diagonal blocks): GEMMs
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)               # [B,nc,G,Q,Q]
+    CB = jnp.repeat(CB, rep, axis=2)                            # [B,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", CB * L, xc)
+
+    # per-chunk end states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)         # [B,nc,Q,H]
+    Brep = jnp.repeat(Bc, rep, axis=3)                          # [B,nc,Q,H,N]
+    S_chunk = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Brep, decay_to_end, xc)
+
+    # inter-chunk recurrence over nc states
+    chunk_decay = jnp.exp(jnp.sum(dAc, axis=2))                 # [B,nc,H]
+
+    def step(state, inp):
+        s_c, dec = inp                                          # [B,H,P,N], [B,H]
+        prev = state
+        state = state * dec[..., None, None] + s_c
+        return state, prev
+
+    init = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, init, (S_chunk.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                    # [B,nc,H,P,N]
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(dA_cs)                                # [B,nc,Q,H]
+    Crep = jnp.repeat(Cc, rep, axis=3)                          # [B,nc,Q,H,N]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Crep, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, T, H, P)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# block-level apply
+# ---------------------------------------------------------------------------
+
+def ssm_prefill(params, h, d_model: int, s: SSMConfig, pad_mask=None):
+    """Full-sequence SSD block.  h: [B,T,d_model] -> (out, (conv_state, ssm_state)).
+
+    ``pad_mask`` [B,T] (True = real token): pad positions contribute no state
+    update (their dt and x are zeroed, so exp(dt*A)=1 passes state through).
+    """
+    Bsz, T, _ = h.shape
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    proj = matmul(h, params["in_proj"])
+    z, x, Bm, Cm, dt = _split_proj(proj, d_model, s)
+    if pad_mask is not None:
+        pm = pad_mask[..., None].astype(x.dtype)
+        x = x * pm
+        dt = dt * pm
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_state = xbc[:, -(s.d_conv - 1):, :] if T >= s.d_conv - 1 else \
+        jnp.pad(xbc, ((0, 0), (s.d_conv - 1 - T, 0), (0, 0)))
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], s.d_conv)
+    gn = s.n_groups * s.d_state
+    from repro.distributed.policy import constrain
+    xbc = constrain(xbc, "act_btf")
+    x = xbc[..., :di].reshape(Bsz, T, nh, s.head_dim)
+    x = constrain(x, "act_bthd")
+    Bm = xbc[..., di: di + gn].reshape(Bsz, T, s.n_groups, s.d_state)
+    Cm = xbc[..., di + gn:].reshape(Bsz, T, s.n_groups, s.d_state)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, params["D"],
+                           min(s.chunk_size, T))
+    y = y.reshape(Bsz, T, di).astype(h.dtype)
+    out = _gated_out(params, y, z)
+    return out, (conv_state, state.astype(jnp.float32))
+
+
+def ssm_decode(params, h, conv_state, ssm_state, d_model: int, s: SSMConfig):
+    """Single-token recurrent update.
+
+    h: [B,1,d_model]; conv_state: [B, d_conv-1, conv_dim];
+    ssm_state: [B,H,P,N].  Returns (out, new_conv_state, new_ssm_state).
+    """
+    Bsz = h.shape[0]
+    di = s.d_inner(d_model)
+    nh = s.n_heads(d_model)
+    gn = s.n_groups * s.d_state
+    proj = matmul(h, params["in_proj"])[:, 0]                   # [B, in_dim]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_model, s)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)                 # [B, conv_dim]
+    # causal conv via the rolling state
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [B,K,C]
+    new_conv_state = window[:, 1:, :]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    x = conv_out[:, :di].reshape(Bsz, nh, s.head_dim)
+    Bv = conv_out[:, di: di + gn].reshape(Bsz, s.n_groups, s.d_state)
+    Cv = conv_out[:, di + gn:].reshape(Bsz, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bv = jnp.repeat(Bv, rep, axis=1)                            # [B,H,N]
+    Cv = jnp.repeat(Cv, rep, axis=1)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    dA = jnp.exp(dt * A[None, :])                               # [B,H]
+    # state update: s = s*dA + dt * x ⊗ B   (elementwise + outer product)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Bv)
+    new_state = ssm_state * dA[..., None, None] + upd
+    # y = C · s + D * x     (GEMV over N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cv)
+    y = y + x * params["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(h.dtype)
+    out = _gated_out(params, y, z[:, None, :])
+    return out, new_conv_state, new_state

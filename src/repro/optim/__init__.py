@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd_momentum,
+    make_optimizer,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    wsd_schedule,
+    make_schedule,
+)
+from repro.optim.grad_utils import (
+    clip_by_global_norm,
+    global_norm,
+    compress_int8,
+    decompress_int8,
+)
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "sgd_momentum", "make_optimizer",
+    "constant_schedule", "cosine_schedule", "wsd_schedule", "make_schedule",
+    "clip_by_global_norm", "global_norm", "compress_int8", "decompress_int8",
+]

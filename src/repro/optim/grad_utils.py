@@ -1,0 +1,75 @@
+"""Gradient utilities: global-norm clipping and int8 gradient compression.
+
+Compression is the distributed-optimization trick used by the cross-pod
+data-parallel axis: gradients are quantized to int8 blocks with per-block f32
+scales before the "pod" all-reduce (4x fewer inter-pod bytes), with an
+error-feedback buffer so the quantization error is re-injected next step
+(1-bit-Adam-style convergence guarantee).  Intra-pod reduce-scatters stay in
+full precision — only the slow pod axis pays the quantization.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+BLOCK = 2048  # quantization block (elements) — per-block scale
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def _pad_to_block(flat: jnp.ndarray) -> jnp.ndarray:
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def compress_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape) -> (int8 codes [Nb, BLOCK], f32 scales [Nb]).
+
+    Symmetric per-block quantization; exactly invertible metadata.
+    """
+    flat = _pad_to_block(x.astype(jnp.float32).reshape(-1))
+    blocks = flat.reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype
+                    ) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_with_feedback(grad: jnp.ndarray, error: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compression: returns (codes, scales, new_error).
+
+    new_error = (grad + error) - dequant(quant(grad + error)); callers carry
+    it to the next step so the bias introduced by quantization is corrected.
+    """
+    corrected = grad.astype(jnp.float32) + error
+    q, s = compress_int8(corrected)
+    deq = decompress_int8(q, s, grad.shape, jnp.float32)
+    return q, s, corrected - deq

@@ -1,0 +1,190 @@
+"""Optimizers as (init, update) pairs over arbitrary param pytrees.
+
+State dtype is configurable: ``state_dtype="bfloat16"`` halves optimizer
+memory (used by the largest assigned MoE configs, where f32 Adam state would
+not fit the 16 GB/chip budget at 256 chips — see DESIGN.md §Memory).
+``adafactor`` factors the second moment into row/col statistics for >=2D
+params (Shazeer & Stern, 2018), cutting state to ~1 byte/param — the default
+for arctic-480b.
+
+Update rules are pure pytree maps, so the optimizer state inherits the
+parameter sharding (FSDP x TP) with no extra code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jnp.ndarray], Tuple[Pytree, Pytree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _cast(x, dtype):
+    return x.astype(dtype) if dtype is not None else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(schedule: Schedule, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype: str = "float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / c1
+            vhat = vf / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:                      # decay matrices only
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step_
+            return new_p.astype(p.dtype), mf.astype(sdt), vf.astype(sdt)
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t3: t3[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t3: t3[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t3: t3[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; beta1 optional)
+# ---------------------------------------------------------------------------
+
+def adafactor(schedule: Schedule, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              momentum_dtype: Optional[str] = None) -> Optimizer:
+    """Factored Adam: for >=2D params the second moment is stored as row/col
+    means (O(n+m) instead of O(nm)); <2D params keep a full ``v``.
+    ``momentum_dtype`` enables optional first-moment accumulation."""
+    mdt = jnp.dtype(momentum_dtype) if momentum_dtype else None
+
+    def init(params):
+        def v_init(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        st = {"v": jax.tree.map(v_init, params)}
+        if mdt is not None:
+            st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+        return st
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - jnp.power(t, -decay)
+
+        def upd(g, v, p, m=None):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of v
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(denom[..., None], eps))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": vhat}
+            u = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+            # relative update clipping (adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if m is not None:
+                mf = 0.9 * m.astype(jnp.float32) + 0.1 * u
+                u, new_m = mf, mf.astype(mdt)
+            else:
+                new_m = None
+            if p.ndim >= 2 and weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, new_v, new_m
+
+        # tree.map over multiple trees with dict-leaves needs explicit zip:
+        g_leaves, treedef = jax.tree.flatten(grads)
+        v_leaves = treedef.flatten_up_to(state["v"])
+        p_leaves = jax.tree.leaves(params)
+        m_leaves = (jax.tree.leaves(state["m"]) if mdt is not None
+                    else [None] * len(g_leaves))
+        trip = [upd(g, v, p, m) for g, v, p, m
+                in zip(g_leaves, v_leaves, p_leaves, m_leaves)]
+        new_p = jax.tree.unflatten(treedef, [t3[0] for t3 in trip])
+        new_v = jax.tree.unflatten(treedef, [t3[1] for t3 in trip])
+        new_state = {"v": new_v}
+        if mdt is not None:
+            new_state["m"] = jax.tree.unflatten(treedef, [t3[2] for t3 in trip])
+        return new_p, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (baseline / tests)
+# ---------------------------------------------------------------------------
+
+def sgd_momentum(schedule: Schedule, *, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+
+        def upd(g, m, p):
+            mf = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * mf).astype(p.dtype), mf
+
+        pairs = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda t2: t2[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t2: t2[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m}
+
+    return Optimizer("sgd", init, update)
+
+
+def make_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    if name == "sgd":
+        return sgd_momentum(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

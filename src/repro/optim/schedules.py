@@ -1,0 +1,60 @@
+"""Learning-rate schedules (pure functions of an int32 step).
+
+``wsd_schedule`` is the MiniCPM Warmup-Stable-Decay schedule — one of the
+assigned architectures' own training recipes (arXiv:2404.06395): linear
+warmup, a long constant plateau, then a short exponential-ish decay tail.
+All schedules are jit-safe (branchless ``jnp.where`` selection).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup_steps: int = 0,
+                    final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * lr``."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup_steps: int = 0,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM).  Stable at ``lr`` until the last
+    ``decay_frac`` of training, then exponential decay to ``final_frac*lr``."""
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    decay_start = total_steps - decay_steps
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+        decay = lr * jnp.power(final_frac, t)      # exp interp lr -> final
+        out = jnp.where(s < warmup_steps, warm,
+                        jnp.where(s < decay_start, lr, decay))
+        return out.astype(jnp.float32)
+    return f
+
+
+def make_schedule(name: str, lr: float, total_steps: int,
+                  warmup_steps: int = 0):
+    if name == "constant":
+        return constant_schedule(lr)
+    if name == "cosine":
+        return cosine_schedule(lr, total_steps, warmup_steps)
+    if name == "wsd":
+        return wsd_schedule(lr, total_steps, warmup_steps)
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,14 @@
+from repro.runtime.fault_tolerance import (
+    WorkerState,
+    ClusterMonitor,
+    RestartPolicy,
+    StragglerMitigator,
+    ElasticPlan,
+    plan_elastic_rescale,
+)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "WorkerState", "ClusterMonitor", "RestartPolicy", "StragglerMitigator",
+    "ElasticPlan", "plan_elastic_rescale", "Trainer", "TrainerConfig",
+]

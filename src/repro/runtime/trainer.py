@@ -1,0 +1,134 @@
+"""Trainer: the fault-tolerant training loop.
+
+Single-process version of the per-host agent: steps the jitted train_step,
+heartbeats the monitor, checkpoints on schedule, restores-or-initializes on
+start, and applies the restart policy when failures are injected (tests) or
+detected (deployment).  The same loop runs the CPU examples (tiny configs,
+mesh=None) and the full pods (mesh + shardings from distributed/).
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, ShardedLoader, make_loader
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim.optimizers import Optimizer
+from repro.runtime.fault_tolerance import (
+    Action,
+    ClusterMonitor,
+    RestartPolicy,
+    StragglerMitigator,
+)
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3
+    async_checkpoint: bool = True
+    log_every: int = 10
+    n_microbatches: int = 1
+    clip_norm: float = 1.0
+    seed: int = 0
+    remat: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, optimizer: Optimizer,
+                 data_cfg: DataConfig, tc: TrainerConfig,
+                 *, mesh=None, state_shardings=None, batch_shardings=None,
+                 loader: Optional[ShardedLoader] = None):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.tc = tc
+        self.mesh = mesh
+        self.loader = loader or make_loader(data_cfg)
+        self.ckpt = (CheckpointManager(tc.checkpoint_dir,
+                                       keep=tc.checkpoint_keep)
+                     if tc.checkpoint_dir else None)
+        self.monitor = ClusterMonitor(1)
+        self.policy = RestartPolicy(1)
+        self.straggler = StragglerMitigator(1)
+        step_fn = make_train_step(cfg, optimizer,
+                                  n_microbatches=tc.n_microbatches,
+                                  clip_norm=tc.clip_norm, remat=tc.remat)
+        jit_kw: Dict[str, Any] = {"donate_argnums": (0,)}
+        if state_shardings is not None:
+            jit_kw["in_shardings"] = (state_shardings, batch_shardings)
+            jit_kw["out_shardings"] = (state_shardings, None)
+        self.train_step = jax.jit(step_fn, **jit_kw)
+        self.state = None
+        self.history: list = []
+
+    # -- lifecycle -----------------------------------------------------------
+    def init_or_restore(self) -> int:
+        """Returns the step to resume from (0 for fresh runs)."""
+        key = jax.random.PRNGKey(self.tc.seed)
+        self.state = init_train_state(key, self.cfg, self.optimizer)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            step = self.ckpt.latest_step()
+            self.state = self.ckpt.restore(self.state)
+            extra = self.ckpt.restore_extra()
+            self.loader.load_state_dict(
+                extra.get("loader", {"step": step}))
+            log.info("restored checkpoint at step %d", step)
+            return int(step)
+        return 0
+
+    def save(self, step: int) -> None:
+        if not self.ckpt:
+            return
+        self.ckpt.save(step, self.state,
+                       blocking=not self.tc.async_checkpoint,
+                       extra={"loader": self.loader.state_dict()})
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, on_step: Optional[Callable[[int, Dict], None]] = None
+            ) -> Dict[str, Any]:
+        start = self.init_or_restore()
+        t_last = time.monotonic()
+        for step in range(start, self.tc.total_steps):
+            batch = self.loader.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if self.mesh is not None:
+                with self.mesh:
+                    self.state, metrics = self.train_step(self.state, batch)
+            else:
+                self.state, metrics = self.train_step(self.state, batch)
+            self.monitor.heartbeat(0)
+            dead = self.monitor.sweep()
+            action = self.policy.decide(dead, len(self.monitor.healthy()))
+            if action == Action.ABORT:
+                raise RuntimeError("cluster below quorum")
+            now = time.monotonic()
+            self.straggler.record_step({0: now - t_last})
+            t_last = now
+            m = {k: float(v) for k, v in metrics.items()}
+            self.history.append(m)
+            if on_step:
+                on_step(step, m)
+            if self.tc.log_every and step % self.tc.log_every == 0:
+                log.info("step %d loss %.4f grad_norm %.3f",
+                         step, m["loss"], m["grad_norm"])
+            if (self.tc.checkpoint_every
+                    and (step + 1) % self.tc.checkpoint_every == 0):
+                self.save(step + 1)
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"final_loss": self.history[-1]["loss"] if self.history
+                else float("nan"),
+                "steps_run": len(self.history)}

@@ -1,0 +1,10 @@
+from repro.serving.engine import (
+    Request,
+    RequestState,
+    ServeConfig,
+    ServingEngine,
+)
+from repro.serving.scheduler import PhaseScheduler, PhaseAwareConfig
+
+__all__ = ["Request", "RequestState", "ServeConfig", "ServingEngine",
+           "PhaseScheduler", "PhaseAwareConfig"]

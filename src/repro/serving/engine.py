@@ -1,0 +1,266 @@
+"""Serving engine: continuous batching with phase-disaggregated execution.
+
+The engine owns two jitted programs over the SAME weights:
+
+  * ``prefill_fn``  — full-sequence forward returning (last_logits, cache);
+    on the production mesh this is the compute-sharded program (HALO: CiM);
+  * ``decode_fn``   — one-token step against the batched KV cache;
+    bandwidth-sharded (HALO: CiD).
+
+Requests flow: queue -> (chunked) prefill -> KV handoff into a decode slot
+-> continuous decode until EOS/max_tokens -> slot freed and refilled.  The
+decode cache is a fixed [max_batch, max_len] arena; per-slot write indices
+and validity masks implement right-aligned ragged batching (a slot's prompt
+occupies positions [0, plen); generation continues at plen, plen+1, ...).
+
+This is a single-host engine; launch/serve.py instantiates it either on the
+host CPU (examples, tests) or under the production mesh with the decode
+shardings from distributed/sharding.py.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (
+    build_plan,
+    cache_len,
+    forward,
+    init_cache,
+)
+from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler
+
+
+class RequestState(Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                  # [T] int32 (or [K, T])
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    state: RequestState = RequestState.WAITING
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    prompt_len: int = 0
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot(self) -> float:
+        n = max(len(self.generated) - 1, 1)
+        return (self.t_done - self.t_first_token) / n
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    phase: PhaseAwareConfig = field(default_factory=PhaseAwareConfig)
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
+                 *, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.mesh = mesh
+        self.scheduler = PhaseScheduler(sc.phase)
+        B, S = sc.max_batch, sc.max_len
+        self.cache = init_cache(cfg, B, S)
+        self.slot_pos = np.full((B,), -1, np.int64)     # next write position
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._next_id = 0
+
+        # jitted programs (separate = phase-disaggregation; they would live
+        # on different worker groups on a real cluster)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- jitted bodies --------------------------------------------------------
+    def _prefill_impl(self, params, tokens, positions, pad_mask):
+        """tokens [1, T_pad]; returns (last_logits [1, ...], cache pieces)."""
+        logits, cache, _ = forward(params, self.cfg,
+                                   {"tokens": tokens}, phase="prefill")
+        return logits, cache
+
+    def _decode_impl(self, params, tokens, cache, pos, slot_mask):
+        logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
+                                       phase="decode", cache=cache, pos=pos)
+        # frozen slots keep their old cache (mask out writes of idle slots).
+        # attn caches are [L, B, ...] (batch at axis 1); shared_attn caches
+        # are [B, ...] (batch leading) — pick the axis whose size matches.
+        B = slot_mask.shape[0]
+
+        def merge(old, new):
+            ax = 1 if (old.ndim >= 2 and old.shape[1] == B) else 0
+            shape = [1] * old.ndim
+            shape[ax] = B
+            b = slot_mask.reshape(shape)
+            return jnp.where(b, new, old)
+
+        merged = jax.tree.map(merge, cache, new_cache)
+        return logits, merged
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._next_id, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id)
+        req.prompt_len = int(req.prompt.shape[-1])
+        req.t_submit = time.monotonic()
+        self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> List[Request]:
+        admitted = []
+        free = self._free_slots()
+        while free and self.queue:
+            req = self.queue.pop(0)
+            slot = free.pop(0)
+            req.slot = slot
+            req.state = RequestState.PREFILLING
+            self.slot_req[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def _run_prefill(self, req: Request) -> None:
+        """Prefill one request and splice its KV into the decode arena.
+
+        The splice IS the HALO handoff: on a disaggregated deployment the
+        prefill group computes the cache and ships it to the decode group.
+        """
+        T = req.prompt_len
+        tokens = jnp.asarray(req.prompt[None], jnp.int32)
+        if tokens.ndim == 3:
+            pass                                         # [1, K, T] musicgen
+        logits, cache = self._prefill(
+            self.params, tokens,
+            jnp.arange(T, dtype=jnp.int32)[None],
+            jnp.ones((1, T), jnp.bool_))
+        self._splice_cache(req.slot, cache, T)
+        self.slot_pos[req.slot] = T
+        tok = int(jnp.argmax(logits[0, -1], -1).reshape(-1)[0])
+        req.generated.append(tok)
+        req.t_first_token = time.monotonic()
+        req.state = RequestState.DECODING
+        if self._finished(req):
+            self._retire(req)
+
+    def _splice_cache(self, slot: int, new_cache, T: int) -> None:
+        """Copy a single-request prefill cache into arena slot ``slot``."""
+        plan = build_plan(self.cfg)
+        S = self.sc.max_len
+        out = []
+        for run, arena, piece in zip(plan, self.cache, new_cache):
+            if run.kind == "ssm":
+                upd = {k: arena[k].at[:, slot:slot + 1].set(piece[k])
+                       for k in arena}
+                out.append(upd)
+                continue
+            d: Dict[str, Any] = {}
+            for k in arena:
+                a, p = arena[k], piece[k]
+                # attn caches: [L, B, S, ...] (batch=1, seq=2);
+                # shared_attn:  [B, S, ...]   (batch=0, seq=1)
+                b_ax, ax = (1, 2) if run.kind == "attn" else (0, 1)
+                Sa = a.shape[ax]
+                pl = min(p.shape[ax], Sa)
+                sl_a = [slice(None)] * a.ndim
+                sl_p = [slice(None)] * p.ndim
+                sl_a[b_ax] = slice(slot, slot + 1)
+                sl_a[ax] = slice(0, pl)
+                sl_p[b_ax] = slice(0, 1)
+                sl_p[ax] = slice(p.shape[ax] - pl, p.shape[ax])
+                d[k] = a.at[tuple(sl_a)].set(p[tuple(sl_p)])
+            out.append(d)
+        self.cache = out
+
+    def _finished(self, req: Request) -> bool:
+        if len(req.generated) >= req.max_new_tokens:
+            return True
+        if (req.eos_id is not None and req.generated
+                and req.generated[-1] == req.eos_id):
+            return True
+        if self.slot_pos[req.slot] >= self.sc.max_len - 1:
+            return True
+        return False
+
+    def _retire(self, req: Request) -> None:
+        req.state = RequestState.DONE
+        req.t_done = time.monotonic()
+        self.slot_req[req.slot] = None
+        self.slot_pos[req.slot] = -1
+        self.done.append(req)
+
+    def _run_decode_tick(self) -> None:
+        active = [r for r in self.slot_req if r is not None
+                  and r.state == RequestState.DECODING]
+        if not active:
+            return
+        B = self.sc.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        mask = np.zeros((B,), bool)
+        for r in active:
+            tokens[r.slot, 0] = r.generated[-1]
+            mask[r.slot] = True
+        # ragged decode: per-slot positions (vector pos -> per-slot rope,
+        # per-slot cache write index, per-slot validity mask)
+        pos = np.where(self.slot_pos >= 0, self.slot_pos, 0).astype(np.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(pos), jnp.asarray(mask))
+        for r in active:
+            tok = int(jnp.argmax(logits[r.slot, -1], -1).reshape(-1)[0])
+            r.generated.append(tok)
+            self.slot_pos[r.slot] += 1
+            if self._finished(r):
+                self._retire(r)
+
+    def step(self) -> Dict[str, int]:
+        """One engine tick: admit -> prefill -> decode (continuous batching)."""
+        admitted = self._admit()
+        waiting = [(r.req_id, r.prompt_len) for r in admitted]
+        decoding = [r.req_id for r in self.slot_req
+                    if r is not None and r.state == RequestState.DECODING]
+        plan = self.scheduler.plan_tick(waiting, decoding)
+        for r in admitted:
+            self._run_prefill(r)
+        self._run_decode_tick()
+        return {"queued": len(self.queue),
+                "active": sum(r is not None for r in self.slot_req),
+                "done": len(self.done)}
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

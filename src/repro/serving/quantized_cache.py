@@ -1,0 +1,73 @@
+"""int8 KV-cache — the paper-faithful decode memory format.
+
+HALO's CiD computes int8 END TO END (Section IV-A: 32 8-bit multipliers per
+bank; Section V-A synthesizes 8-bit MACs).  The TPU analogue halves the
+decode-phase HBM traffic, which IS the TPOT bound: KV/latent caches are
+stored int8 with one f32 scale per (layer, position, kv-head), dequantized
+in-register inside the attention sweep.
+
+Storage layout mirrors init_cache:
+  attn  {"k": int8 [L,B,S,Hkv,Dh], "k_scale": f32 [L,B,S,Hkv], same for v}
+  mla   {"latent": int8 [L,B,S,r+dr], "latent_scale": f32 [L,B,S]}
+  ssm   unquantized (the recurrent state is tiny and f32-sensitive)
+
+Scales are per-token so a ring-buffer / scatter update stays one-slot local.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import build_plan, cache_len
+
+
+def quantize_token(x, axis: int = -1):
+    """Symmetric int8 per-vector quantization along ``axis``.
+    Returns (q int8, scale f32 with ``axis`` removed)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.expand_dims(scale, axis)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, axis: int = -1):
+    return q.astype(jnp.float32) * jnp.expand_dims(
+        scale.astype(jnp.float32), axis)
+
+
+def init_quantized_cache(cfg: ModelConfig, batch: int, seq_len: int
+                         ) -> List[Any]:
+    """int8 arena mirroring init_cache (zeros)."""
+    caches: List[Any] = []
+    for run in build_plan(cfg):
+        if run.kind == "attn" and cfg.mla.enabled:
+            # MLA latents are already 4-9x smaller than GQA KV (the paper's
+            # DeepSeek-V2 cell) and rmsnorm-sensitive: kept full precision.
+            from repro.models.transformer import init_cache as _ic
+            caches.append(_ic(cfg, batch, seq_len)[len(caches)])
+        elif run.kind == "attn":
+            S = cache_len(run, seq_len)
+            shape = (run.n_layers, batch, S, cfg.n_kv_heads, cfg.d_head)
+            sshape = (run.n_layers, batch, S, cfg.n_kv_heads)
+            caches.append({
+                "k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32),
+            })
+        else:
+            from repro.models.transformer import init_cache as _ic
+            # ssm / shared_attn: reuse the full-precision layout
+            full = _ic(cfg, batch, seq_len)
+            caches.append(full[len(caches)])
+    return caches
+
+
+def quantized_cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_quantized_cache(cfg, batch, seq_len))

@@ -1,0 +1,87 @@
+"""Phase-aware scheduling: HALO's mapping strategy as a serving policy.
+
+HALO's core contribution is that prefill and decode want DIFFERENT hardware
+(CiM for compute-bound GEMMs, CiD for memory-bound GEMVs) and a phase-aware
+mapper that routes each phase to its engine.  The TPU-cluster analogue is
+PHASE DISAGGREGATION: a prefill worker group runs the compute-optimized
+program (flash GEMM kernels, TP-heavy sharding, big batch-of-tokens), a
+decode worker group runs the bandwidth-optimized program (int8 weight
+streaming GEMVs, sequence-sharded KV caches), and finished prefills hand
+their KV cache across (HALO's 2.5D interposer hop = the ICI/DCN transfer).
+
+The scheduler below decides, per request and per tick, which group works on
+what — mirroring Table II of the paper:
+
+  halo      prefill -> prefill-group, decode -> decode-group (phase-aware)
+  cent      everything on the decode-style group (fully CiD analogue)
+  attacc    attention on the decode group, the rest on the prefill group —
+            modeled at whole-phase granularity as: decode runs on the
+            prefill-group program except attention-dominated steps.
+
+It also implements continuous batching (decode slots freed by finished
+requests are refilled immediately) and chunked prefill (long prompts are
+processed in chunks so decode ticks interleave — TTFT/TPOT trade-off).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class PhaseAwareConfig:
+    strategy: str = "halo"             # halo | cent | attacc
+    max_decode_batch: int = 8          # decode slots (continuous batching)
+    max_prefill_tokens: int = 8192     # per prefill tick (chunked prefill)
+    prefill_chunk: int = 2048
+
+
+@dataclass
+class TickPlan:
+    prefill_reqs: List[int] = field(default_factory=list)   # request ids
+    decode_reqs: List[int] = field(default_factory=list)
+    # which worker group executes each phase this tick
+    prefill_group: str = "prefill"
+    decode_group: str = "decode"
+
+
+class PhaseScheduler:
+    """Pure decision logic (no jax) — unit-testable."""
+
+    def __init__(self, cfg: PhaseAwareConfig):
+        self.cfg = cfg
+
+    def groups_for(self) -> Tuple[str, str]:
+        s = self.cfg.strategy
+        if s == "halo":
+            return "prefill", "decode"
+        if s == "cent":                 # everything on the CiD-analogue
+            return "decode", "decode"
+        if s == "attacc":               # decode mostly on the CiM-analogue
+            return "prefill", "prefill"
+        raise ValueError(s)
+
+    def plan_tick(self, waiting: List[Tuple[int, int]],
+                  decoding: List[int]) -> TickPlan:
+        """waiting: [(req_id, remaining_prompt_tokens)]; decoding: [req_id].
+
+        Greedy: fill decode slots first (latency), then admit prefill work
+        up to the token budget (chunked).
+        """
+        pg, dg = self.groups_for()
+        plan = TickPlan(prefill_group=pg, decode_group=dg)
+        plan.decode_reqs = decoding[: self.cfg.max_decode_batch]
+        budget = self.cfg.max_prefill_tokens
+        free_slots = self.cfg.max_decode_batch - len(plan.decode_reqs)
+        for rid, remaining in waiting:
+            if free_slots <= 0 and budget <= 0:
+                break
+            take = min(remaining, self.cfg.prefill_chunk, max(budget, 0))
+            if take <= 0:
+                break
+            plan.prefill_reqs.append(rid)
+            budget -= take
+            if take >= remaining:
+                free_slots -= 1        # request becomes a decode occupant
+        return plan

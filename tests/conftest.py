@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and kernels must see the single real CPU device; ONLY the
+# dedicated sharded tests spawn subprocesses with a forced device count.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,177 @@
+"""HLO static analyzer: validated against programs with KNOWN flop counts.
+
+The critical property: lax.scan bodies must be multiplied by their trip
+count (XLA's own cost_analysis counts them once — the reason this analyzer
+exists).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_stack_tables
+from repro.launch.roofline import (
+    COLLECTIVE_WEIGHT,
+    PEAK_FLOPS,
+    Roofline,
+    model_flops_for,
+    parse_collectives,
+)
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops_exact():
+    M, K, N = 128, 256, 64
+    x = jnp.ones((M, K), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    text = compile_text(lambda a, b: a @ b, x, w)
+    hs = analyze_hlo(text)
+    assert hs.flops == 2 * M * K * N
+
+
+def test_scan_multiplies_flops_by_trip_count():
+    """10-iteration scan of a matmul must count 10x the single-dot flops."""
+    M = 64
+    x = jnp.ones((M, M), jnp.float32)
+    ws = jnp.ones((10, M, M), jnp.float32)
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    text = compile_text(f, x, ws)
+    hs = analyze_hlo(text)
+    want = 10 * 2 * M * M * M
+    assert hs.flops == pytest.approx(want, rel=0.01), (hs.flops, want)
+
+
+def test_nested_scan_trip_counts_compose():
+    M = 32
+    x = jnp.ones((M, M), jnp.float32)
+    ws = jnp.ones((4, 3, M, M), jnp.float32)
+
+    def f(x, ws):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, wrow)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out
+
+    text = compile_text(f, x, ws)
+    hs = analyze_hlo(text)
+    want = 12 * 2 * M ** 3
+    assert hs.flops == pytest.approx(want, rel=0.01)
+
+
+def test_batched_dot_flops():
+    B, M, K, N = 4, 32, 64, 16
+    a = jnp.ones((B, M, K), jnp.float32)
+    b = jnp.ones((B, K, N), jnp.float32)
+    text = compile_text(
+        lambda a, b: jnp.einsum("bmk,bkn->bmn", a, b), a, b)
+    hs = analyze_hlo(text)
+    assert hs.flops == 2 * B * M * K * N
+
+
+def test_grad_flops_about_3x_forward():
+    M = 64
+    x = jnp.ones((M, M), jnp.float32)
+    w = jnp.ones((M, M), jnp.float32)
+
+    fwd_text = compile_text(lambda w: jnp.sum(x @ w), w)
+    grad_text = compile_text(jax.grad(lambda w: jnp.sum(x @ w)), w)
+    f_fwd = analyze_hlo(fwd_text).flops
+    f_grad = analyze_hlo(grad_text).flops
+    # d(loss)/dw = x^T @ dy : one extra matmul (dy is rank-1 broadcast here,
+    # so grad-of-matmul costs 1 dot); ratio in [1, 3]
+    assert f_fwd > 0 and f_grad >= f_fwd * 0.99
+
+
+def test_hbm_bytes_counts_dot_streams():
+    M, K, N = 128, 256, 64
+    x = jnp.ones((M, K), jnp.float32)
+    w = jnp.ones((K, N), jnp.float32)
+    text = compile_text(lambda a, b: a @ b, x, w)
+    hs = analyze_hlo(text)
+    want = 4 * (M * K + K * N + M * N)       # operands + result, f32
+    # + entry params counted once more (read-once charge)
+    assert hs.hbm_bytes >= want
+    assert hs.hbm_bytes <= 2.5 * want
+
+
+def test_stack_tables_parse():
+    def f(x):
+        return jnp.sin(x) @ x
+
+    text = compile_text(f, jnp.ones((8, 8)))
+    frames = parse_stack_tables(text)
+    all_fns = set()
+    for s in frames.values():
+        all_fns |= s
+    # our lambda's enclosing function name must appear
+    assert any("f" == fn or fn.endswith(".f") for fn in all_fns) or all_fns
+
+
+# ---------------------------------------------------------------------------
+# collective parsing (synthetic HLO lines)
+# ---------------------------------------------------------------------------
+
+
+SYNTH = """
+HloModule test
+ENTRY %main (p0: f32[256,128]) -> f32[256,128] {
+  %p0 = f32[256,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[256,128]{1,0} all-reduce(%ag), to_apply=%add
+  %rs = f32[16,128]{1,0} reduce-scatter(%ar), dimensions={0}
+  ROOT %cp = f32[256,128]{1,0} collective-permute(%ar)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(SYNTH)
+    b = 256 * 128 * 4
+    assert st.bytes_by_kind["all-gather"] == b
+    assert st.bytes_by_kind["all-reduce"] == b
+    assert st.bytes_by_kind["reduce-scatter"] == 16 * 128 * 4
+    assert st.bytes_by_kind["collective-permute"] == b
+    # ring model: AR weighted 2x
+    assert st.weighted_bytes == 2 * b + b + 16 * 128 * 4 + b
+
+
+# ---------------------------------------------------------------------------
+# roofline dataclass
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+                 model_flops=197e12 * 256, n_chips=256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_frac == pytest.approx(1.0)
+    assert r.roofline_frac == pytest.approx(0.5)   # useful time / bound
+
+
+def test_model_flops_for_decode_includes_kv():
+    from repro.configs.base import get_config
+
+    cfg = get_config("qwen3-1.7b")
+    base = 2.0 * cfg.active_param_count() * 128
+    got = model_flops_for(cfg, "decode", 32768, 128)
+    assert got > base                      # + attention over the cache
+    # SSM archs: no KV attention term
+    m = get_config("mamba2-2.7b")
+    got_m = model_flops_for(m, "decode", 32768, 128)
+    assert got_m == pytest.approx(2.0 * m.active_param_count() * 128)

@@ -1,0 +1,164 @@
+"""Every quantitative claim in the paper, asserted against the analytical
+HALO model (the reproduction gate).  Tolerances are ±25% on geometric-mean
+ratios — the paper publishes gmeans over (L_in, L_out) grids whose exact
+points are only partially specified, so exact equality is not expected;
+what must hold is each claim's magnitude and direction.
+
+Paper sources: Fig.5 (TTFT/energy fully-CiD vs fully-CiM), Fig.6 (TPOT/
+energy), Fig.7 (end-to-end + phase split vs CENT/AttAcc), Fig.8 (energy),
+Fig.9 (batch-size crossover), Fig.10 (CiM vs iso-area systolic array).
+"""
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.scheduler import (
+    DECODE_GRID,
+    PREFILL_LENGTHS,
+    evaluate,
+    geomean,
+    gmean_speedup,
+)
+
+llama = get_config("llama2-7b")
+qwen = get_config("qwen3-8b")
+
+
+def within(got, want, tol=0.25):
+    assert want * (1 - tol) <= got <= want * (1 + tol), (
+        f"got {got:.2f}, paper {want:.2f}")
+
+
+# --- Section V-B: fully-CiD vs fully-CiM extremes ---------------------------
+
+
+def test_fig5a_prefill_cim_speedup_6x():
+    r = geomean([evaluate(llama, "full_cid", L, 1).ttft
+                 / evaluate(llama, "full_cim", L, 1).ttft
+                 for L in PREFILL_LENGTHS])
+    within(r, 6.0)
+
+
+def test_fig5b_prefill_energy_2p6x():
+    r = geomean([evaluate(llama, "full_cid", L, 1).prefill_energy
+                 / evaluate(llama, "full_cim", L, 1).prefill_energy
+                 for L in PREFILL_LENGTHS])
+    within(r, 2.6)
+
+
+def test_fig6a_decode_cid_speedup_39x():
+    r = geomean([evaluate(llama, "full_cim", li, lo).tpot
+                 / evaluate(llama, "full_cid", li, lo).tpot
+                 for li, lo in DECODE_GRID])
+    within(r, 39.0)
+
+
+def test_fig6b_decode_energy_3p9x():
+    r = geomean([evaluate(llama, "full_cim", li, lo).decode_energy
+                 / evaluate(llama, "full_cid", li, lo).decode_energy
+                 for li, lo in DECODE_GRID])
+    within(r, 3.9)
+
+
+# --- Section V-C: vs prior-work mappings ------------------------------------
+
+
+def test_fig7_prefill_halo_vs_cent_6p54x():
+    within(gmean_speedup(llama, "cent", "halo1", metric="ttft"), 6.54)
+
+
+def test_fig7_decode_halo_vs_attacc_34x():
+    within(gmean_speedup(llama, "attacc1", "halo1", metric="tpot"), 34.0)
+
+
+@pytest.mark.parametrize("model", [llama, qwen], ids=["llama2", "qwen3"])
+def test_fig7_e2e_18x_vs_attacc(model):
+    within(gmean_speedup(model, "attacc1", "halo1"), 18.0)
+
+
+@pytest.mark.parametrize("model", [llama, qwen], ids=["llama2", "qwen3"])
+def test_fig7_e2e_2p4x_vs_cent(model):
+    within(gmean_speedup(model, "cent", "halo1"), 2.4)
+
+
+def test_halo2_only_10pct_slower():
+    within(gmean_speedup(llama, "halo2", "halo1"), 1.10, tol=0.08)
+
+
+def test_fig8_energy_2x_vs_attacc():
+    within(gmean_speedup(llama, "attacc1", "halo1", metric="energy"), 2.0)
+
+
+def test_fig8_energy_1p8x_vs_cent():
+    within(gmean_speedup(llama, "cent", "halo1", metric="energy"), 1.8)
+
+
+def test_fig8_halo2_energy_comparable_to_cent():
+    """HALO2's double ADC accesses make its energy ~CENT's (Sec V-C)."""
+    r = gmean_speedup(llama, "cent", "halo2", metric="energy")
+    assert 0.7 <= r <= 1.5
+
+
+# --- Fig. 9: batch-size crossover --------------------------------------------
+
+
+def test_fig9_attacc_wins_at_high_batch():
+    """At batch>=64 (L_in=128, L_out=2048) AttAcc1 overtakes CENT; HALO
+    stays competitive at low batch."""
+    l_in, l_out = 128, 2048
+    lo_b = 1
+    hi_b = 64
+    halo_lo = evaluate(llama, "halo1", l_in, l_out, lo_b).e2e
+    attacc_lo = evaluate(llama, "attacc1", l_in, l_out, lo_b).e2e
+    assert halo_lo < attacc_lo            # low batch: HALO wins
+    halo_hi = evaluate(llama, "halo1", l_in, l_out, hi_b).e2e
+    attacc_hi = evaluate(llama, "attacc1", l_in, l_out, hi_b).e2e
+    cent_hi = evaluate(llama, "cent", l_in, l_out, hi_b).e2e
+    assert attacc_hi < cent_hi            # high batch: CiM for non-attn wins
+    # per-request latency improves with batch for the batched mappings
+    assert evaluate(llama, "attacc1", l_in, l_out, 64).e2e / 64 \
+        < evaluate(llama, "attacc1", l_in, l_out, 1).e2e
+
+
+# --- Fig. 10: analog CiM vs iso-area systolic array ---------------------------
+
+
+def test_fig10_cim_1p3x_over_systolic():
+    within(gmean_speedup(llama, "halo_sa", "halo1"), 1.3, tol=0.15)
+
+
+# --- structural claims --------------------------------------------------------
+
+
+def test_fig4_phase_boundedness():
+    """Fig 4's message: prefill GEMMs are COMPUTE-bound on CiM while decode
+    GEMVs are WEIGHT-STREAM-bound — the premise of phase-aware mapping."""
+    from repro.core.hardware import DEFAULT_HW
+    from repro.core.opgraph import decode_ops, prefill_ops
+
+    cim = DEFAULT_HW.cim
+
+    def bound_fracs(ops):
+        comp_flops = stream_flops = 0
+        for op in ops:
+            if op.kind not in ("matmul", "attn"):
+                continue
+            t_c = op.flops / cim.peak_ops
+            t_f = op.total_stream / cim.fill_bw
+            if t_c >= t_f:
+                comp_flops += op.flops
+            else:
+                stream_flops += op.flops
+        tot = comp_flops + stream_flops
+        return comp_flops / tot if tot else 0.0
+
+    assert bound_fracs(prefill_ops(llama, 2048, 1)) > 0.9   # compute-bound
+    assert bound_fracs(decode_ops(llama, 2048, 1)) < 0.1    # stream-bound
+
+
+def test_prefill_flops_linear_in_batch():
+    from repro.core.opgraph import prefill_ops, total_flops
+
+    f1 = total_flops(prefill_ops(llama, 512, 1))
+    f4 = total_flops(prefill_ops(llama, 512, 4))
+    assert 3.5 <= f4 / f1 <= 4.5

@@ -1,0 +1,258 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init
+from repro.models.ssm import _segsum, ssd_chunked
+from repro.optim.grad_utils import (
+    compress_int8,
+    compress_with_feedback,
+    decompress_int8,
+)
+from repro.kernels.gemv_cid import quantize_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# RoPE: relative-position property — scores depend only on distance
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(offset=st.integers(0, 512), d=st.sampled_from([32, 64, 128]))
+def test_rope_relative_position(offset, d):
+    """<rope(q,p+o), rope(k,p'+o)> == <rope(q,p), rope(k,p')> for all o."""
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.normal(k1, (1, 4, 1, d))
+    k = jax.random.normal(k2, (1, 4, 1, d))
+    pos = jnp.array([[3, 7, 11, 20]], jnp.int32)
+    q0 = apply_rope(q, pos, 10000.0)
+    k0 = apply_rope(k, pos, 10000.0)
+    q1 = apply_rope(q, pos + offset, 10000.0)
+    k1_ = apply_rope(k, pos + offset, 10000.0)
+    s0 = jnp.einsum("bthd,bshd->bhts", q0, k0)
+    s1 = jnp.einsum("bthd,bshd->bhts", q1, k1_)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(d=st.sampled_from([16, 64, 256]))
+def test_rope_preserves_norm(d):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (2, 8, 2, d))
+    pos = jnp.arange(8, dtype=jnp.int32)[None].repeat(2, 0)
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(scale=st.floats(0.1, 100.0), d=st.sampled_from([8, 64, 256]))
+def test_rmsnorm_scale_invariance(scale, d):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive c."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (3, d)) + 0.1
+    p = rmsnorm_init(d, jnp.float32)
+    a = rmsnorm(p, x, 1e-6)
+    b = rmsnorm(p, x * scale, 1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_rmsnorm_unit_rms():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 128)) * 7.0
+    p = rmsnorm_init(128, jnp.float32)
+    y = np.asarray(rmsnorm(p, x, 1e-6))
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# int8 compression: error bounds + error-feedback telescoping
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 5000), scale=st.floats(1e-3, 1e3))
+def test_compress_roundtrip_error_bound(n, scale):
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (n,)) * scale
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape, jnp.float32)
+    # per-block max error <= scale/2 = amax/254
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    bound = np.asarray(s).max() * 0.5 + 1e-12
+    assert err.max() <= bound * 1.001
+
+
+def test_error_feedback_telescopes():
+    """sum of dequantized updates + final error == sum of raw gradients."""
+    key = jax.random.PRNGKey(5)
+    grads = jax.random.normal(key, (20, 1000))
+    err = jnp.zeros((1000,))
+    sent = jnp.zeros((1000,))
+    for i in range(20):
+        q, s, err = compress_with_feedback(grads[i], err)
+        sent = sent + decompress_int8(q, s, (1000,), jnp.float32)
+    total = np.asarray(grads.sum(0))
+    np.testing.assert_allclose(np.asarray(sent + err), total,
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 64))
+def test_weight_quantize_int8_bound(k):
+    key = jax.random.PRNGKey(k)
+    w = jax.random.normal(key, (64, 32)) * (10.0 ** (k % 5 - 2))
+    q, s = quantize_int8(w)
+    deq = np.asarray(q, np.float32) * np.asarray(s)[None, :]
+    err = np.abs(deq - np.asarray(w))
+    assert (err <= np.asarray(s)[None, :] * 0.5 + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked == sequential recurrence (the state-space duality itself)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.sampled_from([32, 64]), chunk=st.sampled_from([8, 16, 32]))
+def test_ssd_chunked_equals_recurrence(T, chunk):
+    B, H, P, N, G = 1, 2, 8, 4, 1
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, T, G, N)) * 0.5
+    D = jnp.zeros((H,))
+
+    y_chunk, state_chunk = ssd_chunked(x, dt, A, Bm, Cm, D, chunk)
+
+    # token-by-token recurrence oracle
+    state = np.zeros((B, H, P, N), np.float64)
+    ys = []
+    for t in range(T):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None])   # [B,H]
+        Bt = np.asarray(Bm[:, t, 0])                              # [B,N]
+        Ct = np.asarray(Cm[:, t, 0])
+        xt = np.asarray(x[:, t])                                  # [B,H,P]
+        upd = (np.asarray(dt[:, t])[..., None, None]
+               * xt[..., None] * Bt[:, None, None, :])
+        state = state * dA[..., None, None] + upd
+        ys.append(np.einsum("bhpn,bn->bhp", state, Ct))
+    y_seq = np.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_seq,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_chunk), state,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_segsum_matches_direct():
+    dA = jnp.asarray(np.random.default_rng(0).normal(size=(3, 8)))
+    out = np.asarray(_segsum(dA))
+    for i in range(8):
+        for j in range(8):
+            if j > i:
+                assert out[0, i, j] == -np.inf
+            else:
+                want = np.asarray(dA[0, j + 1: i + 1]).sum()
+                np.testing.assert_allclose(out[0, i, j], want, rtol=1e-5,
+                                           atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE: sparse dispatch == dense reference (no drops at small S)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(E=st.sampled_from([4, 8]), K=st.sampled_from([1, 2]),
+       S=st.sampled_from([16, 64]))
+def test_moe_dispatch_matches_dense(E, K, S):
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_apply, moe_apply_reference, moe_init
+
+    d, ff = 32, 64
+    m = MoEConfig(n_experts=E, top_k=K, d_ff_expert=ff)
+    params = moe_init(jax.random.PRNGKey(11), d, m, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(12), (1, S, d)) * 0.5
+    got, aux1 = moe_apply(params, x, m)
+    want, aux2 = moe_apply_reference(params, x, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# analytical scheduler: structural properties of the paper model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(l_in=st.sampled_from([128, 512, 2048]),
+       l_out=st.sampled_from([128, 512]))
+def test_halo_never_slower_than_parts(l_in, l_out):
+    """Phase-aware mapping must be <= each single-engine mapping on its own
+    phase (it IS those mappings per phase)."""
+    from repro.configs.base import get_config
+    from repro.core.scheduler import evaluate
+
+    cfg = get_config("llama2-7b")
+    halo = evaluate(cfg, "halo1", l_in, l_out)
+    cid = evaluate(cfg, "full_cid", l_in, l_out)
+    cim = evaluate(cfg, "full_cim", l_in, l_out)
+    assert halo.ttft <= cim.ttft * 1.001
+    assert halo.tpot <= cid.tpot * 1.001
+    assert halo.e2e <= min(cid.e2e, cim.e2e) * 1.001
+
+
+@settings(max_examples=10, deadline=None)
+@given(l_in=st.sampled_from([128, 512, 2048]))
+def test_ttft_monotonic_in_context(l_in):
+    from repro.configs.base import get_config
+    from repro.core.scheduler import evaluate
+
+    cfg = get_config("llama2-7b")
+    a = evaluate(cfg, "halo1", l_in, 64)
+    b = evaluate(cfg, "halo1", l_in * 2, 64)
+    assert b.ttft > a.ttft
+    assert b.tpot >= a.tpot * 0.999    # longer KV cache
+
+
+def test_decode_trapezoid_matches_explicit_sum():
+    """The closed-form trapezoid decode cost equals the explicit per-token
+    sum (cost is affine in context length)."""
+    from repro.configs.base import get_config
+    from repro.core.engines import make_engines
+    from repro.core.hardware import DEFAULT_HW
+    from repro.core.mapping import get_mapping
+    from repro.core.opgraph import decode_ops
+    from repro.core.scheduler import _phase_cost, evaluate
+
+    cfg = get_config("llama2-7b")
+    l_in, l_out = 256, 32
+    r = evaluate(cfg, "halo1", l_in, l_out)
+    mapping = get_mapping("halo1")
+    hw = DEFAULT_HW.with_wordlines(128)
+    engines = make_engines(hw)
+    total = sum(
+        _phase_cost(decode_ops(cfg, t, 1), mapping, engines, "decode").seconds
+        for t in range(l_in, l_in + l_out))
+    np.testing.assert_allclose(r.decode_total, total, rtol=1e-6)

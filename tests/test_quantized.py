@@ -1,0 +1,99 @@
+"""int8 KV-cache decode (the HALO-faithful datapath): correctness vs f32."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.transformer import (
+    decode_step,
+    init_params,
+    pad_cache,
+    prefill,
+)
+from repro.serving.quantized_cache import (
+    dequantize,
+    init_quantized_cache,
+    quantize_token,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), d=st.sampled_from([16, 64, 128]))
+def test_quantize_token_roundtrip_bound(scale, d):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 3, d)) * scale
+    q, s = quantize_token(x)
+    y = dequantize(q, s)
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-9
+    assert (err <= bound * 1.01).all()
+    assert q.dtype == jnp.int8
+
+
+def _quantize_f32_cache(cfg, cache, B, S):
+    qc = init_quantized_cache(cfg, B, S)
+    out = []
+    for piece, qpiece in zip(cache, qc):
+        if isinstance(piece, dict) and "k" in piece and "k_scale" in qpiece:
+            kq, ks = quantize_token(piece["k"])
+            vq, vs = quantize_token(piece["v"])
+            out.append({"k": kq, "k_scale": ks, "v": vq, "v_scale": vs})
+        else:
+            out.append(piece)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "qwen3-1.7b",
+                                  "h2o-danube-1.8b"])
+def test_q8_decode_matches_f32(arch):
+    """int8 arena decode: <5% max relative logit error, argmax-exact."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    B, P, S = 2, 16, 32
+    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    logits, cache = prefill(params, cfg, {"tokens": tokens})
+    cache = pad_cache(cfg, cache, P, S)
+    nt = jnp.argmax(logits[:, -1:], -1)
+    ref, _ = decode_step(params, cfg, {"tokens": nt}, cache, jnp.int32(P))
+
+    q8_cache = _quantize_f32_cache(cfg, cache, B, S)
+    got, new_cache = decode_step(params, cfg, {"tokens": nt}, q8_cache,
+                                 jnp.int32(P))
+    rel = (np.abs(np.asarray(got) - np.asarray(ref)).max()
+           / (np.abs(np.asarray(ref)).max() + 1e-9))
+    assert rel < 0.05, f"{arch}: rel err {rel}"
+    np.testing.assert_array_equal(np.argmax(np.asarray(got), -1),
+                                  np.argmax(np.asarray(ref), -1))
+    # the updated arena stays int8
+    for piece in new_cache:
+        if isinstance(piece, dict) and "k" in piece and "k_scale" in piece:
+            assert piece["k"].dtype == jnp.int8
+
+
+def test_q8_multi_step_decode_stays_accurate():
+    """Quantization error must not compound over steps (fresh per-token
+    scales): 8 decode steps still argmax-match f32."""
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, P, S = 1, 12, 32
+    tokens = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    logits, cache = prefill(params, cfg, {"tokens": tokens})
+    cache = pad_cache(cfg, cache, P, S)
+    q8 = _quantize_f32_cache(cfg, cache, B, S)
+    nt_f = nt_q = jnp.argmax(logits[:, -1:], -1)
+    for i in range(8):
+        lf, cache = decode_step(params, cfg, {"tokens": nt_f}, cache,
+                                jnp.int32(P + i))
+        lq, q8 = decode_step(params, cfg, {"tokens": nt_q}, q8,
+                             jnp.int32(P + i))
+        nt_f = jnp.argmax(lf[:, -1:], -1)
+        nt_q = jnp.argmax(lq[:, -1:], -1)
+        assert int(nt_f[0, 0]) == int(nt_q[0, 0]), f"diverged at step {i}"

@@ -1,0 +1,321 @@
+"""Substrate tests: optimizers, schedules, data pipeline, checkpointing,
+fault-tolerance logic, trainer restart equivalence."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, make_loader
+from repro.optim.optimizers import adafactor, adamw, sgd_momentum
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+from repro.checkpoint.store import CheckpointManager, load_pytree, save_pytree
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_losses(opt, steps=60):
+    """Minimize ||Wx - y||^2; returns the loss trajectory."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    W = jax.random.normal(k1, (8, 8)) * 0.1
+    x = jax.random.normal(k2, (8, 16))
+    W_true = jax.random.normal(k3, (8, 8)) * 0.5
+    y = W_true @ x                      # realizable target: optimum loss = 0
+    params = {"W": W}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.mean((p["W"] @ x - y) ** 2)
+
+    losses = []
+    step = jnp.zeros((), jnp.int32)
+    for _ in range(steps):
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, step)
+        step = step + 1
+        losses.append(float(l))
+    return losses
+
+
+@pytest.mark.parametrize("make", [
+    lambda: adamw(lambda s: jnp.float32(0.05)),
+    lambda: adamw(lambda s: jnp.float32(0.05), state_dtype="bfloat16"),
+    lambda: adafactor(lambda s: jnp.float32(0.3)),
+    lambda: adafactor(lambda s: jnp.float32(0.3), momentum_dtype="bfloat16"),
+    lambda: sgd_momentum(lambda s: jnp.float32(0.05)),
+])
+def test_optimizers_reduce_quadratic(make):
+    losses = _quadratic_losses(make())
+    assert losses[-1] < 0.3 * losses[0], losses[::10]
+
+
+def test_adamw_state_dtype():
+    opt = adamw(lambda s: jnp.float32(1e-3), state_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    assert st["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(lambda s: jnp.float32(1e-3))
+    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((64,))}
+    st = opt.init(params)
+    assert st["v"]["w"]["vr"].shape == (64,)
+    assert st["v"]["w"]["vc"].shape == (32,)
+    assert st["v"]["b"]["v"].shape == (64,)
+    # factored state is ~ (n+m)/(n*m) of full Adam
+    full = 2 * 64 * 32
+    fact = 64 + 32
+    assert fact < full / 10
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, 100, warmup_steps=10)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(50)) < 1.0
+    assert abs(float(f(100)) - 0.1) < 1e-2
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1.0, 100, warmup_steps=10, decay_frac=0.2)
+    assert float(f(0)) == 0.0
+    np.testing.assert_allclose(float(f(40)), 1.0, rtol=1e-6)   # stable
+    np.testing.assert_allclose(float(f(79)), 1.0, rtol=1e-6)   # still stable
+    assert float(f(95)) < 0.5                                   # decaying
+    np.testing.assert_allclose(float(f(100)), 0.01, rtol=1e-2)  # final
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    d = dict(seq_len=16, global_batch=8, vocab_size=97, seed=3)
+    d.update(kw)
+    return DataConfig(**d)
+
+
+def test_loader_deterministic():
+    a = make_loader(_cfg()).next_batch()["tokens"]
+    b = make_loader(_cfg()).next_batch()["tokens"]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_loader_resume_replays_stream():
+    l1 = make_loader(_cfg())
+    for _ in range(3):
+        l1.next_batch()
+    st = l1.state_dict()
+    want = l1.next_batch()["tokens"]
+    l2 = make_loader(_cfg())
+    l2.load_state_dict(st)
+    got = l2.next_batch()["tokens"]
+    np.testing.assert_array_equal(want, got)
+
+
+def test_loader_workers_partition_global_batch():
+    """N workers' shards concatenate to exactly the 1-worker global batch."""
+    full = make_loader(_cfg()).next_batch()["tokens"]
+    parts = [make_loader(_cfg(), worker=w, n_workers=4).next_batch()["tokens"]
+             for w in range(4)]
+    np.testing.assert_array_equal(full, np.concatenate(parts, 0))
+
+
+def test_loader_elastic_rescale_preserves_stream():
+    """Rescaling 4 workers -> 2 workers mid-stream keeps the global stream."""
+    l4 = [make_loader(_cfg(), worker=w, n_workers=4) for w in range(4)]
+    for l in l4:
+        for _ in range(2):
+            l.next_batch()
+    # rescale: two workers take over, inheriting the step counter
+    l2 = [l4[0].with_workers(w, 2) for w in range(2)]
+    got = np.concatenate([l.next_batch()["tokens"] for l in l2], 0)
+    ref = make_loader(_cfg())
+    for _ in range(2):
+        ref.next_batch()
+    want = ref.next_batch()["tokens"]
+    np.testing.assert_array_equal(want, got)
+
+
+def test_packed_documents():
+    cfg = _cfg(kind="packed", seq_len=8, global_batch=2)
+    tokens = np.arange(100, dtype=np.int32)
+    l = make_loader(cfg, tokens=tokens)
+    b = l.next_batch()["tokens"]
+    np.testing.assert_array_equal(b[0], np.arange(8))
+    np.testing.assert_array_equal(b[1], np.arange(8, 16))
+
+
+def test_synthetic_is_learnable_signal():
+    """Same (a,b,m) across sequences: transition table is consistent."""
+    cfg = _cfg(seq_len=64, global_batch=4)
+    b = make_loader(cfg).next_batch()["tokens"]
+    # for any token value appearing at the same (t % m) phase, the successor
+    # is identical across sequences
+    src = make_loader(cfg).source
+    m = src.m
+    mapping = {}
+    for row in b:
+        for t in range(63):
+            key = (int(row[t]), t % m)
+            nxt = int(row[t + 1])
+            assert mapping.setdefault(key, nxt) == nxt
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (4, 8)),
+            "nested": {"b": jax.random.normal(k2, (3,)).astype(jnp.bfloat16),
+                       "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    save_pytree(str(tmp_path / "ck"), tree, step=5)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    got = load_pytree(str(tmp_path / "ck"), like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_manager_retention_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in (10, 20, 30):
+        m.save(s, tree)
+    assert m.latest_step() == 30
+    assert m.all_steps() == [20, 30]          # step 10 garbage-collected
+
+
+def test_checkpoint_async(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(jax.random.PRNGKey(2))
+    m.save(1, tree, blocking=False)
+    m.wait()
+    got = m.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(got["a"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((4,))}
+    save_pytree(str(tmp_path / "ck"), tree)
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "ck"), {"a": jnp.ones((5,))})
+
+
+# ---------------------------------------------------------------------------
+# trainer: restart-from-checkpoint == uninterrupted run (exact replay)
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_restart_equivalence(tmp_path):
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.optim.optimizers import adamw
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=cfg.vocab_size,
+                    seed=1)
+
+    def make_trainer(ckdir, steps):
+        opt = adamw(lambda s: jnp.float32(1e-3))
+        tc = TrainerConfig(total_steps=steps, checkpoint_every=5,
+                           checkpoint_dir=ckdir, log_every=0,
+                           async_checkpoint=False, remat=False)
+        return Trainer(cfg, opt, dc, tc)
+
+    # uninterrupted 10 steps
+    t_full = make_trainer(str(tmp_path / "full"), 10)
+    t_full.run()
+
+    # interrupted at 5 (checkpoint), then a fresh trainer resumes
+    t_a = make_trainer(str(tmp_path / "resume"), 5)
+    t_a.run()
+    t_b = make_trainer(str(tmp_path / "resume"), 10)
+    t_b.run()
+
+    la = jax.tree.leaves(t_full.state["params"])
+    lb = jax.tree.leaves(t_b.state["params"])
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_monitor_state_machine():
+    from repro.runtime.fault_tolerance import ClusterMonitor, WorkerState
+
+    t = [0.0]
+    mon = ClusterMonitor(4, timeout_s=10, suspect_s=4, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.heartbeat(0)
+    mon.heartbeat(1)
+    assert mon.sweep() == []
+    assert mon.workers[2].state == WorkerState.SUSPECT
+    t[0] = 12.0
+    mon.heartbeat(0)
+    mon.heartbeat(1)
+    dead = mon.sweep()
+    assert set(dead) == {2, 3}
+    assert set(mon.healthy()) == {0, 1}
+
+
+def test_restart_policy_decisions():
+    from repro.runtime.fault_tolerance import Action, RestartPolicy
+
+    p = RestartPolicy(8, min_quorum=0.5, max_in_place=2)
+    assert p.decide([], 8) == Action.CONTINUE
+    assert p.decide([3], 7) == Action.RESTART_IN_PLACE
+    assert p.decide([3], 7) == Action.RESTART_IN_PLACE
+    assert p.decide([3], 7) == Action.ELASTIC_DOWN     # 3rd flake
+    assert p.decide([0, 1, 2, 4, 5], 3) == Action.ABORT
+
+
+def test_straggler_mitigation():
+    from repro.runtime.fault_tolerance import StragglerMitigator
+
+    s = StragglerMitigator(4, threshold=1.5, patience=3)
+    evicted = []
+    for _ in range(5):
+        evicted = s.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0})
+    assert evicted == [3]
+    # healthy workers never flagged
+    assert s.strikes[0] == 0
+
+
+def test_elastic_rescale_plan():
+    from repro.runtime.fault_tolerance import plan_elastic_rescale
+
+    p = plan_elastic_rescale(32, model_parallel=16, chips_per_worker=8)
+    assert p.new_mesh_shape == (16, 16)
+    assert p.new_workers == 32
+    # lose 5 hosts -> fall to the next power-of-two data axis
+    p = plan_elastic_rescale(27, model_parallel=16, chips_per_worker=8)
+    assert p.new_mesh_shape == (8, 16)
+    assert p.new_workers == 16
