@@ -1,7 +1,18 @@
-"""Serving-engine benchmark: TTFT / TPOT / throughput on the reduced model,
-comparing the paper's mapping strategies end to end (the system-level
-counterpart of Fig. 7, measured on real execution of this framework's
-serving engine rather than the analytical model)."""
+"""Serving-engine benchmark: TTFT / TPOT / throughput on the reduced model.
+
+Two sweeps, both measured on real execution of this framework's serving
+engine rather than the analytical model:
+
+  * strategy sweep (halo / cent / attacc) — the system-level counterpart
+    of the paper's Fig. 7: same math, different worker-group routing;
+  * chunked vs unchunked prefill at long prompts — the TTFT-vs-TPOT
+    trade-off that phase-interleaved scheduling buys (chunked prefill
+    lets decode ticks run between the chunks of a long prompt).
+
+Also reports the per-tick decode wall time at max_batch=8 — the number
+device-side sampling improves (one host transfer per tick instead of one
+blocking argmax sync per slot).
+"""
 
 from __future__ import annotations
 
@@ -15,28 +26,44 @@ import numpy as np
 Row = Tuple[str, float, str, str]
 
 
-def bench_serving() -> List[Row]:
+def _cfg_params():
     from repro.configs.base import get_config
     from repro.models.transformer import init_params
-    from repro.serving.engine import ServeConfig, ServingEngine
-    from repro.serving.scheduler import PhaseAwareConfig
 
     cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
                               dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    rows: List[Row] = []
+    return cfg, params
+
+
+def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
+         prompt_len=24, requests=8, max_new=8, prefill_chunk=2048,
+         max_prefill_tokens=8192):
+    from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.scheduler import PhaseAwareConfig
+
+    sc = ServeConfig(max_batch=max_batch, max_len=max_len,
+                     phase=PhaseAwareConfig(
+                         strategy=strategy, max_decode_batch=max_batch,
+                         prefill_chunk=prefill_chunk,
+                         max_prefill_tokens=max_prefill_tokens))
+    eng = ServingEngine(cfg, params, sc)
     rng = np.random.default_rng(0)
+    t0 = time.monotonic()
+    for _ in range(requests):
+        eng.submit(rng.integers(0, cfg.vocab_size, (prompt_len,),
+                                dtype=np.int32), max_new_tokens=max_new)
+    done = eng.run_until_drained()
+    wall = time.monotonic() - t0
+    return eng, done, wall
+
+
+def bench_serving() -> List[Row]:
+    """Strategy sweep: TTFT / TPOT / throughput / phase occupancy."""
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
     for strategy in ("halo", "cent", "attacc"):
-        sc = ServeConfig(max_batch=4, max_len=96,
-                         phase=PhaseAwareConfig(strategy=strategy,
-                                                max_decode_batch=4))
-        eng = ServingEngine(cfg, params, sc)
-        t0 = time.monotonic()
-        for _ in range(8):
-            eng.submit(rng.integers(0, cfg.vocab_size, (24,),
-                                    dtype=np.int32), max_new_tokens=8)
-        done = eng.run_until_drained()
-        wall = time.monotonic() - t0
+        eng, done, wall = _run(cfg, params, strategy=strategy)
         toks = sum(len(r.generated) for r in done)
         rows.append((f"serve.{strategy}.ttft_p50_ms",
                      float(np.median([r.ttft for r in done])) * 1e3,
@@ -46,7 +73,52 @@ def bench_serving() -> List[Row]:
                      "ms", ""))
         rows.append((f"serve.{strategy}.throughput",
                      toks / wall, "tok/s", ""))
+        rows.append((f"serve.{strategy}.mixed_tick_frac",
+                     eng.phase_occupancy()["mixed"], "frac", ""))
     return rows
 
 
-ALL = [bench_serving]
+def bench_chunked_prefill() -> List[Row]:
+    """Chunked vs unchunked prefill with long prompts behind short ones:
+    chunking trades a little prefill throughput for decode interleaving
+    (the paper's low-batch/long-context regime)."""
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+    for label, chunk, budget in (("unchunked", 2048, 8192),
+                                 ("chunked", 16, 32)):
+        eng, done, wall = _run(cfg, params, max_batch=4, max_len=160,
+                               prompt_len=64, requests=8, max_new=12,
+                               prefill_chunk=chunk,
+                               max_prefill_tokens=budget)
+        toks = sum(len(r.generated) for r in done)
+        rows.append((f"serve.{label}.ttft_p50_ms",
+                     float(np.median([r.ttft for r in done])) * 1e3,
+                     "ms", ""))
+        rows.append((f"serve.{label}.tpot_p50_ms",
+                     float(np.median([r.tpot for r in done])) * 1e3,
+                     "ms", ""))
+        rows.append((f"serve.{label}.throughput", toks / wall, "tok/s", ""))
+        rows.append((f"serve.{label}.mixed_tick_frac",
+                     eng.phase_occupancy()["mixed"], "frac", ""))
+    return rows
+
+
+def bench_decode_tick() -> List[Row]:
+    """Per-tick decode wall time at max_batch=8 (device-side sampling:
+    one [B]-shaped host transfer per tick, no per-slot argmax sync)."""
+    cfg, params = _cfg_params()
+    eng, done, _ = _run(cfg, params, max_batch=8, max_len=96, requests=8,
+                        prompt_len=16, max_new=16)
+    decode_ticks = [t.wall_s for t in eng.tick_log
+                    if t.decode_reqs and not t.prefill_reqs]
+    # skip the first (compile) tick
+    steady = decode_ticks[1:] or decode_ticks
+    return [
+        ("serve.decode_tick_p50_ms",
+         float(np.median(steady)) * 1e3, "ms", ""),
+        ("serve.host_transfers_per_tick",
+         eng.host_transfers / max(eng.n_ticks, 1), "x", "1.0"),
+    ]
+
+
+ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick]

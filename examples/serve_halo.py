@@ -2,7 +2,10 @@
 the primary example): a small model serves a batched request stream through
 the phase-disaggregated engine, comparing HALO's phase-aware strategy with
 the CENT- and AttAcc-style mappings, and reporting TTFT / TPOT / throughput
-per strategy — the measured counterpart of the paper's Fig. 7.
+per strategy — the measured counterpart of the paper's Fig. 7.  A second
+table shows the chunked-prefill TTFT/TPOT trade-off on long prompts: with
+chunking, decode ticks interleave between the chunks of a long prefill
+(``mixed`` tick fraction > 0) instead of head-of-line blocking behind it.
 
 Run:  PYTHONPATH=src python examples/serve_halo.py [--requests 24]
 """
@@ -20,6 +23,23 @@ from repro.serving.engine import ServeConfig, ServingEngine
 from repro.serving.scheduler import PhaseAwareConfig
 
 
+def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
+               max_batch=4, max_len=128, prefill_chunk=2048,
+               max_prefill_tokens=8192):
+    engine = ServingEngine(cfg, params, ServeConfig(
+        max_batch=max_batch, max_len=max_len,
+        phase=PhaseAwareConfig(strategy=strategy,
+                               max_decode_batch=max_batch,
+                               prefill_chunk=prefill_chunk,
+                               max_prefill_tokens=max_prefill_tokens)))
+    t0 = time.monotonic()
+    for p in prompts:
+        engine.submit(p.copy(), max_new_tokens=max_new)
+    done = sorted(engine.run_until_drained(), key=lambda r: r.req_id)
+    wall = time.monotonic() - t0
+    return engine, done, wall
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -34,19 +54,14 @@ def main():
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab_size, (args.prompt_len,),
                             dtype=np.int32) for _ in range(args.requests)]
+    max_len = args.prompt_len + args.max_new + 8
 
     print(f"{'strategy':10s} {'TTFT p50':>10s} {'TPOT p50':>10s} "
           f"{'tok/s':>8s}  outputs identical?")
     base_outputs = None
     for strategy in ("halo", "cent", "attacc"):
-        engine = ServingEngine(cfg, params, ServeConfig(
-            max_batch=4, max_len=args.prompt_len + args.max_new + 8,
-            phase=PhaseAwareConfig(strategy=strategy, max_decode_batch=4)))
-        t0 = time.monotonic()
-        for p in prompts:
-            engine.submit(p.copy(), max_new_tokens=args.max_new)
-        done = sorted(engine.run_until_drained(), key=lambda r: r.req_id)
-        wall = time.monotonic() - t0
+        _, done, wall = run_stream(cfg, params, prompts, strategy=strategy,
+                                   max_new=args.max_new, max_len=max_len)
         outs = [r.generated for r in done]
         if base_outputs is None:
             base_outputs = outs
@@ -59,10 +74,28 @@ def main():
               f"{np.median([r.tpot for r in done])*1e3:9.1f}ms "
               f"{toks/wall:8.1f}  {same}")
 
+    print(f"\n{'prefill':10s} {'TTFT p50':>10s} {'TPOT p50':>10s} "
+          f"{'tok/s':>8s} {'mixed ticks':>12s}")
+    long_prompts = [rng.integers(0, cfg.vocab_size, (96,), dtype=np.int32)
+                    for _ in range(args.requests)]
+    for label, chunk, budget in (("unchunked", 2048, 8192),
+                                 ("chunked", 16, 32)):
+        eng, done, wall = run_stream(cfg, params, long_prompts,
+                                     max_new=args.max_new,
+                                     max_len=96 + args.max_new + 8,
+                                     prefill_chunk=chunk,
+                                     max_prefill_tokens=budget)
+        toks = sum(len(r.generated) for r in done)
+        occ = eng.phase_occupancy()
+        print(f"{label:10s} "
+              f"{np.median([r.ttft for r in done])*1e3:9.1f}ms "
+              f"{np.median([r.tpot for r in done])*1e3:9.1f}ms "
+              f"{toks/wall:8.1f} {occ['mixed']:11.2f}")
+
     print("\nNote: strategies schedule the same math onto different worker "
-          "groups; outputs must match exactly.  On TPU the groups run "
-          "different programs (compute- vs bandwidth-sharded) — see "
-          "DESIGN.md §Adaptation.")
+          "groups (separate compiled programs); outputs must match exactly. "
+          "On TPU the groups run compute- vs bandwidth-sharded programs — "
+          "see docs/serving.md and DESIGN.md §Adaptation.")
 
 
 if __name__ == "__main__":

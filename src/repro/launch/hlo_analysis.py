@@ -209,10 +209,20 @@ def _dot_flops(line: str, shapes_by_name: Dict[str, Tuple[str, List[int]]]
 
 _TABLE_ROW = re.compile(r"^(\d+)\s+(.*)$")
 _STACK_FRAME_ATTR = re.compile(r"stack_frame_id=(\d+)")
+_OP_NAME_META = re.compile(r'op_name="([^"]*)"')
+_SCOPE_FN = re.compile(r"\(([\w\.<>]+)\)")
 
 
 def parse_stack_tables(text: str):
-    """Returns frame_id -> frozenset(function names on the stack)."""
+    """Returns frame_id -> frozenset(function names on the stack).
+
+    Primary source: the FileNames / FunctionNames / FileLocations /
+    StackFrames tables some XLA versions append to the HLO dump.  When the
+    backend does not emit those tables (observed: ``as_text()`` on current
+    CPU builds prints only per-op ``metadata={op_name=...}``), provenance is
+    reconstructed from the op_name scopes instead: ``jit(f)/jit(main)/dot``
+    names the traced functions ``f`` and ``main`` on that op's stack.  The
+    fallback synthesizes one pseudo-frame per distinct op_name."""
     sections: Dict[str, Dict[int, str]] = {}
     cur = None
     for line in text.splitlines():
@@ -258,7 +268,21 @@ def parse_stack_tables(text: str):
         memo[fid] = out
         return out
 
-    return {fid: chain(fid) for fid in frames}
+    if frames:
+        return {fid: chain(fid) for fid in frames}
+
+    # fallback: synthesize frames from op_name metadata scopes
+    out: Dict[int, frozenset] = {}
+    seen: Dict[str, int] = {}
+    for m in _OP_NAME_META.finditer(text):
+        op_name = m.group(1)
+        if op_name in seen:
+            continue
+        names = frozenset(fn for fn in _SCOPE_FN.findall(op_name) if fn)
+        if names:
+            seen[op_name] = len(seen) + 1
+            out[-seen[op_name]] = names        # negative ids: synthetic
+    return out
 
 
 def _trip_count(cond_lines: List[str]) -> Optional[int]:
@@ -304,16 +328,18 @@ def analyze_hlo(text: str, kernel_regions: Tuple[str, ...] = ()) -> HloStats:
 
     def _source_dtype(name: str, depth: int = 0) -> str:
         """Chase through convert/copy/bitcast (incl. CPU's convert-wrapping
-        fusions) to the dtype that actually streams from HBM — a bf16 cache
-        read must not be charged at the f32 width of its fused upcast."""
-        if depth > 4 or name not in shapes_by_name:
+        fusions and ``call``-wrapped parallel transpose/copy computations) to
+        the dtype that actually streams from HBM — a bf16 or int8 cache read
+        must not be charged at the f32/s32 width of its fused upcast."""
+        if depth > 8 or name not in shapes_by_name:
             return shapes_by_name.get(name, ("f32", []))[0]
         opk, first = producer.get(name, ("", None))
         same_elems = (first is not None and sorted(
             shapes_by_name.get(name, ("", [0]))[1]) == sorted(
             shapes_by_name.get(first, ("", [1]))[1]))
         passthrough = opk in ("convert", "copy", "bitcast", "transpose",
-                              "reshape") or (opk == "fusion" and same_elems)
+                              "reshape") or (opk in ("fusion", "call")
+                                             and same_elems)
         if passthrough and first:
             return _source_dtype(first, depth + 1)
         return shapes_by_name[name][0]

@@ -1,7 +1,12 @@
 """Serving driver: batched requests through the phase-disaggregated engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 16 --prompt-len 48 --max-new 24 --strategy halo
+      --requests 16 --prompt-len 48 --max-new 24 --strategy halo \
+      --prefill-chunk 16 --max-prefill-tokens 32
+
+Reports per-request TTFT/TPOT and the per-tick phase occupancy that the
+chunked-prefill scheduler produces (fraction of ticks running prefill and
+decode together — HALO's interleaved CiM/CiD utilization at serving level).
 """
 
 from __future__ import annotations
@@ -25,6 +30,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--strategy", default="halo",
                     choices=["halo", "cent", "attacc"])
+    ap.add_argument("--prefill-chunk", type=int, default=2048,
+                    help="tokens per prefill chunk (chunked prefill)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=8192,
+                    help="per-tick prefill token budget")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 enables device-side sampling")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -40,9 +52,15 @@ def main(argv=None) -> int:
         cfg = dataclasses.replace(cfg, dtype="float32")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    sc = ServeConfig(max_batch=args.max_batch, max_len=args.max_len,
-                     phase=PhaseAwareConfig(strategy=args.strategy,
-                                            max_decode_batch=args.max_batch))
+    sc = ServeConfig(
+        max_batch=args.max_batch, max_len=args.max_len,
+        phase=PhaseAwareConfig(strategy=args.strategy,
+                               max_decode_batch=args.max_batch,
+                               prefill_chunk=args.prefill_chunk,
+                               max_prefill_tokens=args.max_prefill_tokens),
+        greedy=args.temperature <= 0.0,
+        temperature=max(args.temperature, 1e-6),
+        top_k=args.top_k, seed=args.seed)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
@@ -61,11 +79,21 @@ def main(argv=None) -> int:
     ttfts = [r.ttft for r in done]
     tpots = [r.tpot for r in done]
     total_new = sum(len(r.generated) for r in done)
+    occ = engine.phase_occupancy()
+    decode_ticks = [t.wall_s for t in engine.tick_log
+                    if t.decode_reqs and not t.prefill_reqs]
     print(f"arch={cfg.name} strategy={args.strategy} "
+          f"chunk={args.prefill_chunk} chunked={engine.chunked} "
           f"requests={len(done)} tokens={total_new} wall={wall:.2f}s")
     print(f"TTFT p50={np.median(ttfts)*1e3:.1f}ms  "
           f"TPOT p50={np.median(tpots)*1e3:.1f}ms  "
           f"throughput={total_new / wall:.1f} tok/s")
+    print(f"ticks={engine.n_ticks} "
+          f"occupancy prefill={occ['prefill']:.2f} decode={occ['decode']:.2f} "
+          f"mixed={occ['mixed']:.2f}  "
+          f"decode-tick p50="
+          f"{np.median(decode_ticks)*1e3 if decode_ticks else 0:.1f}ms  "
+          f"host-transfers={engine.host_transfers}")
     return 0
 
 

@@ -263,6 +263,82 @@ def attn_prefill(params, x, positions, *, n_heads, n_kv_heads, d_head,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (arena-direct)
+# ---------------------------------------------------------------------------
+
+def attn_chunk(params, x, offsets, lengths, slots, cache_k, cache_v, *,
+               n_heads, n_kv_heads, d_head, theta, window, softcap=0.0,
+               qk_norm=False):
+    """Chunked prefill against the decode arena (HALO's CiM -> CiD handoff).
+
+    x: [N, C, d] — N packed chunk rows of up to C tokens; row ``n`` carries
+    tokens ``[offsets[n], offsets[n]+lengths[n])`` of the request living in
+    arena slot ``slots[n]``.  cache_k/v: [B, R, Hkv, Dh] decode arena
+    (R = min(window, S) ring for sliding-window runs, R = S otherwise).
+
+    Entries at positions < offsets[n] were written by earlier chunks of the
+    same request; the chunk attends over that history + itself (causal,
+    windowed) and then writes its own K/V into the arena.  History is
+    gathered BEFORE the write: a ring entry the chunk is about to overwrite
+    is still needed by the chunk's early queries.  Padded rows
+    (slots[n] >= B) and padded positions (j >= lengths[n]) scatter out of
+    bounds and are dropped.
+
+    Returns (out [N, C, d_model], new_cache_k, new_cache_v).
+    """
+    N, C, _ = x.shape
+    B, R = cache_k.shape[0], cache_k.shape[1]
+    offs = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    slot = jnp.asarray(slots, jnp.int32)
+    j = jnp.arange(C, dtype=jnp.int32)
+    positions = offs[:, None] + j[None, :]                       # [N, C]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, theta, qk_norm)
+
+    row = jnp.clip(slot, 0, B - 1)
+    prev_k = cache_k[row]                                        # [N, R, ...]
+    prev_v = cache_v[row]
+    s_idx = jnp.arange(R, dtype=jnp.int32)
+    # ring slot s holds the largest position p < off with p % R == s
+    # (for full-attention runs R == S, so this reduces to p == s when
+    # s < off and "not yet written" otherwise — one formula for both)
+    prev_pos = offs[:, None] - 1 - ((offs[:, None] - 1 - s_idx[None, :]) % R)
+    chunk_pos = jnp.where(j[None, :] < lens[:, None], positions, -1)
+    kv_k = jnp.concatenate([prev_k, k], axis=1)                  # [N, R+C, ...]
+    kv_v = jnp.concatenate([prev_v, v], axis=1)
+    kv_pos = jnp.concatenate([prev_pos, chunk_pos], axis=1)      # [N, R+C]
+
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    qg = q.reshape(N, C, Hkv, G, d_head)
+    scores = jnp.einsum("nqhgd,nkhd->nhgqk", qg, kv_k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    pq = positions[:, :, None]                                   # [N, C, 1]
+    pk = kv_pos[:, None, :]                                      # [N, 1, R+C]
+    w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    valid = (pk >= 0) & (pk <= pq) & ((pq - pk) < w)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("nhgqk,nkhd->nqhgd", probs.astype(kv_v.dtype), kv_v,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(N, C, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+
+    # arena write: ring discipline keeps only the row's last R positions
+    # (earlier chunk positions a later same-chunk token wraps onto must
+    # not be scattered — duplicate scatter indices are order-undefined)
+    keep = (j[None, :] < lens[:, None]) & (j[None, :] >= lens[:, None] - R)
+    w_slot = jnp.where(keep, jnp.broadcast_to(slot[:, None], (N, C)), B)
+    w_idx = jnp.where(keep, positions % R, R)
+    new_k = cache_k.at[w_slot, w_idx].set(k, mode="drop")
+    new_v = cache_v.at[w_slot, w_idx].set(v, mode="drop")
+    return out, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 

@@ -124,6 +124,54 @@ def mla_prefill(params, x, positions, *, n_heads, m: MLAConfig,
     return out, cache
 
 
+def mla_chunk(params, x, offsets, lengths, slots, cache, *,
+              n_heads, m: MLAConfig):
+    """Chunked prefill against the latent decode arena (absorbed form).
+
+    x: [N, C, d] packed chunk rows; cache: [B, S, r+dr] arena.  The MLA
+    arena is position-indexed (no ring), so the chunk's latents are
+    scattered in FIRST (padded rows/positions drop out of bounds) and the
+    C queries then run the absorbed decode formulation over each row's full
+    arena — entries above the query position (stale previous occupants,
+    later pad) are masked.  Returns (out [N, C, d], new_cache).
+    """
+    N, C, _ = x.shape
+    B, S = cache.shape[0], cache.shape[1]
+    offs = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    slot = jnp.asarray(slots, jnp.int32)
+    j = jnp.arange(C, dtype=jnp.int32)
+    positions = offs[:, None] + j[None, :]                      # [N, C]
+    q_nope, q_rope = _queries(params, x, n_heads, m, positions)
+    c_new, kr_new = _latent(params, x, m, positions)
+    entry = jnp.concatenate([c_new, kr_new], axis=-1)           # [N, C, r+dr]
+    keep = j[None, :] < lens[:, None]
+    w_slot = jnp.where(keep, jnp.broadcast_to(slot[:, None], (N, C)), B)
+    w_idx = jnp.where(keep, positions, S)
+    cache = cache.at[w_slot, w_idx].set(entry, mode="drop")
+    lat = cache[jnp.clip(slot, 0, B - 1)]                       # [N, S, r+dr]
+    c_kv = lat[..., : m.kv_lora_rank]
+    k_rope = lat[..., m.kv_lora_rank:]
+    q_lat = jnp.einsum("nqhd,hrd->nqhr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("nqhr,nsr->nhqs", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("nqhd,nsd->nhqs", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, None, :]
+             <= positions[:, :, None])                          # [N, C, S]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("nhqs,nsr->nqhr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = jnp.einsum("nqhr,hrv->nqhv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(N, C, n_heads * m.v_head_dim), params["wo"])
+    return out, cache
+
+
 def mla_decode(params, x, cache, pos, *, n_heads, m: MLAConfig,
                slot=None, extra_mask=None):
     """Absorbed decode: GEMV sweep over the latent cache (CiD path).

@@ -350,6 +350,32 @@ def _attn_layer_decode(cfg, run, lp, x, cache, pos):
     return x, new_cache
 
 
+def _attn_layer_chunk(cfg, run, lp, x, offsets, lengths, slots, cache):
+    """One attention layer of a packed prefill chunk (arena-direct write)."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla.enabled:
+        a, latent = mla_mod.mla_chunk(lp["attn"], h, offsets, lengths, slots,
+                                      cache["latent"],
+                                      n_heads=cfg.n_heads, m=cfg.mla)
+        new_cache = {"latent": latent}
+    else:
+        a, ck, cv = attn_mod.attn_chunk(
+            lp["attn"], h, offsets, lengths, slots, cache["k"], cache["v"],
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=jnp.int32(run.window),
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm)
+        new_cache = {"k": ck, "v": cv}
+    x = x + a
+    if run.ffn_kind == "moe":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg.moe, cfg.act)
+        x = x + f
+    elif run.ffn_kind == "dense":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, cfg.act)
+    return x, new_cache
+
+
 def _ssm_layer_prefill(cfg, run, lp, x, want_cache: bool):
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     o, (conv_state, state) = ssm_mod.ssm_prefill(lp["ssm"], h, cfg.d_model, cfg.ssm)
@@ -518,6 +544,108 @@ def _pack_prefill_cache(cfg: ModelConfig, run: RunSpec, kvs, T: int):
         return {"k": trim(k), "v": trim(v)}
     conv_state, state = kvs
     return {"conv": conv_state, "state": state}
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True iff every run can prefill incrementally against the decode arena.
+
+    Attention runs (GQA, sliding-window, MLA) replay their history from the
+    arena KV, so a prompt can be fed in chunks.  SSM and shared-attention
+    runs carry a recurrent / rolled state across positions that
+    ``ssm_prefill`` cannot currently resume from — those plans fall back to
+    whole-prompt prefill (still arena-direct via ``prefill_into_arena``).
+    """
+    return all(run.kind == "attn" for run in build_plan(cfg))
+
+
+def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
+                  lengths, slots, cache: List[Any]):
+    """Packed chunked prefill, writing K/V directly into the decode arena.
+
+    tokens: [N, C] (or [N, K, C] multi-codebook) — N chunk rows padded to C
+    tokens; row ``n`` holds prompt tokens [offsets[n], offsets[n]+lengths[n])
+    of the request in arena slot ``slots[n]``.  ``cache`` is the full decode
+    arena from ``init_cache(cfg, B, S)``; rows other than the addressed
+    slots are untouched (padded rows scatter out of bounds and drop).
+
+    Returns (last_logits [N, 1, ...], new_cache): the logits of each row's
+    last valid position — only meaningful for rows whose chunk completes
+    the prompt.  Requires ``supports_chunked_prefill(cfg)``.
+    """
+    plan = build_plan(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    x = constrain(x, "act_btd")
+    N = x.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    new_caches: List[Any] = []
+    for r, run in enumerate(plan):
+        if run.kind != "attn":
+            raise NotImplementedError(
+                f"chunked prefill over {run.kind!r} runs; gate on "
+                "supports_chunked_prefill() and use prefill_into_arena()")
+        rp = params["runs"][r]
+
+        def body(carry, xs, run=run):
+            xx, _ = carry
+            lp, lc = xs
+            xx, nc = _attn_layer_chunk(cfg, run, lp, xx, offsets, lengths,
+                                       slots, lc)
+            return (xx, None), nc
+
+        (x, _), ys = jax.lax.scan(body, (x, None), (rp, cache[r]))
+        new_caches.append(ys)
+        x = constrain(x, "act_btd")
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    h_last = x[jnp.arange(N), last][:, None, :]                  # [N, 1, d]
+    return lm_logits(params, cfg, h_last), new_caches
+
+
+def splice_arena(cfg: ModelConfig, cache: List[Any], piece: List[Any],
+                 slot) -> List[Any]:
+    """Write a single-request prefill cache (batch=1 ``piece``) into arena
+    slot ``slot`` — the CiM -> CiD handoff for run families that cannot
+    chunk (SSM recurrent state, shared attention).  Pure jnp (traceable
+    ``slot``), so the whole handoff stays inside one jitted program.
+
+    Attention pieces arrive from ``_pack_prefill_cache`` already trimmed /
+    rolled to ring order; the last ``min(P, R)`` entries land in arena
+    positions [0, pl) exactly as the decode ring expects.
+    """
+    plan = build_plan(cfg)
+    slot = jnp.asarray(slot, jnp.int32)
+    out: List[Any] = []
+    for run, arena, p in zip(plan, cache, piece):
+        if run.kind == "ssm":
+            upd = {}
+            for key in arena:
+                starts = (0, slot) + (0,) * (arena[key].ndim - 2)
+                upd[key] = jax.lax.dynamic_update_slice(
+                    arena[key], p[key].astype(arena[key].dtype), starts)
+            out.append(upd)
+            continue
+        d: Dict[str, Any] = {}
+        for key in arena:
+            a, pc = arena[key], p[key]
+            # attn caches: [L, B, S, ...] (batch=1, seq=2);
+            # shared_attn:  [B, S, ...]   (batch=0, seq=1)
+            b_ax, ax = (1, 2) if run.kind == "attn" else (0, 1)
+            pl = min(pc.shape[ax], a.shape[ax])
+            pc = jax.lax.slice_in_dim(pc, pc.shape[ax] - pl, pc.shape[ax],
+                                      axis=ax)
+            starts = tuple(slot if i == b_ax else 0 for i in range(a.ndim))
+            d[key] = jax.lax.dynamic_update_slice(
+                a, pc.astype(a.dtype), starts)
+        out.append(d)
+    return out
+
+
+def prefill_into_arena(params: Params, cfg: ModelConfig, batch, slot,
+                       cache: List[Any]):
+    """Whole-prompt prefill + arena splice as ONE jitted program (no
+    host-side cache surgery).  Returns (last_logits [1, 1, ...], new_cache)."""
+    logits, piece, _ = forward(params, cfg, batch, phase="prefill")
+    return logits, splice_arena(cfg, cache, piece, slot)
 
 
 def pad_cache(cfg: ModelConfig, cache: List[Any], prompt_len: int,

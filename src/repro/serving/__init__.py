@@ -1,10 +1,19 @@
+"""Phase-disaggregated serving: the engine EXECUTES the scheduler's TickPlan
+— chunked prefill packed into one batch per tick, K/V written directly into
+the decode arena (the HALO CiM -> CiD handoff), device-side sampling (one
+host transfer per tick), and strategy-routed worker-group programs.  See
+docs/serving.md for the tick loop and its mapping onto the paper."""
+
 from repro.serving.engine import (
     Request,
     RequestState,
     ServeConfig,
     ServingEngine,
+    TickRecord,
 )
-from repro.serving.scheduler import PhaseScheduler, PhaseAwareConfig
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
 
 __all__ = ["Request", "RequestState", "ServeConfig", "ServingEngine",
-           "PhaseScheduler", "PhaseAwareConfig"]
+           "TickRecord", "TickPlan", "PhaseScheduler", "PhaseAwareConfig",
+           "sample_tokens"]

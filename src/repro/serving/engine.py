@@ -1,29 +1,47 @@
-"""Serving engine: continuous batching with phase-disaggregated execution.
+"""Serving engine: continuous batching that EXECUTES the phase scheduler's
+plan — chunked prefill, arena-direct KV writes, device-side sampling.
 
-The engine owns two jitted programs over the SAME weights:
+The engine owns a small table of jitted programs, keyed by (worker group,
+phase kind).  On a production mesh the two groups are distinct worker
+pools running differently-sharded executables (HALO: CiM for prefill
+GEMMs, CiD for decode GEMVs); here they are separate jit instances and
+the strategy (``halo`` / ``cent`` / ``attacc``) decides which group's
+program serves each phase — exactly what ``TickPlan`` carries.
 
-  * ``prefill_fn``  — full-sequence forward returning (last_logits, cache);
-    on the production mesh this is the compute-sharded program (HALO: CiM);
-  * ``decode_fn``   — one-token step against the batched KV cache;
-    bandwidth-sharded (HALO: CiD).
+One engine tick = one ``PhaseScheduler.plan_tick`` executed verbatim:
 
-Requests flow: queue -> (chunked) prefill -> KV handoff into a decode slot
--> continuous decode until EOS/max_tokens -> slot freed and refilled.  The
-decode cache is a fixed [max_batch, max_len] arena; per-slot write indices
-and validity masks implement right-aligned ragged batching (a slot's prompt
-occupies positions [0, plen); generation continues at plen, plen+1, ...).
+  1. admit       — waiting requests claim free decode slots;
+  2. prefill     — the plan's (request, n_tokens) chunks are packed into
+                   ONE padded batch and run through the prefill-group
+                   program, which writes K/V directly into the decode
+                   arena at each request's slot and offset (the HALO
+                   CiM -> CiD handoff, formerly a host-side splice loop).
+                   Long prompts therefore prefill across several ticks,
+                   interleaved with decode — the TTFT/TPOT trade-off;
+  3. decode      — one batched token step for every DECODING slot, with
+                   greedy / temperature / top-k sampling INSIDE the jitted
+                   program: one [B]-shaped host transfer per tick instead
+                   of a per-slot ``int(jnp.argmax(...))`` sync.
 
-This is a single-host engine; launch/serve.py instantiates it either on the
-host CPU (examples, tests) or under the production mesh with the decode
-shardings from distributed/sharding.py.
+SSM / shared-attention plans cannot resume a recurrent state mid-prompt,
+so their prefill falls back to whole-prompt — still a single jitted
+program that splices the state into the arena on device
+(``prefill_into_arena``); the scheduler plans those prompts as atomic
+chunks.  Per-request TTFT/TPOT and a per-tick ``tick_log`` (phase
+occupancy, groups, wall time) feed benchmarks/serving_bench.py.
+
+This is a single-host engine; launch/serve.py instantiates it either on
+the host CPU (examples, tests) or under the production mesh with the
+decode shardings from distributed/sharding.py.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,12 +49,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import (
-    build_plan,
-    cache_len,
     forward,
+    forward_chunk,
     init_cache,
+    prefill_into_arena,
+    supports_chunked_prefill,
 )
-from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
 
 
 class RequestState(Enum):
@@ -54,9 +74,10 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the engine
     state: RequestState = RequestState.WAITING
-    generated: List[int] = field(default_factory=list)
+    generated: List[Any] = field(default_factory=list)
     slot: int = -1
     prompt_len: int = 0
+    prefill_pos: int = 0                # prompt tokens already in the arena
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -71,12 +92,40 @@ class Request:
         return (self.t_done - self.t_first_token) / n
 
 
+@dataclass
+class TickRecord:
+    """One engine tick as executed (mirrors the TickPlan it consumed)."""
+    index: int
+    prefill_reqs: List[int]
+    prefill_tokens: int
+    decode_reqs: List[int]
+    prefill_group: str
+    decode_group: str
+    wall_s: float
+
+    @property
+    def mixed(self) -> bool:
+        """Both phases ran this tick (prefill/decode interleaving)."""
+        return bool(self.prefill_reqs) and bool(self.decode_reqs)
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_len: int = 512
     phase: PhaseAwareConfig = field(default_factory=PhaseAwareConfig)
     greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Round up to a power of two (capped) — bounds jit recompiles."""
+    b = 1
+    while b < n:
+        b *= 2
+    return max(1, min(b, cap)) if cap else b
 
 
 class ServingEngine:
@@ -93,21 +142,67 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # bounded record of recent ticks (a long-lived engine must not grow
+        # per-tick state without bound); occupancy uses running counters
+        self.tick_log: Deque[TickRecord] = deque(maxlen=65_536)
+        self._n_ticks = 0
+        self._n_prefill_ticks = 0
+        self._n_decode_ticks = 0
+        self._n_mixed_ticks = 0
+        self.host_transfers = 0          # device->host syncs (see _to_host)
         self._next_id = 0
+        self.chunked = (supports_chunked_prefill(cfg)
+                        and sc.phase.prefill_chunk > 0)
+        # (group, kind) -> jitted program; built lazily so each strategy
+        # only compiles the programs its groups actually execute
+        self._programs: Dict[Tuple[str, str], Callable] = {}
+        self._rng = jax.random.PRNGKey(sc.seed)
+        self._key0 = jax.random.PRNGKey(sc.seed)
 
-        # jitted programs (separate = phase-disaggregation; they would live
-        # on different worker groups on a real cluster)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+    # -- program table ---------------------------------------------------------
+    def _program(self, group: str, kind: str) -> Callable:
+        """Jitted program for (worker group, phase kind).
 
-    # -- jitted bodies --------------------------------------------------------
-    def _prefill_impl(self, params, tokens, positions, pad_mask):
-        """tokens [1, T_pad]; returns (last_logits [1, ...], cache pieces)."""
-        logits, cache, _ = forward(params, self.cfg,
-                                   {"tokens": tokens}, phase="prefill")
-        return logits, cache
+        Each (group, kind) pair is a SEPARATE jit instance — the software
+        analogue of phase disaggregation: on a cluster these are distinct
+        executables resident on different worker pools, and the strategy
+        table routes each phase to one of them.  ``kind``: "chunk"
+        (packed chunked prefill), "whole" (whole-prompt prefill + arena
+        splice, for SSM/hybrid plans), "decode" (one-token batched step).
+        """
+        key = (group, kind)
+        if key not in self._programs:
+            # the arena argument is donated: the engine rebinds self.cache
+            # to the program's output every call, so XLA updates the KV
+            # arena in place instead of copying it each tick
+            impl, cache_arg = {
+                "chunk": (self._prefill_chunk_impl, 5),
+                "whole": (self._prefill_whole_impl, 3),
+                "decode": (self._decode_impl, 2)}[kind]
+            self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,))
+        return self._programs[key]
 
-    def _decode_impl(self, params, tokens, cache, pos, slot_mask):
+    # -- jitted bodies ---------------------------------------------------------
+    def _sample(self, logits, key):
+        """logits [N, 1, V] (or [N, 1, K, V]) -> int32 tokens [N] / [N, K]."""
+        return sample_tokens(logits[:, -1], greedy=self.sc.greedy,
+                             temperature=self.sc.temperature,
+                             top_k=self.sc.top_k, key=key)
+
+    def _prefill_chunk_impl(self, params, tokens, offsets, lengths, slots,
+                            cache, key):
+        """Packed chunk prefill: K/V written arena-direct at (slot, offset)."""
+        logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
+                                          lengths, slots, cache)
+        return self._sample(logits, key), new_cache
+
+    def _prefill_whole_impl(self, params, tokens, slot, cache, key):
+        """Whole-prompt prefill + on-device arena splice (SSM / hybrid)."""
+        logits, new_cache = prefill_into_arena(
+            params, self.cfg, {"tokens": tokens}, slot, cache)
+        return self._sample(logits, key), new_cache
+
+    def _decode_impl(self, params, tokens, cache, pos, slot_mask, key):
         logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
                                        phase="decode", cache=cache, pos=pos)
         # frozen slots keep their old cache (mask out writes of idle slots).
@@ -123,7 +218,7 @@ class ServingEngine:
             return jnp.where(b, new, old)
 
         merged = jax.tree.map(merge, cache, new_cache)
-        return logits, merged
+        return self._sample(logits, key), merged
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
@@ -131,10 +226,34 @@ class ServingEngine:
         req = Request(self._next_id, np.asarray(prompt, np.int32),
                       max_new_tokens, eos_id)
         req.prompt_len = int(req.prompt.shape[-1])
+        if req.prompt_len >= self.sc.max_len:
+            raise ValueError(
+                f"prompt of {req.prompt_len} tokens does not fit "
+                f"max_len={self.sc.max_len} (need >= 1 decode position)")
         req.t_submit = time.monotonic()
         self._next_id += 1
         self.queue.append(req)
         return req
+
+    # -- helpers ----------------------------------------------------------------
+    def _to_host(self, arr) -> np.ndarray:
+        """The engine's single device->host transfer point.
+
+        Each PHASE PROGRAM CALL moves at most one token array ([B] or
+        [B, K]) through here — one for the packed prefill batch, one for
+        the decode step (so a mixed tick makes two; the per-request
+        whole-prompt fallback makes one per call).  What device-side
+        sampling eliminates is the per-SLOT logits sync; tests monkeypatch
+        this to pin that down.
+        """
+        self.host_transfers += 1
+        return np.asarray(arr)
+
+    def _next_key(self):
+        if self.sc.greedy:
+            return self._key0                   # unused by argmax sampling
+        self._rng, k = jax.random.split(self._rng)
+        return k
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -151,64 +270,33 @@ class ServingEngine:
             admitted.append(req)
         return admitted
 
-    def _run_prefill(self, req: Request) -> None:
-        """Prefill one request and splice its KV into the decode arena.
+    def _by_id(self) -> Dict[int, Request]:
+        return {r.req_id: r for r in self.slot_req if r is not None}
 
-        The splice IS the HALO handoff: on a disaggregated deployment the
-        prefill group computes the cache and ships it to the decode group.
-        """
-        T = req.prompt_len
-        tokens = jnp.asarray(req.prompt[None], jnp.int32)
-        if tokens.ndim == 3:
-            pass                                         # [1, K, T] musicgen
-        logits, cache = self._prefill(
-            self.params, tokens,
-            jnp.arange(T, dtype=jnp.int32)[None],
-            jnp.ones((1, T), jnp.bool_))
-        self._splice_cache(req.slot, cache, T)
-        self.slot_pos[req.slot] = T
-        tok = int(jnp.argmax(logits[0, -1], -1).reshape(-1)[0])
-        req.generated.append(tok)
+    def _append_token(self, req: Request, tok_row) -> None:
+        flat = np.asarray(tok_row).reshape(-1)
+        if self.cfg.n_codebooks > 1:
+            req.generated.append([int(t) for t in flat])
+        else:
+            req.generated.append(int(flat[0]))
+
+    def _start_decoding(self, req: Request, tok_row) -> None:
+        self.slot_pos[req.slot] = req.prompt_len
+        self._append_token(req, tok_row)
         req.t_first_token = time.monotonic()
         req.state = RequestState.DECODING
         if self._finished(req):
             self._retire(req)
 
-    def _splice_cache(self, slot: int, new_cache, T: int) -> None:
-        """Copy a single-request prefill cache into arena slot ``slot``."""
-        plan = build_plan(self.cfg)
-        S = self.sc.max_len
-        out = []
-        for run, arena, piece in zip(plan, self.cache, new_cache):
-            if run.kind == "ssm":
-                upd = {k: arena[k].at[:, slot:slot + 1].set(piece[k])
-                       for k in arena}
-                out.append(upd)
-                continue
-            d: Dict[str, Any] = {}
-            for k in arena:
-                a, p = arena[k], piece[k]
-                # attn caches: [L, B, S, ...] (batch=1, seq=2);
-                # shared_attn:  [B, S, ...]   (batch=0, seq=1)
-                b_ax, ax = (1, 2) if run.kind == "attn" else (0, 1)
-                Sa = a.shape[ax]
-                pl = min(p.shape[ax], Sa)
-                sl_a = [slice(None)] * a.ndim
-                sl_p = [slice(None)] * p.ndim
-                sl_a[b_ax] = slice(slot, slot + 1)
-                sl_a[ax] = slice(0, pl)
-                sl_p[b_ax] = slice(0, 1)
-                sl_p[ax] = slice(p.shape[ax] - pl, p.shape[ax])
-                d[k] = a.at[tuple(sl_a)].set(p[tuple(sl_p)])
-            out.append(d)
-        self.cache = out
-
     def _finished(self, req: Request) -> bool:
         if len(req.generated) >= req.max_new_tokens:
             return True
-        if (req.eos_id is not None and req.generated
-                and req.generated[-1] == req.eos_id):
-            return True
+        if req.eos_id is not None and req.generated:
+            last = req.generated[-1]
+            if isinstance(last, list):          # multi-codebook: codebook 0
+                last = last[0] if last else None
+            if last == req.eos_id:
+                return True
         if self.slot_pos[req.slot] >= self.sc.max_len - 1:
             return True
         return False
@@ -220,40 +308,110 @@ class ServingEngine:
         self.slot_pos[req.slot] = -1
         self.done.append(req)
 
-    def _run_decode_tick(self) -> None:
-        active = [r for r in self.slot_req if r is not None
-                  and r.state == RequestState.DECODING]
+    # -- phase execution --------------------------------------------------------
+    def _run_prefill_tick(self, plan: TickPlan) -> None:
+        """Execute the plan's prefill chunks on the planned worker group."""
+        reqs = self._by_id()
+        chunks = [(reqs[rid], take) for rid, take in plan.prefill_chunks
+                  if rid in reqs]
+        if not chunks:
+            return
+        if not self.chunked:
+            # atomic whole-prompt prefill (SSM / shared-attn state handoff)
+            for req, take in chunks:
+                tokens = jnp.asarray(req.prompt[None], jnp.int32)
+                toks, self.cache = self._program(plan.prefill_group, "whole")(
+                    self.params, tokens, jnp.int32(req.slot), self.cache,
+                    self._next_key())
+                req.prefill_pos = req.prompt_len
+                self._start_decoding(req, self._to_host(toks)[0])
+            return
+
+        # pack the tick's chunks into one padded batch (pow2 buckets bound
+        # the number of compiled shapes)
+        N = _bucket(len(chunks), self.sc.max_batch)
+        C = _bucket(max(take for _, take in chunks), self.sc.phase.prefill_chunk)
+        if self.cfg.n_codebooks > 1:
+            tokens = np.zeros((N, self.cfg.n_codebooks, C), np.int32)
+        else:
+            tokens = np.zeros((N, C), np.int32)
+        offs = np.zeros((N,), np.int32)
+        lens = np.zeros((N,), np.int32)
+        slots = np.full((N,), self.sc.max_batch, np.int32)  # OOB rows: drop
+        for i, (req, take) in enumerate(chunks):
+            sl = slice(req.prefill_pos, req.prefill_pos + take)
+            tokens[i, ..., :take] = req.prompt[..., sl]
+            offs[i] = req.prefill_pos
+            lens[i] = take
+            slots[i] = req.slot
+        toks, self.cache = self._program(plan.prefill_group, "chunk")(
+            self.params, jnp.asarray(tokens), jnp.asarray(offs),
+            jnp.asarray(lens), jnp.asarray(slots), self.cache,
+            self._next_key())
+        sampled = None
+        for i, (req, take) in enumerate(chunks):
+            req.prefill_pos += take
+            if req.prefill_pos >= req.prompt_len:
+                if sampled is None:
+                    sampled = self._to_host(toks)   # one transfer per tick
+                self._start_decoding(req, sampled[i])
+
+    def _run_decode_tick(self, plan: TickPlan) -> None:
+        reqs = self._by_id()
+        active = [reqs[rid] for rid in plan.decode_reqs
+                  if rid in reqs and reqs[rid].state == RequestState.DECODING]
         if not active:
             return
         B = self.sc.max_batch
-        tokens = np.zeros((B, 1), np.int32)
+        if self.cfg.n_codebooks > 1:
+            tokens = np.zeros((B, self.cfg.n_codebooks, 1), np.int32)
+        else:
+            tokens = np.zeros((B, 1), np.int32)
         mask = np.zeros((B,), bool)
         for r in active:
-            tokens[r.slot, 0] = r.generated[-1]
+            tokens[r.slot, ..., 0] = r.generated[-1]
             mask[r.slot] = True
         # ragged decode: per-slot positions (vector pos -> per-slot rope,
         # per-slot cache write index, per-slot validity mask)
         pos = np.where(self.slot_pos >= 0, self.slot_pos, 0).astype(np.int32)
-        logits, self.cache = self._decode(
+        toks, self.cache = self._program(plan.decode_group, "decode")(
             self.params, jnp.asarray(tokens), self.cache,
-            jnp.asarray(pos), jnp.asarray(mask))
+            jnp.asarray(pos), jnp.asarray(mask), self._next_key())
+        sampled = self._to_host(toks)               # one transfer per tick
         for r in active:
-            tok = int(jnp.argmax(logits[r.slot, -1], -1).reshape(-1)[0])
-            r.generated.append(tok)
+            self._append_token(r, sampled[r.slot])
             self.slot_pos[r.slot] += 1
             if self._finished(r):
                 self._retire(r)
 
+    # -- tick loop ---------------------------------------------------------------
     def step(self) -> Dict[str, int]:
-        """One engine tick: admit -> prefill -> decode (continuous batching)."""
-        admitted = self._admit()
-        waiting = [(r.req_id, r.prompt_len) for r in admitted]
+        """One engine tick: plan (scheduler) -> execute (this method)."""
+        t0 = time.monotonic()
+        self._admit()
+        prefilling = [(r.req_id, r.prompt_len - r.prefill_pos, self.chunked)
+                      for r in self.slot_req
+                      if r is not None and r.state == RequestState.PREFILLING]
         decoding = [r.req_id for r in self.slot_req
                     if r is not None and r.state == RequestState.DECODING]
-        plan = self.scheduler.plan_tick(waiting, decoding)
-        for r in admitted:
-            self._run_prefill(r)
-        self._run_decode_tick()
+        plan = self.scheduler.plan_tick(prefilling, decoding)
+        if plan.prefill_chunks:
+            self._run_prefill_tick(plan)
+        if plan.decode_reqs:
+            self._run_decode_tick(plan)
+        rec = TickRecord(
+            index=self._n_ticks,
+            prefill_reqs=list(plan.prefill_reqs),
+            prefill_tokens=plan.prefill_tokens,
+            decode_reqs=list(plan.decode_reqs),
+            prefill_group=plan.prefill_group,
+            decode_group=plan.decode_group,
+            wall_s=time.monotonic() - t0)
+        self.tick_log.append(rec)
+        self._n_ticks += 1
+        self._n_prefill_ticks += bool(rec.prefill_reqs)
+        self._n_decode_ticks += bool(rec.decode_reqs)
+        self._n_mixed_ticks += rec.mixed
         return {"queued": len(self.queue),
                 "active": sum(r is not None for r in self.slot_req),
                 "done": len(self.done)}
@@ -264,3 +422,21 @@ class ServingEngine:
             self.step()
             ticks += 1
         return self.done
+
+    # -- metrics ------------------------------------------------------------------
+    @property
+    def n_ticks(self) -> int:
+        """Lifetime tick count (``tick_log`` itself is bounded)."""
+        return self._n_ticks
+
+    def phase_occupancy(self) -> Dict[str, float]:
+        """Fractions of ticks running prefill / decode / both (interleave).
+
+        Computed from running counters, so the numbers cover the engine's
+        whole lifetime even after ``tick_log`` (bounded) has rotated."""
+        n = max(self._n_ticks, 1)
+        return {
+            "prefill": self._n_prefill_ticks / n,
+            "decode": self._n_decode_ticks / n,
+            "mixed": self._n_mixed_ticks / n,
+        }

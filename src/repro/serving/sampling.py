@@ -1,0 +1,39 @@
+"""Device-side token sampling for the serving engine.
+
+The seed engine pulled full logits to the host and ran one
+``int(jnp.argmax(...))`` per active slot per tick — B blocking
+device->host syncs per decode step.  Sampling INSIDE the jitted phase
+program instead returns a single int32 token array ([B] or [B, K] for
+multi-codebook heads), so the engine performs exactly one host transfer
+per tick regardless of batch size.  Greedy is the default (and is what
+the token-identity tests pin down); temperature / top-k sampling shares
+the same entry point and threads a PRNG key through the tick loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sample_tokens(logits, *, greedy: bool = True, temperature: float = 1.0,
+                  top_k: int = 0, key=None):
+    """logits [..., V] float -> int32 token ids [...].
+
+    greedy: argmax (deterministic, key unused).  Otherwise softmax sampling
+    at ``temperature`` with optional top-k truncation; ``key`` required.
+    """
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("non-greedy sampling requires a PRNG key")
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    if top_k and top_k > 0:
+        k = min(int(top_k), scaled.shape[-1])   # clamp: top_k may exceed V
+        kth = jnp.sort(scaled, axis=-1)[..., -k][..., None]
+        scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+    flat = scaled.reshape(-1, scaled.shape[-1])
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks.reshape(scaled.shape[:-1]).astype(jnp.int32)

@@ -9,24 +9,30 @@ decode worker group runs the bandwidth-optimized program (int8 weight
 streaming GEMVs, sequence-sharded KV caches), and finished prefills hand
 their KV cache across (HALO's 2.5D interposer hop = the ICI/DCN transfer).
 
-The scheduler below decides, per request and per tick, which group works on
-what — mirroring Table II of the paper:
+``PhaseScheduler.plan_tick`` decides, per tick, which group works on what —
+and the engine EXECUTES that plan: ``TickPlan.prefill_chunks`` names the
+exact (request, token-count) prefill work of the tick, ``decode_reqs`` the
+decode occupants, and the two ``*_group`` fields select which worker
+group's compiled program serves each phase, mirroring Table II of the
+paper:
 
   halo      prefill -> prefill-group, decode -> decode-group (phase-aware)
   cent      everything on the decode-style group (fully CiD analogue)
   attacc    attention on the decode group, the rest on the prefill group —
-            modeled at whole-phase granularity as: decode runs on the
-            prefill-group program except attention-dominated steps.
+            modeled at whole-phase granularity as: both phases run the
+            prefill-group's programs.
 
-It also implements continuous batching (decode slots freed by finished
-requests are refilled immediately) and chunked prefill (long prompts are
-processed in chunks so decode ticks interleave — TTFT/TPOT trade-off).
+Continuous batching (decode slots freed by finished requests are refilled
+immediately) and chunked prefill (long prompts processed in
+``prefill_chunk``-sized pieces under a per-tick token budget, so decode
+ticks interleave — the TTFT/TPOT trade-off) are both planned here and
+carried out by ``ServingEngine.step``.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -34,16 +40,33 @@ class PhaseAwareConfig:
     strategy: str = "halo"             # halo | cent | attacc
     max_decode_batch: int = 8          # decode slots (continuous batching)
     max_prefill_tokens: int = 8192     # per prefill tick (chunked prefill)
-    prefill_chunk: int = 2048
+    prefill_chunk: int = 2048          # <= 0: whole-prompt (unchunked)
+
+    def __post_init__(self):
+        if self.max_prefill_tokens < 1:
+            # a zero budget plans no prefill work at all: every request
+            # would sit PREFILLING forever and the engine would spin
+            raise ValueError(
+                f"max_prefill_tokens must be >= 1, got "
+                f"{self.max_prefill_tokens}")
+        if self.max_decode_batch < 1:
+            raise ValueError(
+                f"max_decode_batch must be >= 1, got {self.max_decode_batch}")
 
 
 @dataclass
 class TickPlan:
     prefill_reqs: List[int] = field(default_factory=list)   # request ids
     decode_reqs: List[int] = field(default_factory=list)
+    # (req_id, n_tokens) prefill work this tick, aligned with prefill_reqs
+    prefill_chunks: List[Tuple[int, int]] = field(default_factory=list)
     # which worker group executes each phase this tick
     prefill_group: str = "prefill"
     decode_group: str = "decode"
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(t for _, t in self.prefill_chunks)
 
 
 class PhaseScheduler:
@@ -62,25 +85,41 @@ class PhaseScheduler:
             return "prefill", "prefill"
         raise ValueError(s)
 
-    def plan_tick(self, waiting: List[Tuple[int, int]],
+    def plan_tick(self, waiting: Sequence[tuple],
                   decoding: List[int]) -> TickPlan:
-        """waiting: [(req_id, remaining_prompt_tokens)]; decoding: [req_id].
+        """waiting: [(req_id, remaining_prompt_tokens[, chunkable])];
+        decoding: [req_id].
 
         Greedy: fill decode slots first (latency), then admit prefill work
-        up to the token budget (chunked).
+        up to the token budget.  Chunkable requests take at most
+        ``prefill_chunk`` tokens per tick; non-chunkable ones (SSM /
+        shared-attention plans, whose recurrent state cannot resume
+        mid-prompt) are scheduled atomically as one whole-prompt chunk.
         """
         pg, dg = self.groups_for()
         plan = TickPlan(prefill_group=pg, decode_group=dg)
         plan.decode_reqs = decoding[: self.cfg.max_decode_batch]
         budget = self.cfg.max_prefill_tokens
         free_slots = self.cfg.max_decode_batch - len(plan.decode_reqs)
-        for rid, remaining in waiting:
+        for entry in waiting:
+            rid, remaining = entry[0], entry[1]
+            chunkable = entry[2] if len(entry) > 2 else True
             if free_slots <= 0 and budget <= 0:
                 break
-            take = min(remaining, self.cfg.prefill_chunk, max(budget, 0))
+            if chunkable:
+                take = min(remaining, self.cfg.prefill_chunk, max(budget, 0))
+            else:
+                # atomic: whole prompt or nothing.  The first atomic prompt
+                # may exceed the budget (it cannot be split), but a spent
+                # budget admits no further ones — otherwise a queue of long
+                # SSM prompts would serialize ahead of the tick's decode
+                # phase, exactly the head-of-line blocking the budget exists
+                # to prevent.
+                take = remaining if budget > 0 else 0
             if take <= 0:
                 break
             plan.prefill_reqs.append(rid)
+            plan.prefill_chunks.append((rid, take))
             budget -= take
             if take >= remaining:
                 free_slots -= 1        # request becomes a decode occupant
