@@ -1,22 +1,32 @@
 """Serving-engine benchmark: TTFT / TPOT / throughput on the reduced model.
 
-Two sweeps, both measured on real execution of this framework's serving
+Three sweeps, all measured on real execution of this framework's serving
 engine rather than the analytical model:
 
   * strategy sweep (halo / cent / attacc) — the system-level counterpart
     of the paper's Fig. 7: same math, different worker-group routing;
   * chunked vs unchunked prefill at long prompts — the TTFT-vs-TPOT
     trade-off that phase-interleaved scheduling buys (chunked prefill
-    lets decode ticks run between the chunks of a long prompt).
+    lets decode ticks run between the chunks of a long prompt);
+  * dense vs paged KV arena at growing context lengths — resident KV
+    bytes, preemption counts, TTFT/TPOT: the paged pool backs only live
+    tokens (and admits prompts beyond max_len) where the dense arena
+    pins max_batch x max_len whatever the occupancy.
 
 Also reports the per-tick decode wall time at max_batch=8 — the number
 device-side sampling improves (one host transfer per tick instead of one
 blocking argmax sync per slot).
+
+Runnable directly as a tier-2 smoke job:
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --quick
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import sys
 import time
 from typing import List, Tuple
 
@@ -38,7 +48,7 @@ def _cfg_params():
 
 def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
          prompt_len=24, requests=8, max_new=8, prefill_chunk=2048,
-         max_prefill_tokens=8192):
+         max_prefill_tokens=8192, paged=False, page_size=8, n_pages=64):
     from repro.serving.engine import ServeConfig, ServingEngine
     from repro.serving.scheduler import PhaseAwareConfig
 
@@ -46,7 +56,8 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
                      phase=PhaseAwareConfig(
                          strategy=strategy, max_decode_batch=max_batch,
                          prefill_chunk=prefill_chunk,
-                         max_prefill_tokens=max_prefill_tokens))
+                         max_prefill_tokens=max_prefill_tokens),
+                     paged=paged, page_size=page_size, n_pages=n_pages)
     eng = ServingEngine(cfg, params, sc)
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
@@ -121,4 +132,75 @@ def bench_decode_tick() -> List[Row]:
     ]
 
 
-ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick]
+def bench_paged_vs_dense() -> List[Row]:
+    """Dense arena vs paged block pool at >= 2 context lengths: resident
+    KV bytes (the paged win), preemption count (the paged cost under an
+    undersized pool), and TTFT/TPOT (the relayout must not tax latency).
+    The paged pool is sized to ~60% of the dense arena's token footprint,
+    so the longer-context rows exercise preemption + recompute-on-resume.
+    """
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+    for plen, max_new in ((48, 8), (96, 8)):
+        max_len = plen + max_new + 8
+        total = plen + max_new
+        for label, paged in (("dense", False), ("paged", True)):
+            # pool: ~2.5 requests' worth of pages at 4 decode slots
+            n_pages = max((5 * total) // (2 * 8), 2)
+            eng, done, wall = _run(cfg, params, max_batch=4, max_len=max_len,
+                                   prompt_len=plen, requests=6,
+                                   max_new=max_new, paged=paged,
+                                   page_size=8, n_pages=n_pages)
+            kv = eng.kv_bytes()
+            toks = sum(len(r.generated) for r in done)
+            pre = f"serve.{label}.ctx{plen}"
+            rows.append((f"{pre}.ttft_p50_ms",
+                         float(np.median([r.ttft for r in done])) * 1e3,
+                         "ms", ""))
+            rows.append((f"{pre}.tpot_p50_ms",
+                         float(np.median([r.tpot for r in done])) * 1e3,
+                         "ms", ""))
+            rows.append((f"{pre}.throughput", toks / wall, "tok/s", ""))
+            rows.append((f"{pre}.kv_reserved_mb",
+                         kv["reserved"] / 1e6, "MB", ""))
+            rows.append((f"{pre}.kv_peak_resident_mb",
+                         kv["peak_resident"] / 1e6, "MB", ""))
+            rows.append((f"{pre}.preemptions",
+                         float(eng.preemptions), "count", ""))
+    return rows
+
+
+ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick,
+       bench_paged_vs_dense]
+
+
+def main(argv=None) -> int:
+    """Standalone entry point (tier-2 smoke): ``--quick`` runs a reduced
+    paged-vs-dense sweep and asserts its sanity invariants."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small paged-vs-dense sweep only (CI smoke)")
+    args = ap.parse_args(argv)
+
+    print("name,value,unit,paper")
+    suites = [bench_paged_vs_dense] if args.quick else ALL
+    rows: List[Row] = []
+    for fn in suites:
+        rows.extend(fn())
+    for name, value, unit, paper in rows:
+        print(f"{name},{value:.6g},{unit},{paper}")
+    if args.quick:
+        vals = {n: v for n, v, _, _ in rows}
+        for plen in (48, 96):
+            dense = vals[f"serve.dense.ctx{plen}.kv_reserved_mb"]
+            paged = vals[f"serve.paged.ctx{plen}.kv_peak_resident_mb"]
+            assert paged < dense, (
+                f"paged peak-resident ({paged} MB) should undercut the "
+                f"dense reservation ({dense} MB) at ctx {plen}")
+        print("# quick smoke OK: paged peak-resident < dense reservation "
+              "at both context lengths", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

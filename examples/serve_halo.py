@@ -25,13 +25,15 @@ from repro.serving.scheduler import PhaseAwareConfig
 
 def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_batch=4, max_len=128, prefill_chunk=2048,
-               max_prefill_tokens=8192):
+               max_prefill_tokens=8192, paged=False, page_size=16,
+               n_pages=64):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
                                max_decode_batch=max_batch,
                                prefill_chunk=prefill_chunk,
-                               max_prefill_tokens=max_prefill_tokens)))
+                               max_prefill_tokens=max_prefill_tokens),
+        paged=paged, page_size=page_size, n_pages=n_pages))
     t0 = time.monotonic()
     for p in prompts:
         engine.submit(p.copy(), max_new_tokens=max_new)
@@ -92,10 +94,33 @@ def main():
               f"{np.median([r.tpot for r in done])*1e3:9.1f}ms "
               f"{toks/wall:8.1f} {occ['mixed']:11.2f}")
 
+    print(f"\n{'kv arena':22s} {'prompt':>7s} {'reserved':>10s} "
+          f"{'peak-res':>10s} {'preempt':>8s}  outputs identical?")
+    for plen in (48, 96):
+        stream = [rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
+                  for _ in range(6)]
+        ml = plen + args.max_new + 8
+        ed, dd2, _ = run_stream(cfg, params, stream, max_new=args.max_new,
+                                max_len=ml)
+        # paged pool sized to ~half the dense arena's token capacity:
+        # requests overlap, the pool preempts and recomputes as needed
+        ep, dp, _ = run_stream(cfg, params, stream, max_new=args.max_new,
+                               max_len=ml, paged=True, page_size=8,
+                               n_pages=max(3 * (plen + args.max_new) // 16, 4))
+        same = ("yes" if [r.generated for r in dp]
+                == [r.generated for r in dd2] else "NO")
+        for label, eng, done in (("dense", ed, dd2), ("paged", ep, dp)):
+            kv = eng.kv_bytes()
+            print(f"{label:22s} {plen:7d} {kv['reserved']/1e6:9.2f}M "
+                  f"{kv['peak_resident']/1e6:9.2f}M "
+                  f"{eng.preemptions:8d}  {same if label == 'paged' else ''}")
+
     print("\nNote: strategies schedule the same math onto different worker "
           "groups (separate compiled programs); outputs must match exactly. "
           "On TPU the groups run compute- vs bandwidth-sharded programs — "
-          "see docs/serving.md and DESIGN.md §Adaptation.")
+          "see docs/serving.md and DESIGN.md §Adaptation.  The paged arena "
+          "(docs/serving.md §Paged) bounds capacity by POOL size, not "
+          "max_len: same tokens, a fraction of the resident KV bytes.")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,25 @@
-"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+"""Flash-decode Pallas kernels: one query token vs a long KV cache.
 
-The decode GEMV sweep HALO maps to CiD.  Grid: (B, S/bs) — the cache is
-tiled along the sequence axis and each tile is read from HBM exactly once;
-the per-(head) online-softmax state rides in VMEM scratch across tiles.
-Entries beyond ``length`` (unwritten slots / padding) are masked out, so the
-kernel works with ring buffers and right-padded serving batches alike.
+The decode GEMV sweep HALO maps to CiD.  Two layouts:
+
+* ``decode_attention`` — dense per-slot cache [B, S, Hkv, D].  Grid:
+  (B, ceil(S/bs)) — the cache is tiled along the sequence axis and each
+  tile is read from HBM exactly once; the per-(head) online-softmax state
+  rides in VMEM scratch across tiles.  Entries beyond ``length``
+  (unwritten slots / padding) are masked out, so the kernel works with
+  ring buffers and right-padded serving batches alike.  ``S`` need not be
+  a multiple of ``bs``: the final tile is ragged (Pallas pads the block;
+  the length mask already discards the tail).
+
+* ``paged_decode_attention`` — block-pool cache [n_pages, P, Hkv, D]
+  shared by every sequence, addressed through per-sequence block tables
+  [B, W].  Grid: (B, W) — one step per logical page; the block table and
+  lengths ride in SMEM via scalar prefetch, so each step's BlockSpec
+  index_map GATHERS the physical page the table names (HALO reading: the
+  block table is the CiD bank/row decoder — a page is a contiguous row
+  burst, and the indirection happens in the address path, not the data
+  path).  Same online-softmax scratch as the dense kernel; pages past
+  ``length`` or mapped to the unallocated sentinel are skipped whole.
 
 Per-tile working set (bs=1024, Hkv=8, D=128, bf16): k/v 2x1024x8x128x2 = 4 MB.
 """
@@ -40,6 +55,10 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
         q = q_ref[0].reshape(Hkv, G, D)                      # [Hkv,G,D]
         k = k_ref[0]                                         # [bs,Hkv,D]
         v = v_ref[0]
+        # zero masked rows of v: a ragged final tile is padded with
+        # unspecified values, and 0 * non-finite would poison p @ v
+        row = s_start + jax.lax.broadcasted_iota(jnp.int32, (bs, 1, 1), 0)
+        v = jnp.where(row < length, v, 0.0).astype(v.dtype)
         s = jax.lax.dot_general(
             q, k, (((2,), (2,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)              # [Hkv,G,bs]
@@ -75,8 +94,7 @@ def decode_attention(q, k_cache, v_cache, lengths, *, bs: int = 1024,
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
     bs = min(bs, S)
-    assert S % bs == 0
-    ns = S // bs
+    ns = pl.cdiv(S, bs)          # final tile may be ragged (masked below)
     scale = 1.0 / math.sqrt(D)
     out = pl.pallas_call(
         functools.partial(_decode_kernel, ns=ns, bs=bs, scale=scale,
@@ -97,4 +115,114 @@ def decode_attention(q, k_cache, v_cache, lengths, *, bs: int = 1024,
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, lengths.astype(jnp.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged variant (block-pool cache)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref,
+                         *, nw: int, ps: int, n_pages: int, scale: float,
+                         Hkv: int, G: int, D: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    s_start = i * ps
+    # logical page i of sequence b lives in physical page bt[b, i]; entries
+    # >= n_pages are the "never allocated" sentinel — skip the page whole
+    allocated = bt_ref[b, i] < n_pages
+
+    @pl.when((s_start < length) & allocated)
+    def _compute():
+        q = q_ref[0].reshape(Hkv, G, D)                      # [Hkv,G,D]
+        k = k_ref[0]                                         # [ps,Hkv,D]
+        v = v_ref[0]
+        row = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1, 1), 0)
+        v = jnp.where(row < length, v, 0.0).astype(v.dtype)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,ps]
+        s = s * scale
+        idx = s_start + jax.lax.broadcasted_iota(jnp.int32, (Hkv, G, ps), 2)
+        s = jnp.where(idx < length, s, NEG_INF)
+
+        m_prev = m_ref[...].reshape(Hkv, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)                               # [Hkv,G,ps]
+        corr = jnp.exp(m_prev - m_new)                       # [Hkv,G,1]
+        l_new = l_ref[...].reshape(Hkv, G, 1) * corr + jnp.sum(
+            p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,D]
+        acc = acc_ref[...].reshape(Hkv, G, D) * corr + pv
+        acc_ref[...] = acc.reshape(Hkv * G, D)
+        m_ref[...] = m_new.reshape(Hkv * G, 1)
+        l_ref[...] = l_new.reshape(Hkv * G, 1)
+
+    @pl.when(i == nw - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)                   # [Hkv*G,1]
+        o_ref[0] = (acc_ref[...].reshape(Hkv * G, D) / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           interpret: bool = False):
+    """Flash-decode over a paged KV pool.
+
+    q: [B, H, D]; k_pages/v_pages: [n_pages, ps, Hkv, D] — the pool shared
+    by every sequence; block_tables: [B, W] int32 mapping logical page i of
+    sequence b to a physical page (entries >= n_pages mean "unallocated");
+    lengths: [B] valid logical entries per sequence.  Returns [B, H, D].
+
+    The grid walks (B, W): one step per logical page.  The block table and
+    lengths are scalar-prefetched into SMEM so the K/V BlockSpec index_maps
+    can gather the physical page before the step's compute runs.
+    """
+    B, H, D = q.shape
+    n_pages, ps, Hkv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    W = block_tables.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    bt = block_tables.astype(jnp.int32)
+
+    def page_map(b, i, bt_ref, len_ref):
+        # clamp the sentinel: the fetched page is ignored (pl.when masks
+        # the whole step) but the DMA address must stay in bounds
+        return (jnp.minimum(bt_ref[b, i], n_pages - 1), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, W),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, i, bt_ref, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, D), page_map),
+            pl.BlockSpec((1, ps, Hkv, D), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, D),
+                               lambda b, i, bt_ref, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, nw=W, ps=ps, n_pages=n_pages,
+                          scale=scale, Hkv=Hkv, G=G, D=D),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(bt, lengths.astype(jnp.int32), q, k_pages, v_pages)
     return out

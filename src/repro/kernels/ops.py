@@ -45,6 +45,14 @@ def decode_attention(q, k_cache, v_cache, lengths, **kw):
     return _da.decode_attention(q, k_cache, v_cache, lengths, **kw)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, **kw):
+    """Paged decode attention: q [B,H,D] vs pool [n_pages,ps,Hkv,D] gathered
+    through block_tables [B,W] (entries >= n_pages: unallocated)."""
+    kw.setdefault("interpret", _interpret())
+    return _da.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      lengths, **kw)
+
+
 def ssd_chunk(x, dt, A, Bm, Cm, **kw):
     """Mamba-2 intra-chunk SSD: see kernels/ssd_scan.py."""
     kw.setdefault("interpret", _interpret())

@@ -7,6 +7,11 @@
 Reports per-request TTFT/TPOT and the per-tick phase occupancy that the
 chunked-prefill scheduler produces (fraction of ticks running prefill and
 decode together — HALO's interleaved CiM/CiD utilization at serving level).
+``--paged`` swaps the dense arena for the block-pool KV cache
+(serving/kv_pool.py): capacity becomes pool-bounded (``--n-pages`` x
+``--page-size`` tokens, so prompts may exceed --max-len), exhaustion
+preempts the youngest request, and the report adds resident KV bytes +
+preemption counts.  ``--kv-dtype int8`` stores GQA pages quantized.
 """
 
 from __future__ import annotations
@@ -38,6 +43,15 @@ def main(argv=None) -> int:
                     help="0 = greedy; > 0 enables device-side sampling")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-pool KV arena (capacity = pool, "
+                         "not max_len; preemption on exhaustion)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged)")
+    ap.add_argument("--n-pages", type=int, default=64,
+                    help="pages per run pool (paged)")
+    ap.add_argument("--kv-dtype", default="f32", choices=["f32", "int8"],
+                    help="int8: quantized GQA pages (paged only)")
     args = ap.parse_args(argv)
 
     import jax
@@ -60,7 +74,9 @@ def main(argv=None) -> int:
                                max_prefill_tokens=args.max_prefill_tokens),
         greedy=args.temperature <= 0.0,
         temperature=max(args.temperature, 1e-6),
-        top_k=args.top_k, seed=args.seed)
+        top_k=args.top_k, seed=args.seed,
+        paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
+        kv_dtype=args.kv_dtype)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
@@ -94,6 +110,12 @@ def main(argv=None) -> int:
           f"decode-tick p50="
           f"{np.median(decode_ticks)*1e3 if decode_ticks else 0:.1f}ms  "
           f"host-transfers={engine.host_transfers}")
+    kv = engine.kv_bytes()
+    mode = (f"paged[{args.n_pages}x{args.page_size},{args.kv_dtype}]"
+            if args.paged else f"dense[max_len={args.max_len}]")
+    print(f"kv={mode} reserved={kv['reserved']/1e6:.2f}MB "
+          f"peak-resident={kv['peak_resident']/1e6:.2f}MB "
+          f"preemptions={engine.preemptions}")
     return 0
 
 

@@ -339,8 +339,157 @@ def attn_chunk(params, x, offsets, lengths, slots, cache_k, cache_v, *,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (paged pool)
+# ---------------------------------------------------------------------------
+
+def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
+                     *, n_heads, n_kv_heads, d_head, theta, window,
+                     softcap=0.0, qk_norm=False):
+    """Chunked prefill writing K/V into the paged block pool.
+
+    Same packing contract as ``attn_chunk`` (x: [N, C, d], row ``n`` holds
+    tokens [offsets[n], offsets[n]+lengths[n]) of the request in slot
+    ``slots[n]``) but the arena is a pool ``cache = {"k","v"[, scales]}``
+    of shape [n_pages, P, Hkv, Dh] addressed via ``block_table`` [B, W]:
+    position ``pos`` of a slot lives at page ``bt[slot, (pos % R) // P]``
+    offset ``(pos % R) % P`` where R is the run's logical ring span
+    (min(window, W*P-ish) — derived from the pool the same way the engine's
+    KVPool derives it).  History is gathered through the block table BEFORE
+    the chunk's own K/V are scattered (ring overwrite discipline), and
+    int8 pools ("k_scale" present) dequantize history / quantize writes —
+    the attention math itself stays full precision (CiM prefill).
+
+    Returns (out [N, C, d_model], new_cache dict).
+    """
+    from repro.serving.quantized_cache import dequantize, quantize_token
+
+    n_rows, C, _ = x.shape
+    n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
+    B, W = block_table.shape[0], block_table.shape[1]
+    capacity = n_pages * P
+    try:
+        w_static = int(window)
+    except Exception as e:          # pragma: no cover - window is per-run static
+        raise ValueError("paged attention needs a trace-time window") from e
+    R = min(w_static, capacity) if w_static > 0 else capacity
+    S = W * P                                     # gathered logical span
+    quant = "k_scale" in cache
+
+    offs = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    slot = jnp.asarray(slots, jnp.int32)
+    j = jnp.arange(C, dtype=jnp.int32)
+    positions = offs[:, None] + j[None, :]                       # [N, C]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, theta, qk_norm)
+
+    # gather the rows' history pages BEFORE writing (a ring entry the chunk
+    # overwrites is still needed by the chunk's early queries)
+    row = jnp.clip(slot, 0, B - 1)
+    bt_rows = jnp.asarray(block_table, jnp.int32)[row]           # [N, W]
+    pages = jnp.clip(bt_rows, 0, n_pages - 1)
+    if quant:
+        prev_k = dequantize(cache["k"][pages], cache["k_scale"][pages])
+        prev_v = dequantize(cache["v"][pages], cache["v_scale"][pages])
+        prev_k = prev_k.astype(x.dtype)
+        prev_v = prev_v.astype(x.dtype)
+    else:
+        prev_k = cache["k"][pages]                # [N, W, P, Hkv, Dh]
+        prev_v = cache["v"][pages]
+    prev_k = prev_k.reshape(n_rows, S, n_kv_heads, d_head)
+    prev_v = prev_v.reshape(n_rows, S, n_kv_heads, d_head)
+    s_idx = jnp.arange(S, dtype=jnp.int32)
+    # ring slot s holds the largest position p < off with p % R == s
+    prev_pos = offs[:, None] - 1 - ((offs[:, None] - 1 - s_idx[None, :]) % R)
+    prev_pos = jnp.where(s_idx[None, :] < R, prev_pos, -1)       # page tail pad
+    unalloc = jnp.repeat(bt_rows >= n_pages, P, axis=1)          # [N, S]
+    prev_pos = jnp.where(unalloc, -1, prev_pos)
+    chunk_pos = jnp.where(j[None, :] < lens[:, None], positions, -1)
+    kv_k = jnp.concatenate([prev_k, k], axis=1)                  # [N, S+C, ...]
+    kv_v = jnp.concatenate([prev_v, v], axis=1)
+    kv_pos = jnp.concatenate([prev_pos, chunk_pos], axis=1)      # [N, S+C]
+
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    qg = q.reshape(n_rows, C, Hkv, G, d_head)
+    scores = jnp.einsum("nqhgd,nkhd->nhgqk", qg, kv_k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    pq = positions[:, :, None]                                   # [N, C, 1]
+    pk = kv_pos[:, None, :]                                      # [N, 1, S+C]
+    wmask = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    valid = (pk >= 0) & (pk <= pq) & ((pq - pk) < wmask)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("nhgqk,nkhd->nqhgd", probs.astype(kv_v.dtype), kv_v,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(n_rows, C, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+
+    # pool write: only the row's last R positions (ring discipline — see
+    # attn_chunk), through the block table, with padded rows / positions /
+    # unallocated pages all dropping out of bounds
+    keep = (j[None, :] < lens[:, None]) & (j[None, :] >= lens[:, None] - R)
+    valid_row = (slot >= 0) & (slot < B)
+    ridx = positions % R
+    w_page = jnp.take_along_axis(bt_rows, ridx // P, axis=1)     # [N, C]
+    w_page = jnp.where(keep & valid_row[:, None], w_page, n_pages)
+    w_off = jnp.where(keep, ridx % P, P)
+    new_cache = dict(cache)
+    if quant:
+        k_q, k_s = quantize_token(k)                # [N,C,Hkv,Dh],[N,C,Hkv]
+        v_q, v_s = quantize_token(v)
+        new_cache["k"] = cache["k"].at[w_page, w_off].set(k_q, mode="drop")
+        new_cache["k_scale"] = cache["k_scale"].at[w_page, w_off].set(
+            k_s, mode="drop")
+        new_cache["v"] = cache["v"].at[w_page, w_off].set(v_q, mode="drop")
+        new_cache["v_scale"] = cache["v_scale"].at[w_page, w_off].set(
+            v_s, mode="drop")
+    else:
+        new_cache["k"] = cache["k"].at[w_page, w_off].set(k, mode="drop")
+        new_cache["v"] = cache["v"].at[w_page, w_off].set(v, mode="drop")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
+
+def _q8_sweep(q, ck, cks, cv, cvs, valid, *, n_heads, n_kv_heads, d_head,
+              softcap):
+    """The s8 x s8 decode attention sweep shared by the dense and paged
+    int8 paths (see ``attn_decode_q8`` for the math / HALO reading).
+
+    q: [B, 1, H, Dh] float; ck/cv: int8 [B, S, Hkv, Dh] (dense arena or a
+    block-table gather of the page pool); cks/cvs: f32 [B, S, Hkv] scales;
+    valid: [B, S] entry mask.  Returns ctx f32 [B, Hkv, G, Dh].
+    """
+    from repro.serving.quantized_cache import quantize_token
+
+    B = q.shape[0]
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    # quantize q per head; s8 x s8 scores [B,Hkv,G,Dh].[B,S,Hkv,Dh]
+    q_q, q_s = quantize_token(q.reshape(B, Hkv, G, d_head))
+    s_i32 = jax.lax.dot_general(
+        q_q, ck, (((3,), (3,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.int32)                      # [B,Hkv,G,S]
+    scores = (s_i32.astype(jnp.float32)
+              * q_s[..., None]
+              * cks.transpose(0, 2, 1)[:, :, None, :])
+    scores = scores / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                    # [B,Hkv,G,S]
+    # fold v_scale into p, re-quantize, s8 x s8 attn_v
+    p_scaled = probs * cvs.transpose(0, 2, 1)[:, :, None, :]
+    p_q, p_s = quantize_token(p_scaled)                        # scale [B,Hkv,G]
+    ctx_i32 = jax.lax.dot_general(
+        p_q, cv, (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.int32)                      # [B,Hkv,G,Dh]
+    return ctx_i32.astype(jnp.float32) * p_s[..., None]
+
 
 def attn_decode_q8(params, x, cache, pos, *, n_heads, n_kv_heads,
                    d_head, theta, window, softcap=0.0, qk_norm=False,
@@ -386,34 +535,14 @@ def attn_decode_q8(params, x, cache, pos, *, n_heads, n_kv_heads,
         cv = cache["v"].at[bidx, slot].set(v_q[:, 0])
         cvs = cache["v_scale"].at[bidx, slot].set(v_s[:, 0])
 
-    Hkv = n_kv_heads
-    G = n_heads // Hkv
-    # quantize q per head
-    q_q, q_s = quantize_token(q.reshape(B, Hkv, G, d_head))    # [B,Hkv,G,Dh]
-    # s8 x s8 scores: [B,Hkv,G,Dh] . [B,S,Hkv,Dh] -> [B,Hkv,G,S]
-    s_i32 = jax.lax.dot_general(
-        q_q, ck, (((3,), (3,)), ((0, 1), (0, 2))),
-        preferred_element_type=jnp.int32)                      # [B,Hkv,G,S]
-    scores = (s_i32.astype(jnp.float32)
-              * q_s[..., None]
-              * cks.transpose(0, 2, 1)[:, :, None, :])
-    scores = scores / math.sqrt(d_head)
-    scores = _maybe_softcap(scores, softcap)
     slots = jnp.arange(S, dtype=jnp.int32)
     written = slots[None, :] <= pos[:, None]
     wrapped = pos[:, None] >= S
     valid = written | wrapped
     if extra_mask is not None:
         valid = valid & extra_mask
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)                    # [B,Hkv,G,S]
-    # fold v_scale into p, re-quantize, s8 x s8 attn_v
-    p_scaled = probs * cvs.transpose(0, 2, 1)[:, :, None, :]
-    p_q, p_s = quantize_token(p_scaled)                        # scale [B,Hkv,G]
-    ctx_i32 = jax.lax.dot_general(
-        p_q, cv, (((3,), (1,)), ((0, 1), (0, 2))),
-        preferred_element_type=jnp.int32)                      # [B,Hkv,G,Dh]
-    ctx = ctx_i32.astype(jnp.float32) * p_s[..., None]
+    ctx = _q8_sweep(q, ck, cks, cv, cvs, valid, n_heads=n_heads,
+                    n_kv_heads=n_kv_heads, d_head=d_head, softcap=softcap)
     ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
     out = matmul(ctx, params["wo"])
     new_cache = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
@@ -479,3 +608,121 @@ def attn_decode(params, x, cache_k, cache_v, pos, *, n_heads, n_kv_heads,
     ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
     out = matmul(ctx, params["wo"])
     return out, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# decode (paged pool)
+# ---------------------------------------------------------------------------
+
+def _paged_ring(window, n_pages: int, page_size: int) -> int:
+    """Logical ring span of a paged run: min(window, pool capacity)."""
+    capacity = n_pages * page_size
+    w = int(window)                 # per-run static (trace-time constant)
+    return min(w, capacity) if w > 0 else capacity
+
+
+def attn_decode_paged(params, x, cache, block_table, pos, *, n_heads,
+                      n_kv_heads, d_head, theta, window, softcap=0.0,
+                      qk_norm=False):
+    """One-token decode against the paged block pool, routed through the
+    Pallas paged flash-decode kernel (kernels/decode_attention.py).
+
+    x: [B, 1, d_model]; cache: {"k","v"} of [n_pages, P, Hkv, Dh];
+    block_table: [B, W] int32 (sentinel >= n_pages: unallocated — the
+    engine hands inactive slots all-sentinel rows, so their writes drop);
+    pos: [B] absolute position of the NEW token.  Returns (out, new_cache).
+    """
+    from repro.kernels import ops as _kops
+
+    B = x.shape[0]
+    k_pages, v_pages = cache["k"], cache["v"]
+    n_pages, P = k_pages.shape[0], k_pages.shape[1]
+    R = _paged_ring(window, n_pages, P)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           pos[:, None], theta, qk_norm)
+    bt = jnp.asarray(block_table, jnp.int32)
+    # write the new entry through the block table (ring index within R)
+    bidx = jnp.arange(B)
+    ridx = pos % R
+    w_page = bt[bidx, ridx // P]                 # sentinel rows drop
+    ck = k_pages.at[w_page, ridx % P].set(k[:, 0], mode="drop")
+    cv = v_pages.at[w_page, ridx % P].set(v[:, 0], mode="drop")
+    # ring validity: slot s written iff s <= pos (before wrap) else always
+    # -> exactly min(pos + 1, R) valid leading logical entries
+    lengths = jnp.minimum(pos + 1, R)
+    if softcap and softcap > 0.0:
+        # the kernel has no softcap path; gather a dense view and reuse the
+        # reference math (softcapped GQA decode is not on the paper's path)
+        gk = ck[jnp.clip(bt, 0, n_pages - 1)].reshape(
+            B, -1, n_kv_heads, d_head)
+        gv = cv[jnp.clip(bt, 0, n_pages - 1)].reshape(
+            B, -1, n_kv_heads, d_head)
+        Hkv, G = n_kv_heads, n_heads // n_kv_heads
+        qg = q.reshape(B, Hkv, G, d_head)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, gk,
+                       preferred_element_type=jnp.float32) / math.sqrt(d_head)
+        s = _maybe_softcap(s, softcap)
+        S = gk.shape[1]
+        ok = (jnp.arange(S, dtype=jnp.int32)[None, :] < lengths[:, None]) \
+            & ~jnp.repeat(bt >= n_pages, P, axis=1)
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhgs,bshd->bhgd", p.astype(gv.dtype), gv,
+                         preferred_element_type=jnp.float32)
+    else:
+        ctx = _kops.paged_decode_attention(
+            q.reshape(B, n_heads, d_head), ck, cv, bt, lengths)
+    ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def attn_decode_q8_paged(params, x, cache, block_table, pos, *, n_heads,
+                         n_kv_heads, d_head, theta, window, softcap=0.0,
+                         qk_norm=False):
+    """int8 paged decode: the HALO-faithful memory format on the block pool.
+
+    cache: {"k": int8 [n_pages,P,Hkv,Dh], "k_scale": f32 [n_pages,P,Hkv],
+    "v", "v_scale"} — scales ride in a parallel page array under the SAME
+    block table.  Both contractions run s8 x s8 exactly like the dense
+    ``attn_decode_q8``; the pool is gathered into a per-sequence view
+    first (the CiD analogue: the bank reads whole rows, the row decoder is
+    the block table).
+    """
+    from repro.serving.quantized_cache import quantize_token
+
+    B = x.shape[0]
+    n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
+    Hkv = n_kv_heads
+    R = _paged_ring(window, n_pages, P)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           pos[:, None], theta, qk_norm)
+    k_q, k_s = quantize_token(k)                   # [B,1,Hkv,Dh],[B,1,Hkv]
+    v_q, v_s = quantize_token(v)
+    bt = jnp.asarray(block_table, jnp.int32)
+    bidx = jnp.arange(B)
+    ridx = pos % R
+    w_page = bt[bidx, ridx // P]
+    off = ridx % P
+    ck = cache["k"].at[w_page, off].set(k_q[:, 0], mode="drop")
+    cks = cache["k_scale"].at[w_page, off].set(k_s[:, 0], mode="drop")
+    cv = cache["v"].at[w_page, off].set(v_q[:, 0], mode="drop")
+    cvs = cache["v_scale"].at[w_page, off].set(v_s[:, 0], mode="drop")
+
+    # gather the sequence's pages (int8 + scales) through the block table
+    rows = jnp.clip(bt, 0, n_pages - 1)
+    S = bt.shape[1] * P
+    gk = ck[rows].reshape(B, S, Hkv, d_head)       # int8
+    gks = cks[rows].reshape(B, S, Hkv)
+    gv = cv[rows].reshape(B, S, Hkv, d_head)
+    gvs = cvs[rows].reshape(B, S, Hkv)
+    lengths = jnp.minimum(pos + 1, R)
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, :] < lengths[:, None]) \
+        & ~jnp.repeat(bt >= n_pages, P, axis=1)
+    ctx = _q8_sweep(q, gk, gks, gv, gvs, valid, n_heads=n_heads,
+                    n_kv_heads=n_kv_heads, d_head=d_head, softcap=softcap)
+    ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+    return out, {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}

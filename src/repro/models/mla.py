@@ -172,6 +172,105 @@ def mla_chunk(params, x, offsets, lengths, slots, cache, *,
     return out, cache
 
 
+def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
+                    *, n_heads, m: MLAConfig):
+    """Chunked prefill against the PAGED latent pool.
+
+    cache: [n_pages, P, r+dr]; block_table: [B, W] int32 (sentinel >=
+    n_pages).  Position ``pos`` of a slot lives at page ``bt[slot, pos//P]``
+    offset ``pos % P`` (the MLA arena is position-indexed — no ring).  As
+    in ``mla_chunk`` the chunk's latents are scattered in FIRST, then the C
+    queries run the absorbed decode formulation over the row's gathered
+    pages.  Returns (out [N, C, d], new_cache).
+    """
+    n_rows, C, _ = x.shape
+    n_pages, P = cache.shape[0], cache.shape[1]
+    B, W = block_table.shape[0], block_table.shape[1]
+    S = W * P
+    offs = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    slot = jnp.asarray(slots, jnp.int32)
+    bt = jnp.asarray(block_table, jnp.int32)
+    j = jnp.arange(C, dtype=jnp.int32)
+    positions = offs[:, None] + j[None, :]                      # [N, C]
+    q_nope, q_rope = _queries(params, x, n_heads, m, positions)
+    c_new, kr_new = _latent(params, x, m, positions)
+    entry = jnp.concatenate([c_new, kr_new], axis=-1)           # [N, C, r+dr]
+    keep = j[None, :] < lens[:, None]
+    valid_row = (slot >= 0) & (slot < B)
+    bt_rows = bt[jnp.clip(slot, 0, B - 1)]                      # [N, W]
+    w_page = jnp.take_along_axis(bt_rows, positions // P, axis=1)
+    w_page = jnp.where(keep & valid_row[:, None], w_page, n_pages)
+    w_off = jnp.where(keep, positions % P, P)
+    cache = cache.at[w_page, w_off].set(entry, mode="drop")
+    lat = cache[jnp.clip(bt_rows, 0, n_pages - 1)]              # [N, W, P, w]
+    lat = lat.reshape(n_rows, S, lat.shape[-1])
+    c_kv = lat[..., : m.kv_lora_rank]
+    k_rope = lat[..., m.kv_lora_rank:]
+    q_lat = jnp.einsum("nqhd,hrd->nqhr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("nqhr,nsr->nhqs", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("nqhd,nsd->nhqs", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, None, :]
+             <= positions[:, :, None])                          # [N, C, S]
+    valid &= ~jnp.repeat(bt_rows >= n_pages, P, axis=1)[:, None, :]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("nhqs,nsr->nqhr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = jnp.einsum("nqhr,hrv->nqhv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(n_rows, C, n_heads * m.v_head_dim), params["wo"])
+    return out, cache
+
+
+def mla_decode_paged(params, x, cache, block_table, pos, *, n_heads,
+                     m: MLAConfig):
+    """Absorbed paged decode: GEMV sweep over the gathered latent pages.
+
+    cache: [n_pages, P, r+dr]; block_table: [B, W]; pos: [B].  The engine
+    hands inactive slots all-sentinel rows so their writes drop.
+    """
+    B = x.shape[0]
+    n_pages, P = cache.shape[0], cache.shape[1]
+    W = block_table.shape[1]
+    S = W * P
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q_nope, q_rope = _queries(params, x, n_heads, m, pos[:, None])
+    c_new, kr_new = _latent(params, x, m, pos[:, None])
+    new_entry = jnp.concatenate([c_new, kr_new], axis=-1)       # [B,1,r+dr]
+    bt = jnp.asarray(block_table, jnp.int32)
+    bidx = jnp.arange(B)
+    w_page = bt[bidx, pos // P]
+    cache = cache.at[w_page, pos % P].set(new_entry[:, 0], mode="drop")
+    lat = cache[jnp.clip(bt, 0, n_pages - 1)]                   # [B, W, P, w]
+    lat = lat.reshape(B, S, lat.shape[-1])
+    c_kv = lat[..., : m.kv_lora_rank]                           # [B,S,r]
+    k_rope = lat[..., m.kv_lora_rank:]                          # [B,S,dr]
+    q_lat = jnp.einsum("bqhn,hrn->bhr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bqhr,bsr->bhs", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None]) \
+        & ~jnp.repeat(bt >= n_pages, P, axis=1)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = jnp.einsum("bhr,hrv->bhv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(B, 1, n_heads * m.v_head_dim), params["wo"])
+    return out, cache
+
+
 def mla_decode(params, x, cache, pos, *, n_heads, m: MLAConfig,
                slot=None, extra_mask=None):
     """Absorbed decode: GEMV sweep over the latent cache (CiD path).

@@ -350,6 +350,43 @@ def _attn_layer_decode(cfg, run, lp, x, cache, pos):
     return x, new_cache
 
 
+def _attn_layer_decode_paged(cfg, run, lp, x, cache, bt, pos):
+    """One attention layer of a paged one-token decode step.
+
+    ``cache`` is the run's page pool slice ([n_pages, P, ...] leaves) and
+    ``bt`` the [B, W] block table; per-slot validity is encoded in the
+    table (inactive slots carry all-sentinel rows), so no merge-with-mask
+    pass is needed — dropped scatters ARE the mask.
+    """
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla.enabled:
+        a, latent = mla_mod.mla_decode_paged(lp["attn"], h, cache["latent"],
+                                             bt, pos,
+                                             n_heads=cfg.n_heads, m=cfg.mla)
+        new_cache = {"latent": latent}
+    elif "k_scale" in cache:
+        a, new_cache = attn_mod.attn_decode_q8_paged(
+            lp["attn"], h, cache, bt, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=run.window,
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm)
+    else:
+        a, new_cache = attn_mod.attn_decode_paged(
+            lp["attn"], h, cache, bt, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=run.window,
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm)
+    x = x + a
+    if run.ffn_kind == "moe":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg.moe, cfg.act)
+        x = x + f
+    elif run.ffn_kind == "dense":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, cfg.act)
+    return x, new_cache
+
+
 def _attn_layer_chunk(cfg, run, lp, x, offsets, lengths, slots, cache):
     """One attention layer of a packed prefill chunk (arena-direct write)."""
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
@@ -365,6 +402,32 @@ def _attn_layer_chunk(cfg, run, lp, x, offsets, lengths, slots, cache):
             theta=run.theta, window=jnp.int32(run.window),
             softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm)
         new_cache = {"k": ck, "v": cv}
+    x = x + a
+    if run.ffn_kind == "moe":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg.moe, cfg.act)
+        x = x + f
+    elif run.ffn_kind == "dense":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, cfg.act)
+    return x, new_cache
+
+
+def _attn_layer_chunk_paged(cfg, run, lp, x, offsets, lengths, slots, cache,
+                            bt):
+    """One attention layer of a packed prefill chunk against the page pool."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla.enabled:
+        a, latent = mla_mod.mla_chunk_paged(lp["attn"], h, offsets, lengths,
+                                            slots, cache["latent"], bt,
+                                            n_heads=cfg.n_heads, m=cfg.mla)
+        new_cache = {"latent": latent}
+    else:
+        a, new_cache = attn_mod.attn_chunk_paged(
+            lp["attn"], h, offsets, lengths, slots, cache, bt,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=run.window,
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm)
     x = x + a
     if run.ffn_kind == "moe":
         h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
@@ -430,7 +493,8 @@ def _shared_attn_apply(cfg, sp, x, embed0, positions, cache, pos, phase: str):
 
 def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
             *, phase: str = "train", cache: Optional[List[Any]] = None,
-            pos=None, remat: bool = False, return_hidden: bool = False):
+            pos=None, remat: bool = False, return_hidden: bool = False,
+            block_tables: Optional[List[Any]] = None):
     """Unified forward.
 
     phase == "train"/"prefill": batch["tokens"] [B,T] (or [B,K,T]); optional
@@ -438,6 +502,9 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
         new_cache is None for train.
     phase == "decode": batch["tokens"] [B,1] (or [B,K,1]); ``cache`` and
         ``pos`` required.  Returns (logits [B,1,...], new_cache, 0.0).
+        With ``block_tables`` (one [B, W] table per run) ``cache`` is the
+        PAGED pool from ``serving.kv_pool.KVPool`` and decode routes
+        through the paged attention paths (requires ``supports_paged``).
     """
     plan = build_plan(cfg)
     want_cache = phase == "prefill"
@@ -466,7 +533,16 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
 
         if phase == "decode":
             c = cache[r]
-            if run.kind == "attn":
+            if run.kind == "attn" and block_tables is not None:
+                bt = block_tables[r]
+
+                def body(carry, xs, run=run, bt=bt):
+                    xx, _ = carry
+                    lp, lc = xs
+                    xx, nc = _attn_layer_decode_paged(cfg, run, lp, xx, lc,
+                                                      bt, pos)
+                    return (xx, None), nc
+            elif run.kind == "attn":
                 def body(carry, xs, run=run):
                     xx, _ = carry
                     lp, lc = xs
@@ -558,8 +634,20 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     return all(run.kind == "attn" for run in build_plan(cfg))
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True iff every run can live in the paged block-pool KV arena.
+
+    Attention runs (GQA, sliding-window, MLA) index their cache by
+    position, so positions can be relocated onto pages through a block
+    table.  SSM and shared-attention runs carry recurrent / whole-sequence
+    state that has no per-position granularity — those plans keep the
+    dense arena."""
+    return all(run.kind == "attn" for run in build_plan(cfg))
+
+
 def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
-                  lengths, slots, cache: List[Any]):
+                  lengths, slots, cache: List[Any],
+                  block_tables: Optional[List[Any]] = None):
     """Packed chunked prefill, writing K/V directly into the decode arena.
 
     tokens: [N, C] (or [N, K, C] multi-codebook) — N chunk rows padded to C
@@ -567,6 +655,8 @@ def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
     of the request in arena slot ``slots[n]``.  ``cache`` is the full decode
     arena from ``init_cache(cfg, B, S)``; rows other than the addressed
     slots are untouched (padded rows scatter out of bounds and drop).
+    With ``block_tables`` the arena is the PAGED pool (serving.kv_pool)
+    and writes route through the per-run block tables instead.
 
     Returns (last_logits [N, 1, ...], new_cache): the logits of each row's
     last valid position — only meaningful for rows whose chunk completes
@@ -584,12 +674,17 @@ def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
                 f"chunked prefill over {run.kind!r} runs; gate on "
                 "supports_chunked_prefill() and use prefill_into_arena()")
         rp = params["runs"][r]
+        bt = block_tables[r] if block_tables is not None else None
 
-        def body(carry, xs, run=run):
+        def body(carry, xs, run=run, bt=bt):
             xx, _ = carry
             lp, lc = xs
-            xx, nc = _attn_layer_chunk(cfg, run, lp, xx, offsets, lengths,
-                                       slots, lc)
+            if bt is None:
+                xx, nc = _attn_layer_chunk(cfg, run, lp, xx, offsets,
+                                           lengths, slots, lc)
+            else:
+                xx, nc = _attn_layer_chunk_paged(cfg, run, lp, xx, offsets,
+                                                 lengths, slots, lc, bt)
             return (xx, None), nc
 
         (x, _), ys = jax.lax.scan(body, (x, None), (rp, cache[r]))

@@ -30,6 +30,20 @@ program that splices the state into the arena on device
 chunks.  Per-request TTFT/TPOT and a per-tick ``tick_log`` (phase
 occupancy, groups, wall time) feed benchmarks/serving_bench.py.
 
+PAGED MODE (``ServeConfig(paged=True)``): the dense ``[L, B, max_len]``
+arena is replaced by the block-pool cache of ``serving/kv_pool.py`` —
+``n_pages`` pages of ``page_size`` tokens per attention run, mapped per
+slot through block tables.  Capacity becomes a POOL property: ``submit``
+accepts any prompt the pool can hold (one 16k request or eight 2k ones),
+the scheduler admits prefill tokens only while free pages cover them
+(decode's one-token growth is reserved first), and when the pool
+exhausts mid-decode the YOUNGEST page-holding request is preempted —
+its pages return to the pool and it re-queues as WAITING with its
+generated tokens folded into the prompt (recompute-on-resume), so the
+oldest request always finishes.  Decode attention routes through the
+Pallas paged flash-decode kernel; ``kv_dtype="int8"`` stores GQA pages
+int8 with f32 scales in a parallel page array (MLA latents stay f32).
+
 This is a single-host engine; launch/serve.py instantiates it either on
 the host CPU (examples, tests) or under the production mesh with the
 decode shardings from distributed/sharding.py.
@@ -54,7 +68,9 @@ from repro.models.transformer import (
     init_cache,
     prefill_into_arena,
     supports_chunked_prefill,
+    supports_paged,
 )
+from repro.serving.kv_pool import KVPool
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
 
@@ -78,6 +94,7 @@ class Request:
     slot: int = -1
     prompt_len: int = 0
     prefill_pos: int = 0                # prompt tokens already in the arena
+    n_preempted: int = 0                # pool-exhaustion evictions survived
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -102,6 +119,8 @@ class TickRecord:
     prefill_group: str
     decode_group: str
     wall_s: float
+    preemptions: int = 0                # pool evictions this tick (paged)
+    kv_resident_bytes: int = 0          # allocated KV bytes after the tick
 
     @property
     def mixed(self) -> bool:
@@ -112,12 +131,19 @@ class TickRecord:
 @dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
-    max_len: int = 512
+    max_len: int = 512                  # dense arena length (unused if paged)
     phase: PhaseAwareConfig = field(default_factory=PhaseAwareConfig)
     greedy: bool = True
     temperature: float = 1.0
     top_k: int = 0
     seed: int = 0
+    # paged KV arena (serving/kv_pool.py): capacity = n_pages * page_size
+    # tokens PER POOL, not per slot — prompts/generations are bounded by
+    # pool capacity rather than max_len
+    paged: bool = False
+    page_size: int = 16
+    n_pages: int = 64
+    kv_dtype: str = "f32"               # "int8": quantized GQA pages (paged)
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -137,7 +163,26 @@ class ServingEngine:
         self.mesh = mesh
         self.scheduler = PhaseScheduler(sc.phase)
         B, S = sc.max_batch, sc.max_len
-        self.cache = init_cache(cfg, B, S)
+        self.paged = sc.paged
+        if sc.paged:
+            if not supports_paged(cfg):
+                raise ValueError(
+                    f"{cfg.name}: paged serving needs an all-attention plan "
+                    "(SSM / shared-attention runs keep the dense arena)")
+            if sc.phase.prefill_chunk <= 0:
+                raise ValueError("paged serving requires chunked prefill "
+                                 "(prefill_chunk > 0)")
+            self.pool: Optional[KVPool] = KVPool(
+                cfg, n_slots=B, n_pages=sc.n_pages, page_size=sc.page_size,
+                kv_dtype=sc.kv_dtype)
+            self.cache = self.pool.caches
+        else:
+            if sc.kv_dtype != "f32":
+                raise ValueError(
+                    f"kv_dtype={sc.kv_dtype!r} requires paged=True (the "
+                    "dense engine stores the arena in the model dtype)")
+            self.pool = None
+            self.cache = init_cache(cfg, B, S)
         self.slot_pos = np.full((B,), -1, np.int64)     # next write position
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
@@ -150,6 +195,13 @@ class ServingEngine:
         self._n_decode_ticks = 0
         self._n_mixed_ticks = 0
         self.host_transfers = 0          # device->host syncs (see _to_host)
+        self.preemptions = 0             # lifetime pool evictions (paged)
+        self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
+        self._tick_preemptions = 0
+        # the dense arena pins its full footprint up front; computed here
+        # because the cache arrays are donated (buffers move every call)
+        self._dense_kv_bytes = (0 if sc.paged else sum(
+            leaf.nbytes for c in self.cache for leaf in c.values()))
         self._next_id = 0
         self.chunked = (supports_chunked_prefill(cfg)
                         and sc.phase.prefill_chunk > 0)
@@ -174,11 +226,13 @@ class ServingEngine:
         if key not in self._programs:
             # the arena argument is donated: the engine rebinds self.cache
             # to the program's output every call, so XLA updates the KV
-            # arena in place instead of copying it each tick
+            # arena (dense or page pool) in place instead of copying it
             impl, cache_arg = {
                 "chunk": (self._prefill_chunk_impl, 5),
                 "whole": (self._prefill_whole_impl, 3),
-                "decode": (self._decode_impl, 2)}[kind]
+                "decode": (self._decode_impl, 2),
+                "chunk_paged": (self._prefill_chunk_paged_impl, 5),
+                "decode_paged": (self._decode_paged_impl, 2)}[kind]
             self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,))
         return self._programs[key]
 
@@ -200,6 +254,28 @@ class ServingEngine:
         """Whole-prompt prefill + on-device arena splice (SSM / hybrid)."""
         logits, new_cache = prefill_into_arena(
             params, self.cfg, {"tokens": tokens}, slot, cache)
+        return self._sample(logits, key), new_cache
+
+    def _prefill_chunk_paged_impl(self, params, tokens, offsets, lengths,
+                                  slots, cache, block_tables, key):
+        """Packed chunk prefill into the page pool (block-table scatter)."""
+        logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
+                                          lengths, slots, cache,
+                                          block_tables=block_tables)
+        return self._sample(logits, key), new_cache
+
+    def _decode_paged_impl(self, params, tokens, cache, pos, block_tables,
+                           key):
+        """One-token decode over the page pool.
+
+        No merge-with-mask pass: inactive slots carry all-sentinel block
+        table rows, so their K/V scatters DROP — the page pool is only
+        ever written through an allocated page, which is the paged
+        analogue of the dense path's ``jnp.where(slot_mask, new, old)``.
+        """
+        logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
+                                       phase="decode", cache=cache, pos=pos,
+                                       block_tables=block_tables)
         return self._sample(logits, key), new_cache
 
     def _decode_impl(self, params, tokens, cache, pos, slot_mask, key):
@@ -226,7 +302,15 @@ class ServingEngine:
         req = Request(self._next_id, np.asarray(prompt, np.int32),
                       max_new_tokens, eos_id)
         req.prompt_len = int(req.prompt.shape[-1])
-        if req.prompt_len >= self.sc.max_len:
+        if self.paged:
+            # capacity is a POOL property: a prompt fits iff the pool can
+            # hold it (+ 1 decode position) when running alone
+            if not self.pool.fits(req.prompt_len + 1):
+                raise ValueError(
+                    f"prompt of {req.prompt_len} tokens cannot fit the "
+                    f"paged pool ({self.pool.n_pages} pages x "
+                    f"{self.pool.page_size} = {self.pool.capacity} tokens)")
+        elif req.prompt_len >= self.sc.max_len:
             raise ValueError(
                 f"prompt of {req.prompt_len} tokens does not fit "
                 f"max_len={self.sc.max_len} (need >= 1 decode position)")
@@ -273,6 +357,77 @@ class ServingEngine:
     def _by_id(self) -> Dict[int, Request]:
         return {r.req_id: r for r in self.slot_req if r is not None}
 
+    # -- recompute-on-resume -----------------------------------------------------
+    def _effective_tokens(self, req: Request) -> np.ndarray:
+        """The token stream a (re)prefill must process: the prompt, plus —
+        after a preemption — everything already generated (recompute: the
+        resumed prefill rebuilds the evicted KV and its final logits yield
+        the CONTINUATION token, exactly what the evicted decode step would
+        have produced)."""
+        if not req.generated:
+            return req.prompt
+        if self.cfg.n_codebooks > 1:
+            gen = np.asarray(req.generated, np.int32).T          # [K, n]
+            return np.concatenate([req.prompt, gen], axis=-1)
+        return np.concatenate(
+            [req.prompt, np.asarray(req.generated, np.int32)])
+
+    def _effective_len(self, req: Request) -> int:
+        return req.prompt_len + len(req.generated)
+
+    def _preempt(self, req: Request) -> None:
+        """Evict ``req`` from its slot: pages back to the pool, request
+        back to WAITING (age-ordered) for recompute-on-resume."""
+        assert self.paged and req.slot >= 0
+        self.pool.release(req.slot)
+        self.slot_req[req.slot] = None
+        self.slot_pos[req.slot] = -1
+        req.slot = -1
+        req.state = RequestState.WAITING
+        req.prefill_pos = 0
+        req.n_preempted += 1
+        self.preemptions += 1
+        self._tick_preemptions += 1
+        # keep the queue age-ordered: older (smaller id) requests first,
+        # so the re-queued victim outranks later submissions
+        i = 0
+        while i < len(self.queue) and self.queue[i].req_id < req.req_id:
+            i += 1
+        self.queue.insert(i, req)
+
+    def _preemption_victim(self, needy: Request) -> Request:
+        """Youngest slot-holding request whose eviction frees pages (or
+        ``needy`` itself if nobody else holds any) — the oldest request is
+        never chosen over an older needy one, so it always completes."""
+        holders = sorted((r for r in self.slot_req if r is not None),
+                         key=lambda r: r.req_id, reverse=True)
+        for r in holders:
+            if r is needy:
+                continue
+            if r.req_id > needy.req_id and self.pool.len_of(r.slot) > 0:
+                return r
+        return needy
+
+    def _break_prefill_stall(self) -> None:
+        """Deadlock breaker: PREFILLING requests exist but the tick planned
+        NOTHING — mid-prefill requests hold every page between them and no
+        decoder is running to trigger growth preemption.  Evict the
+        youngest page holder (never the oldest: ``submit`` guarantees any
+        single request fits the pool alone, so the oldest can always make
+        progress once the young have yielded their pages)."""
+        if not any(r is not None and r.state == RequestState.PREFILLING
+                   for r in self.slot_req):
+            return
+        holders = [r for r in self.slot_req
+                   if r is not None and self.pool.len_of(r.slot) > 0]
+        if not holders:
+            return
+        victim = max(holders, key=lambda r: r.req_id)
+        oldest = min((r for r in self.slot_req if r is not None),
+                     key=lambda r: r.req_id)
+        if victim is not oldest:
+            self._preempt(victim)
+
     def _append_token(self, req: Request, tok_row) -> None:
         flat = np.asarray(tok_row).reshape(-1)
         if self.cfg.n_codebooks > 1:
@@ -281,9 +436,10 @@ class ServingEngine:
             req.generated.append(int(flat[0]))
 
     def _start_decoding(self, req: Request, tok_row) -> None:
-        self.slot_pos[req.slot] = req.prompt_len
+        self.slot_pos[req.slot] = self._effective_len(req)
         self._append_token(req, tok_row)
-        req.t_first_token = time.monotonic()
+        if req.t_first_token == 0.0:    # a resumed prefill keeps its TTFT
+            req.t_first_token = time.monotonic()
         req.state = RequestState.DECODING
         if self._finished(req):
             self._retire(req)
@@ -297,13 +453,16 @@ class ServingEngine:
                 last = last[0] if last else None
             if last == req.eos_id:
                 return True
-        if self.slot_pos[req.slot] >= self.sc.max_len - 1:
+        limit = self.pool.capacity if self.paged else self.sc.max_len
+        if self.slot_pos[req.slot] >= limit - 1:
             return True
         return False
 
     def _retire(self, req: Request) -> None:
         req.state = RequestState.DONE
         req.t_done = time.monotonic()
+        if self.paged:
+            self.pool.release(req.slot)
         self.slot_req[req.slot] = None
         self.slot_pos[req.slot] = -1
         self.done.append(req)
@@ -327,6 +486,20 @@ class ServingEngine:
                 self._start_decoding(req, self._to_host(toks)[0])
             return
 
+        if self.paged:
+            # claim the chunks' pages; the scheduler planned against the
+            # pool headroom, so this succeeds — trim defensively (one
+            # query, one grow) if a same-tick race says otherwise
+            claimed = []
+            for req, take in chunks:
+                take = min(take, self.pool.max_grow_tokens(req.slot))
+                if take > 0 and self.pool.grow(req.slot,
+                                               req.prefill_pos + take):
+                    claimed.append((req, take))
+            chunks = claimed
+            if not chunks:
+                return
+
         # pack the tick's chunks into one padded batch (pow2 buckets bound
         # the number of compiled shapes)
         N = _bucket(len(chunks), self.sc.max_batch)
@@ -340,18 +513,25 @@ class ServingEngine:
         slots = np.full((N,), self.sc.max_batch, np.int32)  # OOB rows: drop
         for i, (req, take) in enumerate(chunks):
             sl = slice(req.prefill_pos, req.prefill_pos + take)
-            tokens[i, ..., :take] = req.prompt[..., sl]
+            tokens[i, ..., :take] = self._effective_tokens(req)[..., sl]
             offs[i] = req.prefill_pos
             lens[i] = take
             slots[i] = req.slot
-        toks, self.cache = self._program(plan.prefill_group, "chunk")(
-            self.params, jnp.asarray(tokens), jnp.asarray(offs),
-            jnp.asarray(lens), jnp.asarray(slots), self.cache,
-            self._next_key())
+        if self.paged:
+            toks, self.cache = self._program(plan.prefill_group,
+                                             "chunk_paged")(
+                self.params, jnp.asarray(tokens), jnp.asarray(offs),
+                jnp.asarray(lens), jnp.asarray(slots), self.cache,
+                self.pool.block_tables(), self._next_key())
+        else:
+            toks, self.cache = self._program(plan.prefill_group, "chunk")(
+                self.params, jnp.asarray(tokens), jnp.asarray(offs),
+                jnp.asarray(lens), jnp.asarray(slots), self.cache,
+                self._next_key())
         sampled = None
         for i, (req, take) in enumerate(chunks):
             req.prefill_pos += take
-            if req.prefill_pos >= req.prompt_len:
+            if req.prefill_pos >= self._effective_len(req):
                 if sampled is None:
                     sampled = self._to_host(toks)   # one transfer per tick
                 self._start_decoding(req, sampled[i])
@@ -360,6 +540,24 @@ class ServingEngine:
         reqs = self._by_id()
         active = [reqs[rid] for rid in plan.decode_reqs
                   if rid in reqs and reqs[rid].state == RequestState.DECODING]
+        if self.paged and active:
+            # each decode write may cross into a fresh page; grow oldest-
+            # first and PREEMPT the youngest page holder when the pool is
+            # out — its pages come back, it re-queues for recompute
+            survivors = []
+            for r in sorted(active, key=lambda r: r.req_id):
+                if r.state != RequestState.DECODING or r.slot < 0:
+                    continue                        # evicted earlier this loop
+                evicted_self = False
+                while not self.pool.grow(r.slot, int(self.slot_pos[r.slot]) + 1):
+                    victim = self._preemption_victim(r)
+                    self._preempt(victim)
+                    if victim is r:
+                        evicted_self = True
+                        break
+                if not evicted_self:
+                    survivors.append(r)
+            active = survivors
         if not active:
             return
         B = self.sc.max_batch
@@ -374,9 +572,18 @@ class ServingEngine:
         # ragged decode: per-slot positions (vector pos -> per-slot rope,
         # per-slot cache write index, per-slot validity mask)
         pos = np.where(self.slot_pos >= 0, self.slot_pos, 0).astype(np.int32)
-        toks, self.cache = self._program(plan.decode_group, "decode")(
-            self.params, jnp.asarray(tokens), self.cache,
-            jnp.asarray(pos), jnp.asarray(mask), self._next_key())
+        if self.paged:
+            # inactive slots get all-sentinel block-table rows: their
+            # scatters drop — the paged analogue of the dense slot_mask
+            toks, self.cache = self._program(plan.decode_group,
+                                             "decode_paged")(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(pos), self.pool.block_tables(mask),
+                self._next_key())
+        else:
+            toks, self.cache = self._program(plan.decode_group, "decode")(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(pos), jnp.asarray(mask), self._next_key())
         sampled = self._to_host(toks)               # one transfer per tick
         for r in active:
             self._append_token(r, sampled[r.slot])
@@ -388,17 +595,38 @@ class ServingEngine:
     def step(self) -> Dict[str, int]:
         """One engine tick: plan (scheduler) -> execute (this method)."""
         t0 = time.monotonic()
+        self._tick_preemptions = 0
         self._admit()
-        prefilling = [(r.req_id, r.prompt_len - r.prefill_pos, self.chunked)
-                      for r in self.slot_req
-                      if r is not None and r.state == RequestState.PREFILLING]
+        # age order (FIFO): under page contention the oldest request gets
+        # the prefill budget/pages first — with slot order a recycled low
+        # slot would starve older requests and thrash the pool
+        prefilling = sorted(
+            ((r.req_id, self._effective_len(r) - r.prefill_pos,
+              self.chunked, r.prefill_pos)
+             for r in self.slot_req
+             if r is not None and r.state == RequestState.PREFILLING),
+            key=lambda e: e[0])
         decoding = [r.req_id for r in self.slot_req
                     if r is not None and r.state == RequestState.DECODING]
-        plan = self.scheduler.plan_tick(prefilling, decoding)
+        if self.paged:
+            # token-level admission: prefill work is planned against the
+            # pool's free pages, with this tick's decode growth reserved
+            headroom = self.pool.headroom_pages(
+                [self.pool.len_of(r.slot) for r in self.slot_req
+                 if r is not None and r.state == RequestState.DECODING])
+            plan = self.scheduler.plan_tick(
+                prefilling, decoding, free_pages=headroom,
+                page_size=self.sc.page_size)
+        else:
+            plan = self.scheduler.plan_tick(prefilling, decoding)
         if plan.prefill_chunks:
             self._run_prefill_tick(plan)
         if plan.decode_reqs:
             self._run_decode_tick(plan)
+        if self.paged and not plan.prefill_chunks and not plan.decode_reqs:
+            self._break_prefill_stall()
+        resident = self.pool.resident_bytes() if self.paged else 0
+        self.kv_resident_peak = max(self.kv_resident_peak, resident)
         rec = TickRecord(
             index=self._n_ticks,
             prefill_reqs=list(plan.prefill_reqs),
@@ -406,7 +634,9 @@ class ServingEngine:
             decode_reqs=list(plan.decode_reqs),
             prefill_group=plan.prefill_group,
             decode_group=plan.decode_group,
-            wall_s=time.monotonic() - t0)
+            wall_s=time.monotonic() - t0,
+            preemptions=self._tick_preemptions,
+            kv_resident_bytes=resident)
         self.tick_log.append(rec)
         self._n_ticks += 1
         self._n_prefill_ticks += bool(rec.prefill_reqs)
@@ -428,6 +658,21 @@ class ServingEngine:
     def n_ticks(self) -> int:
         """Lifetime tick count (``tick_log`` itself is bounded)."""
         return self._n_ticks
+
+    def kv_bytes(self) -> Dict[str, int]:
+        """KV memory accounting, dense-vs-paged comparable.
+
+        ``reserved``: bytes the arena pins for its lifetime.  ``resident``:
+        bytes actually backing live tokens right now (== reserved for the
+        dense arena — that is the point); ``peak_resident``: high-water
+        mark across ticks."""
+        if self.paged:
+            return {"reserved": self.pool.total_bytes(),
+                    "resident": self.pool.resident_bytes(),
+                    "peak_resident": self.kv_resident_peak}
+        return {"reserved": self._dense_kv_bytes,
+                "resident": self._dense_kv_bytes,
+                "peak_resident": self._dense_kv_bytes}
 
     def phase_occupancy(self) -> Dict[str, float]:
         """Fractions of ticks running prefill / decode / both (interleave).

@@ -1,0 +1,296 @@
+"""Paged KV arena: a fixed block pool replaces the dense per-slot cache.
+
+The dense arena allocates ``[L, max_batch, max_len, Hkv, Dh]`` per attention
+run — memory scales with ``max_batch x max_len`` whatever the actual
+lengths, and no prompt may exceed ``max_len``.  The paged arena instead
+allocates a fixed pool of ``n_pages`` pages of ``page_size`` tokens per run
+(``[L, n_pages, page_size, Hkv, Dh]``) and maps each slot's logical
+positions onto physical pages through a per-slot block table.  Capacity is
+then a POOL property, not a slot property: the same pool serves one
+16k-token request or eight 2k-token requests, and the scheduler admits
+prefill work token-by-token against the free-page count (see
+``PhaseScheduler.plan_tick``) while the engine preempts the youngest
+request when decode outgrows the pool.
+
+HALO reading: a page is a contiguous CiD row burst — the block table is
+the bank/row decoder, so the GEMV sweep still streams whole rows (bank
+locality) while placement becomes fully dynamic.  See docs/serving.md.
+
+Two layers:
+
+* ``PagePool`` — pure host-side accounting for ONE pool: free list,
+  per-slot block tables, grow/shrink/release.  No jax; property-testable
+  (no page is ever double-assigned, pages are conserved).
+* ``KVPool`` — one ``PagePool`` + device page arrays per attention run of
+  the model plan, ring/MLA-aware via ``cache_len``: a sliding-window run
+  pools only its ring of ``min(window, capacity)`` logical entries, an MLA
+  run pools latent rows ``[L, n_pages, page_size, r+dr]``.  With
+  ``kv_dtype="int8"`` GQA runs store int8 pages with f32 scales riding in
+  a parallel page array (same block table); MLA latents stay f32 (they are
+  rmsnorm-sensitive and already 4-9x smaller — see quantized_cache.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import build_plan, cache_len
+
+
+def pages_for(length: int, page_size: int, capacity: int) -> int:
+    """Physical pages holding a sequence of ``length`` tokens (ring-clamped
+    to ``capacity`` logical entries)."""
+    return -(-min(max(length, 0), capacity) // page_size)
+
+
+class PagePool:
+    """Host-side page accounting for one fixed pool of ``n_pages`` pages.
+
+    Tracks, per slot: the logical length and the block table row mapping
+    logical page ``i`` to a physical page (the sentinel ``n_pages`` means
+    "never allocated" — device scatters through it drop, gathers clamp and
+    mask).  Pure Python/numpy; every mutation preserves the two pool
+    invariants (no double assignment, page conservation) that
+    tests/test_kv_pool.py property-checks under arbitrary interleavings.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 capacity: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(f"need n_pages >= 1 and page_size >= 1, got "
+                             f"{n_pages}/{page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        # logical entries a slot can address (ring length R, or the full
+        # pool span for position-indexed runs)
+        self.capacity = capacity
+        self.width = pages_for(capacity, page_size, capacity)
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.table = np.full((n_slots, self.width), n_pages, np.int32)
+        self.lens = np.zeros((n_slots,), np.int64)
+
+    # -- queries ---------------------------------------------------------------
+    def pages_of(self, length: int) -> int:
+        return pages_for(length, self.page_size, self.capacity)
+
+    def pages_needed(self, slot: int, new_len: int) -> int:
+        return max(self.pages_of(new_len) - self.pages_of(int(self.lens[slot])),
+                   0)
+
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free)
+
+    # -- mutations ---------------------------------------------------------------
+    def grow(self, slot: int, new_len: int) -> bool:
+        """Allocate the pages taking ``slot`` to ``new_len`` logical tokens.
+        All-or-nothing: returns False (state unchanged) if the pool cannot
+        cover it."""
+        cur = int(self.lens[slot])
+        if new_len < cur:
+            raise ValueError(f"grow: new_len {new_len} < current {cur}")
+        have = self.pages_of(cur)
+        need = self.pages_of(new_len) - have
+        if need > len(self.free):
+            return False
+        for j in range(need):
+            self.table[slot, have + j] = self.free.pop()
+        self.lens[slot] = new_len
+        return True
+
+    def shrink(self, slot: int, new_len: int) -> None:
+        """Release the pages beyond ``new_len`` (rollback / partial free)."""
+        cur = int(self.lens[slot])
+        if new_len > cur:
+            raise ValueError(f"shrink: new_len {new_len} > current {cur}")
+        keep = self.pages_of(new_len)
+        for i in range(keep, self.pages_of(cur)):
+            self.free.append(int(self.table[slot, i]))
+            self.table[slot, i] = self.n_pages
+        self.lens[slot] = new_len
+
+    def release(self, slot: int) -> None:
+        """Free every page the slot owns (request done / preempted)."""
+        self.shrink(slot, 0)
+
+    # -- invariants (asserted by the property tests) -----------------------------
+    def check_invariants(self) -> None:
+        owned = [int(p) for row in self.table for p in row if p < self.n_pages]
+        assert len(owned) == len(set(owned)), "page double-assigned"
+        assert not (set(owned) & set(self.free)), "page both owned and free"
+        assert len(owned) + len(self.free) == self.n_pages, "pages leaked"
+        for s in range(self.n_slots):
+            assert self.pages_of(int(self.lens[s])) == int(
+                (self.table[s] < self.n_pages).sum()), "table/len mismatch"
+
+
+class KVPool:
+    """Device page arrays + per-run ``PagePool`` accounting for a model.
+
+    ``caches`` is a list aligned with ``build_plan(cfg)`` — the paged
+    analogue of ``init_cache`` — and is meant to be threaded through the
+    engine's donated jitted programs exactly like the dense arena.  The
+    block tables stay host-side (numpy) and are shipped per call.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, n_pages: int,
+                 page_size: int, kv_dtype: str = "f32"):
+        plan = build_plan(cfg)
+        if not all(run.kind == "attn" for run in plan):
+            raise ValueError(
+                "paged KV arena requires an all-attention plan (GQA / "
+                "sliding-window / MLA); SSM and shared-attention runs carry "
+                f"recurrent state — got kinds {[r.kind for r in plan]}")
+        if kv_dtype not in ("f32", "int8"):
+            raise ValueError(f"kv_dtype must be 'f32' or 'int8', got "
+                             f"{kv_dtype!r}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.kv_dtype = kv_dtype
+        # a position-indexed (full-attention / MLA) run can address the
+        # whole pool from one slot: that IS the new length bound
+        self.capacity = n_pages * page_size
+        self.plan = plan
+        self.pools: List[PagePool] = []
+        self.caches: List[Any] = []
+        dtype = jnp.dtype(cfg.dtype)
+        for run in plan:
+            R = cache_len(run, self.capacity)
+            self.pools.append(PagePool(n_pages, page_size, n_slots, R))
+            L, P = run.n_layers, page_size
+            if cfg.mla.enabled:
+                w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                self.caches.append(
+                    {"latent": jnp.zeros((L, n_pages, P, w), dtype)})
+            elif kv_dtype == "int8":
+                shape = (L, n_pages, P, cfg.n_kv_heads, cfg.d_head)
+                sshape = (L, n_pages, P, cfg.n_kv_heads)
+                self.caches.append({
+                    "k": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "v_scale": jnp.zeros(sshape, jnp.float32),
+                })
+            else:
+                shape = (L, n_pages, P, cfg.n_kv_heads, cfg.d_head)
+                self.caches.append({"k": jnp.zeros(shape, dtype),
+                                    "v": jnp.zeros(shape, dtype)})
+        # byte accounting is precomputed: the engine DONATES the cache
+        # arrays to its jitted programs, so the initial leaves must never
+        # be touched again after handing ``caches`` over
+        self._page_bytes = [
+            sum(leaf.nbytes // n_pages for leaf in c.values())
+            for c in self.caches]
+
+    # -- capacity queries ---------------------------------------------------------
+    def fits(self, total_len: int) -> bool:
+        """Can the pool EVER hold a request of ``total_len`` tokens (prompt +
+        generation), assuming it runs alone?"""
+        if total_len > self.capacity:
+            return False
+        return all(p.pages_of(total_len) <= p.n_pages for p in self.pools)
+
+    def free_pages(self) -> int:
+        """Binding free-page count (min across runs)."""
+        return min(p.free_pages() for p in self.pools)
+
+    def headroom_pages(self, decode_lens: Sequence[int]) -> int:
+        """Free pages available to NEW prefill work after reserving the
+        growth this tick's decode writes need (one token per listed slot
+        length).  Min across runs; floored at 0."""
+        room = None
+        for p in self.pools:
+            reserve = sum(p.pages_of(l + 1) - p.pages_of(l)
+                          for l in decode_lens)
+            r = p.free_pages() - reserve
+            room = r if room is None else min(room, r)
+        return max(room or 0, 0)
+
+    def len_of(self, slot: int) -> int:
+        return int(self.pools[0].lens[slot])
+
+    def max_grow_tokens(self, slot: int) -> int:
+        """Largest token growth ``grow(slot, len + t)`` can grant right now
+        (min across runs).  A run whose current + free pages reach its full
+        width is never binding: ring runs reuse their pages forever."""
+        room = None
+        for p in self.pools:
+            cur = int(p.lens[slot])
+            held = p.pages_of(cur)
+            if held + p.free_pages() >= p.width:
+                continue
+            cov = (held + p.free_pages()) * p.page_size - cur
+            room = cov if room is None else min(room, cov)
+        return self.capacity if room is None else max(room, 0)
+
+    # -- mutations ---------------------------------------------------------------
+    def grow(self, slot: int, new_len: int) -> bool:
+        """Grow ``slot`` to ``new_len`` logical tokens in EVERY run's pool —
+        all-or-nothing (partial successes roll back)."""
+        done: List[PagePool] = []
+        prev = [int(p.lens[slot]) for p in self.pools]
+        for p, old in zip(self.pools, prev):
+            if not p.grow(slot, new_len):
+                for q, o in zip(done, prev):
+                    q.shrink(slot, o)
+                return False
+            done.append(p)
+        return True
+
+    def release(self, slot: int) -> None:
+        for p in self.pools:
+            p.release(slot)
+
+    # -- device-facing views --------------------------------------------------------
+    def block_tables(self, active: Optional[np.ndarray] = None) -> List[Any]:
+        """Per-run ``[n_slots, W_r]`` int32 block tables for a jitted call.
+        Rows of slots not in ``active`` (bool [n_slots]) are forced to the
+        sentinel so their scatters drop and their gathers mask out."""
+        out = []
+        for p in self.pools:
+            t = p.table
+            if active is not None:
+                t = t.copy()
+                t[~active] = p.n_pages
+            out.append(jnp.asarray(t))
+        return out
+
+    # -- accounting ---------------------------------------------------------------
+    def page_bytes(self, r: int) -> int:
+        """Bytes of device memory one physical page of run ``r`` holds
+        (across all layers and parallel leaves, scales included)."""
+        return self._page_bytes[r]
+
+    def resident_bytes(self) -> int:
+        """KV bytes resident = allocated pages x page bytes (the number the
+        dense arena pins at ``sum(leaf.nbytes)`` regardless of occupancy)."""
+        return sum(self.pools[r].used_pages() * self._page_bytes[r]
+                   for r in range(len(self.pools)))
+
+    def total_bytes(self) -> int:
+        return sum(b * self.n_pages for b in self._page_bytes)
+
+    def utilization(self) -> float:
+        total = sum(p.n_pages for p in self.pools)
+        used = sum(p.used_pages() for p in self.pools)
+        return used / max(total, 1)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "capacity_tokens": self.capacity,
+            "free_pages": self.free_pages(),
+            "utilization": self.utilization(),
+            "resident_bytes": self.resident_bytes(),
+            "total_bytes": self.total_bytes(),
+        }

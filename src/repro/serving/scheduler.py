@@ -32,7 +32,7 @@ carried out by ``ServingEngine.step``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -85,25 +85,38 @@ class PhaseScheduler:
             return "prefill", "prefill"
         raise ValueError(s)
 
-    def plan_tick(self, waiting: Sequence[tuple],
-                  decoding: List[int]) -> TickPlan:
-        """waiting: [(req_id, remaining_prompt_tokens[, chunkable])];
-        decoding: [req_id].
+    def plan_tick(self, waiting: Sequence[tuple], decoding: List[int], *,
+                  free_pages: Optional[int] = None,
+                  page_size: int = 0) -> TickPlan:
+        """waiting: [(req_id, remaining_prompt_tokens[, chunkable[,
+        cur_len]])]; decoding: [req_id].
 
         Greedy: fill decode slots first (latency), then admit prefill work
         up to the token budget.  Chunkable requests take at most
         ``prefill_chunk`` tokens per tick; non-chunkable ones (SSM /
         shared-attention plans, whose recurrent state cannot resume
         mid-prompt) are scheduled atomically as one whole-prompt chunk.
+
+        TOKEN-LEVEL ADMISSION (paged arena): with ``free_pages`` /
+        ``page_size`` set, prefill work is additionally admitted only
+        while the pool's free pages cover it — each chunk is clipped to
+        the tokens its request's remaining page headroom can hold, given
+        its current arena length ``cur_len`` (a partially-filled last page
+        still has room; a fresh page is charged the moment a chunk
+        crosses into it).  The engine reserves this tick's decode-growth
+        pages before calling, so prefill can never starve decode of its
+        one-token writes.
         """
         pg, dg = self.groups_for()
         plan = TickPlan(prefill_group=pg, decode_group=dg)
         plan.decode_reqs = decoding[: self.cfg.max_decode_batch]
         budget = self.cfg.max_prefill_tokens
         free_slots = self.cfg.max_decode_batch - len(plan.decode_reqs)
+        pages_left = free_pages
         for entry in waiting:
             rid, remaining = entry[0], entry[1]
             chunkable = entry[2] if len(entry) > 2 else True
+            cur_len = entry[3] if len(entry) > 3 else 0
             if free_slots <= 0 and budget <= 0:
                 break
             if chunkable:
@@ -116,11 +129,21 @@ class PhaseScheduler:
                 # phase, exactly the head-of-line blocking the budget exists
                 # to prevent.
                 take = remaining if budget > 0 else 0
+            if pages_left is not None and page_size > 0 and take > 0:
+                # tokens coverable = tail of the current page + free pages
+                used = -(-cur_len // page_size)          # pages already held
+                coverable = (used + pages_left) * page_size - cur_len
+                if not chunkable and coverable < take:
+                    take = 0                             # atomic: all or none
+                take = min(take, coverable)
             if take <= 0:
                 break
             plan.prefill_reqs.append(rid)
             plan.prefill_chunks.append((rid, take))
             budget -= take
+            if pages_left is not None and page_size > 0:
+                pages_left -= (-(-(cur_len + take) // page_size)
+                               - -(-cur_len // page_size))
             if take >= remaining:
                 free_slots -= 1        # request becomes a decode occupant
         return plan

@@ -171,6 +171,87 @@ def test_decode_attention_ragged_lengths():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("S,bs", [(1536, 1024), (48, 32), (1000, 256)])
+def test_decode_attention_non_divisible_cache_length(S, bs):
+    """Regression: S % bs != 0 used to trip a hard assert; the final tile
+    is now ragged and masked."""
+    B, H, D = 2, 4, 64
+    ks = jax.random.split(KEY, 4)
+    q = rand(ks[0], (B, H, D), scale=0.5)
+    kc = rand(ks[1], (B, S, H, D), scale=0.5)
+    vc = rand(ks[2], (B, S, H, D), scale=0.5)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got = ops.decode_attention(q, kc, vc, lengths, bs=bs)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_attention (block-pool cache)
+# ---------------------------------------------------------------------------
+
+
+def _paged_setup(key, B, Hkv, D, n_pages, ps, W, lengths):
+    """Build a pool + block tables and the equivalent dense gathered cache."""
+    ks = jax.random.split(key, 2)
+    k_pages = rand(ks[0], (n_pages, ps, Hkv, D), scale=0.5)
+    v_pages = rand(ks[1], (n_pages, ps, Hkv, D), scale=0.5)
+    rng = np.random.default_rng(0)
+    free = list(rng.permutation(n_pages))
+    bt = np.full((B, W), n_pages, np.int32)        # sentinel: unallocated
+    for b in range(B):
+        for i in range(-(-int(lengths[b]) // ps)):
+            bt[b, i] = free.pop()
+    # dense view: gather each row's pages (sentinel rows stay zero)
+    kd = np.zeros((B, W * ps, Hkv, D), np.float32)
+    vd = np.zeros((B, W * ps, Hkv, D), np.float32)
+    for b in range(B):
+        for i in range(W):
+            if bt[b, i] < n_pages:
+                kd[b, i * ps:(i + 1) * ps] = np.asarray(k_pages[bt[b, i]])
+                vd[b, i * ps:(i + 1) * ps] = np.asarray(v_pages[bt[b, i]])
+    return k_pages, v_pages, jnp.asarray(bt), jnp.asarray(kd), jnp.asarray(vd)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,ps", [
+    (2, 8, 8, 64, 16),
+    (3, 8, 2, 64, 32),       # GQA
+    (2, 4, 1, 128, 8),       # MQA
+])
+def test_paged_decode_attention_matches_ref(B, H, Hkv, D, ps):
+    n_pages, W = 24, 6
+    ks = jax.random.split(KEY, 2)
+    lengths = jax.random.randint(ks[0], (B,), 1, W * ps + 1)
+    q = rand(ks[1], (B, H, D), scale=0.5)
+    k_pages, v_pages, bt, kd, vd = _paged_setup(
+        jax.random.fold_in(KEY, 7), B, Hkv, D, n_pages, ps, W, lengths)
+    got = ops.paged_decode_attention(q, k_pages, v_pages, bt, lengths)
+    want = ref.decode_attention_ref(q, kd, vd, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paged_decode_attention_unallocated_pages_inert():
+    """Pool content outside a sequence's block table must not leak in."""
+    B, H, D, ps, n_pages, W = 2, 4, 64, 16, 16, 4
+    ks = jax.random.split(KEY, 2)
+    lengths = jnp.array([20, 64], jnp.int32)
+    q = rand(ks[1], (B, H, D))
+    k_pages, v_pages, bt, kd, vd = _paged_setup(
+        jax.random.fold_in(KEY, 8), B, H, D, n_pages, ps, W, lengths)
+    base = ops.paged_decode_attention(q, k_pages, v_pages, bt, lengths)
+    used = set(np.asarray(bt).ravel().tolist()) - {n_pages}
+    unused = [p for p in range(n_pages) if p not in used]
+    poison_k, poison_v = k_pages, v_pages
+    for p in unused:
+        poison_k = poison_k.at[p].set(99.0)
+        poison_v = poison_v.at[p].set(-99.0)
+    got = ops.paged_decode_attention(q, poison_k, poison_v, bt, lengths)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # ssd_chunk (Mamba-2 intra-chunk)
 # ---------------------------------------------------------------------------
