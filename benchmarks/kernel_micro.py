@@ -14,7 +14,6 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.gemv_cid import quantize_int8

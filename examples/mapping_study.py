@@ -13,7 +13,6 @@ from repro.core.scheduler import (
     DEFAULT_GRID,
     PREFILL_LENGTHS,
     evaluate,
-    geomean,
     gmean_speedup,
 )
 

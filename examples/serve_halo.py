@@ -26,14 +26,15 @@ from repro.serving.scheduler import PhaseAwareConfig
 def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_batch=4, max_len=128, prefill_chunk=2048,
                max_prefill_tokens=8192, paged=False, page_size=16,
-               n_pages=64):
+               n_pages=64, prefix_cache=False):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
                                max_decode_batch=max_batch,
                                prefill_chunk=prefill_chunk,
                                max_prefill_tokens=max_prefill_tokens),
-        paged=paged, page_size=page_size, n_pages=n_pages))
+        paged=paged, page_size=page_size, n_pages=n_pages,
+        prefix_cache=prefix_cache))
     t0 = time.monotonic()
     for p in prompts:
         engine.submit(p.copy(), max_new_tokens=max_new)
@@ -115,10 +116,37 @@ def main():
                   f"{kv['peak_resident']/1e6:9.2f}M "
                   f"{eng.preemptions:8d}  {same if label == 'paged' else ''}")
 
+    # shared system prompt (the interactive workload HALO targets): every
+    # request opens with the same 32-token head; the radix prefix cache
+    # attaches the cached pages instead of recomputing them
+    print(f"\n{'prefix cache':12s} {'TTFT p50':>10s} {'hit rate':>9s} "
+          f"{'prefill tok':>12s} {'cow':>5s}  outputs identical?")
+    head = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    stream = [np.concatenate([head, rng.integers(0, cfg.vocab_size, (8,),
+                                                 dtype=np.int32)])
+              for _ in range(8)]
+    base = None
+    for label, pc in (("off", False), ("on", True)):
+        eng, done, _ = run_stream(cfg, params, stream, max_new=args.max_new,
+                                  prefill_chunk=16, max_prefill_tokens=32,
+                                  paged=True, page_size=8, n_pages=64,
+                                  prefix_cache=pc)
+        outs = [r.generated for r in done]
+        same = "(reference)" if base is None else (
+            "yes" if outs == base else "NO")
+        if base is None:
+            base = outs
+        ps = eng.prefix_stats()
+        print(f"{label:12s} "
+              f"{np.median([r.ttft for r in done])*1e3:9.1f}ms "
+              f"{ps['hit_rate']:9.2f} "
+              f"{ps['prefill_tokens_executed']:12.0f} "
+              f"{ps['cow_copies']:5.0f}  {same}")
+
     print("\nNote: strategies schedule the same math onto different worker "
           "groups (separate compiled programs); outputs must match exactly. "
           "On TPU the groups run compute- vs bandwidth-sharded programs — "
-          "see docs/serving.md and DESIGN.md §Adaptation.  The paged arena "
+          "see docs/serving.md §Strategy groups.  The paged arena "
           "(docs/serving.md §Paged) bounds capacity by POOL size, not "
           "max_len: same tokens, a fraction of the resident KV bytes.")
 

@@ -9,7 +9,6 @@ import dataclasses
 import shutil
 import tempfile
 
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig

@@ -6,8 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.models import (build_plan, decode_step, forward_train, init_cache,
-                          init_params, prefill)
+from repro.models import (
+    build_plan,
+    decode_step,
+    forward_train,
+    init_params,
+    prefill,
+)
 from dataclasses import replace
 
 def run(name: str) -> None:

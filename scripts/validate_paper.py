@@ -1,6 +1,6 @@
 """Validate the analytical model against every paper claim."""
 from repro.configs import get_config
-from repro.core import evaluate, gmean_speedup, DEFAULT_GRID
+from repro.core import evaluate, gmean_speedup
 from repro.core.scheduler import PREFILL_LENGTHS, DECODE_GRID, geomean
 
 llama = get_config("llama2-7b")

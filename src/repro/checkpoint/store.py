@@ -13,8 +13,8 @@ Properties needed at scale and how they are met here:
   * elastic reshard — restore() takes the CURRENT mesh/shardings and uses
     ``jax.device_put`` per leaf, so a checkpoint written on one mesh shape
     restores onto any other (the arrays are saved unsharded; on a real
-    multi-host deployment each host would write its shard set — see
-    DESIGN.md §Fault-tolerance for the ocdbt-style extension);
+    multi-host deployment each host would write its shard set, the
+    ocdbt-style extension);
   * retention — keep the last ``keep`` checkpoints, delete older ones.
 """
 

@@ -13,10 +13,8 @@ Two kinds of configs exist:
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List
 
 # ---------------------------------------------------------------------------
 # Sub-configs
@@ -363,8 +361,8 @@ def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
     """Shapes applicable to an architecture.
 
     ``long_500k`` requires sub-quadratic attention: it runs for SSM / hybrid /
-    sliding-window archs and is skipped (recorded in DESIGN.md) for pure
-    full-attention archs.
+    sliding-window archs and is skipped for pure full-attention archs
+    (quadratic attention at 500k tokens does not fit the chip budget).
     """
     out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
     if cfg.sub_quadratic:

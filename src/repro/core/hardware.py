@@ -38,7 +38,7 @@ Energy constants are per-byte / per-op and calibrated against the paper's
 gmean ratios (2.6x prefill CiM/CiD, 3.9x decode CiD/CiM, 2x vs AttAcc1,
 1.8x vs CENT) — the paper does not publish absolute Joules, so the absolute
 scale is from CACTI-class literature values and the RATIOS are what we
-reproduce (see benchmarks/paper_validation.py).
+reproduce (see scripts/validate_paper.py and tests/test_paper_claims.py).
 
 The TPU v5e description at the bottom is used by the roofline layer
 (launch/roofline.py), not by the paper model.

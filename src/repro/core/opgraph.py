@@ -20,7 +20,6 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import List
 

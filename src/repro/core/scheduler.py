@@ -15,7 +15,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
-from repro.core.engines import Cost, make_engines
+from repro.core.engines import make_engines
 from repro.core.hardware import DEFAULT_HW, HaloHardware
 from repro.core.mapping import Mapping, get_mapping
 from repro.core.opgraph import Op, decode_ops, prefill_ops

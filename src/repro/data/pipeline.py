@@ -19,10 +19,9 @@ Two sources:
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -21,7 +21,7 @@ Constraint names used by the model code:
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax

@@ -1,6 +1,7 @@
 """Sharding rules: params / batches / caches -> PartitionSpec trees.
 
-Strategy (the TPU mapping of HALO's two engines — DESIGN.md §Adaptation):
+Strategy (the TPU mapping of HALO's two engines — see also
+docs/serving.md §Strategy groups):
 
 * Parameters use 2D sharding: the TP dimension (heads / d_ff / experts /
   d_inner) over the ``model`` axis and the other matrix dimension over the
@@ -28,7 +29,6 @@ import re
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

@@ -14,7 +14,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import gemm_cim as _gemm
 from repro.kernels import gemv_cid as _gemv
 from repro.kernels import ssd_scan as _ssd
-from repro.kernels.gemv_cid import quantize_int8  # re-export
+from repro.kernels.gemv_cid import quantize_int8  # noqa: F401  (re-export)
 
 
 def _interpret() -> bool:

@@ -17,10 +17,9 @@ all-gather).  Per-op shapes like ``bf16[8,128,2048]`` are parsed directly.
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 # TPU v5e hardware constants (task sheet)
 PEAK_FLOPS = 197e12          # bf16 / chip

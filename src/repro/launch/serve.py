@@ -12,6 +12,10 @@ decode together — HALO's interleaved CiM/CiD utilization at serving level).
 ``--page-size`` tokens, so prompts may exceed --max-len), exhaustion
 preempts the youngest request, and the report adds resident KV bytes +
 preemption counts.  ``--kv-dtype int8`` stores GQA pages quantized.
+``--prefix-cache`` (with ``--paged``) reuses shared-prompt KV pages
+copy-on-write through a radix prefix cache; ``--shared-prefix N`` gives
+every request the same N-token prompt head so the cache has something to
+hit, and the report adds hit rate + prefill tokens skipped.
 """
 
 from __future__ import annotations
@@ -52,6 +56,12 @@ def main(argv=None) -> int:
                     help="pages per run pool (paged)")
     ap.add_argument("--kv-dtype", default="f32", choices=["f32", "int8"],
                     help="int8: quantized GQA pages (paged only)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: shared-prompt KV pages are "
+                         "reused copy-on-write (paged only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by every request "
+                         "(exercises the prefix cache)")
     args = ap.parse_args(argv)
 
     import jax
@@ -76,10 +86,13 @@ def main(argv=None) -> int:
         temperature=max(args.temperature, 1e-6),
         top_k=args.top_k, seed=args.seed,
         paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
-        kv_dtype=args.kv_dtype)
+        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          (min(args.shared_prefix, args.prompt_len),),
+                          dtype=np.int32)
     t0 = time.monotonic()
     for i in range(args.requests):
         L = args.prompt_len
@@ -87,7 +100,9 @@ def main(argv=None) -> int:
             prompt = rng.integers(0, cfg.vocab_size,
                                   (cfg.n_codebooks, L), dtype=np.int32)
         else:
-            prompt = rng.integers(0, cfg.vocab_size, (L,), dtype=np.int32)
+            tail = rng.integers(0, cfg.vocab_size, (L - len(shared),),
+                                dtype=np.int32)
+            prompt = np.concatenate([shared, tail])
         engine.submit(prompt, max_new_tokens=args.max_new)
     done = engine.run_until_drained()
     wall = time.monotonic() - t0
@@ -116,6 +131,13 @@ def main(argv=None) -> int:
     print(f"kv={mode} reserved={kv['reserved']/1e6:.2f}MB "
           f"peak-resident={kv['peak_resident']/1e6:.2f}MB "
           f"preemptions={engine.preemptions}")
+    if args.prefix_cache:
+        ps = engine.prefix_stats()
+        print(f"prefix-cache hit-rate={ps['hit_rate']:.2f} "
+              f"tokens-from-cache={ps['hit_tokens']:.0f} "
+              f"prefill-executed={ps['prefill_tokens_executed']:.0f} "
+              f"cow-copies={ps['cow_copies']:.0f} "
+              f"evicted-pages={ps['cache_evicted_pages']:.0f}")
     return 0
 
 

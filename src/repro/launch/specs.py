@@ -12,18 +12,14 @@ tokenizer itself is out of scope).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.distributed.sharding import (
-    batch_pspec,
-    cache_pspecs,
-    token_pspec,
-)
+from repro.distributed.sharding import batch_pspec, cache_pspecs
 from repro.models.transformer import cache_specs
 
 SDS = jax.ShapeDtypeStruct

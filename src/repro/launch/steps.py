@@ -4,8 +4,8 @@
 ``make_prefill_step`` (params, batch) -> (last_logits, cache)
 ``make_decode_step``  (params, batch, cache, pos) -> (logits, cache)
 
-Memory discipline baked in here (numbers for the 16 GB/chip v5e budget are
-in DESIGN.md §Memory):
+Memory discipline baked in here (sized against the 16 GB/chip v5e budget;
+see launch/training_config.py for the per-architecture numbers):
 
 * remat (activation checkpointing) on every layer scan during training;
 * cross-entropy is computed CHUNKED over the token axis so the full
@@ -19,17 +19,13 @@ in DESIGN.md §Memory):
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import (
-    forward,
-    lm_logits,
-    padded_vocab,
-)
+from repro.models.transformer import forward, lm_logits
 from repro.optim.grad_utils import clip_by_global_norm
 from repro.optim.optimizers import Optimizer
 

@@ -15,7 +15,6 @@ import dataclasses
 import logging
 import sys
 
-import numpy as np
 
 
 def main(argv=None) -> int:
@@ -42,7 +41,7 @@ def main(argv=None) -> int:
 
     from repro.configs.base import get_config
     from repro.data.pipeline import DataConfig
-    from repro.launch.training_config import optimizer_policy, schedule_policy
+    from repro.launch.training_config import optimizer_policy
     from repro.optim.optimizers import make_optimizer
     from repro.optim.schedules import make_schedule
     from repro.runtime.trainer import Trainer, TrainerConfig

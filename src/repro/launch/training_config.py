@@ -1,6 +1,6 @@
 """Per-architecture training policies (optimizer, schedule, memory knobs).
 
-The optimizer choice is a MEMORY policy (DESIGN.md §Memory): at 256 chips x
+The optimizer choice is a MEMORY policy: at 256 chips x
 16 GB, f32 Adam state (8 bytes/param) fits only models under ~50B params.
 Larger models downgrade the moment dtypes; arctic-480b additionally factors
 the second moment (Adafactor) — 480e9 params * 10B/param would be 4.8 TB of

@@ -12,7 +12,7 @@ f32 for reduced smoke configs); matmuls accumulate in f32
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

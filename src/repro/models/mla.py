@@ -14,13 +14,13 @@ Cache layout: [B, S, r + dr] so the S axis can be sequence-sharded over the
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
-from repro.models.attention import NEG_INF, _maybe_softcap
+from repro.models.attention import NEG_INF
 from repro.models.layers import apply_rope, dense_init, matmul, rmsnorm, rmsnorm_init
 
 

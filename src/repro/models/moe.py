@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.models.layers import _act, dense_init, ffn, ffn_init, matmul
+from repro.models.layers import _act, dense_init, ffn, ffn_init
 
 
 def moe_init(key, d_model: int, m: MoEConfig, dtype) -> Dict[str, Any]:

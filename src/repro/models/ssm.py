@@ -10,13 +10,13 @@ sequence length, which is why the SSM archs run the long_500k shape.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
-from repro.models.layers import dense_init, matmul, rmsnorm
+from repro.models.layers import dense_init, matmul
 
 Params = Dict[str, Any]
 

@@ -21,9 +21,7 @@ state, MLA runs a compressed-latent cache.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

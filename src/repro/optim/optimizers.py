@@ -2,7 +2,7 @@
 
 State dtype is configurable: ``state_dtype="bfloat16"`` halves optimizer
 memory (used by the largest assigned MoE configs, where f32 Adam state would
-not fit the 16 GB/chip budget at 256 chips — see DESIGN.md §Memory).
+not fit the 16 GB/chip budget at 256 chips — see launch/training_config.py).
 ``adafactor`` factors the second moment into row/col statistics for >=2D
 params (Shazeer & Stern, 2018), cutting state to ~1 byte/param — the default
 for arctic-480b.
@@ -13,7 +13,6 @@ parameter sharding (FSDP x TP) with no extra code.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 

@@ -11,9 +11,10 @@ from repro.serving.engine import (
     ServingEngine,
     TickRecord,
 )
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
 
 __all__ = ["Request", "RequestState", "ServeConfig", "ServingEngine",
            "TickRecord", "TickPlan", "PhaseScheduler", "PhaseAwareConfig",
-           "sample_tokens"]
+           "PrefixCache", "sample_tokens"]

@@ -44,6 +44,20 @@ oldest request always finishes.  Decode attention routes through the
 Pallas paged flash-decode kernel; ``kv_dtype="int8"`` stores GQA pages
 int8 with f32 scales in a parallel page array (MLA latents stay f32).
 
+PREFIX CACHE (``ServeConfig(prefix_cache=True)``, requires paged): a
+radix index over page-aligned token-block hashes
+(``serving/prefix_cache.py``) maps each new prompt's longest cached
+prefix to physical pages.  Admission attaches those pages to the slot's
+block tables (refcounted sharing — no allocation, no compute) and starts
+``prefill_pos`` past the matched tokens; completed prefills publish
+their prompt pages back.  Pages are copy-on-write: before any program
+writes a shared page (a ring wrap, a shared partially-filled tail) the
+engine moves the slot to a private copy (``KVPool.ensure_writable`` +
+one device page copy).  Cached pages are reclaimable capacity — evicted
+LRU-first whenever live work needs pages, BEFORE any live request is
+preempted.  Greedy token streams are bit-identical with the cache on or
+off; only the prefill work executed changes.
+
 This is a single-host engine; launch/serve.py instantiates it either on
 the host CPU (examples, tests) or under the production mesh with the
 decode shardings from distributed/sharding.py.
@@ -71,6 +85,7 @@ from repro.models.transformer import (
     supports_paged,
 )
 from repro.serving.kv_pool import KVPool
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
 
@@ -95,6 +110,7 @@ class Request:
     prompt_len: int = 0
     prefill_pos: int = 0                # prompt tokens already in the arena
     n_preempted: int = 0                # pool-exhaustion evictions survived
+    cached_tokens: int = 0              # tokens served from the prefix cache
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
@@ -144,6 +160,9 @@ class ServeConfig:
     page_size: int = 16
     n_pages: int = 64
     kv_dtype: str = "f32"               # "int8": quantized GQA pages (paged)
+    # radix prefix cache over the page pool (requires paged): shared-prompt
+    # KV pages are reused copy-on-write instead of recomputed
+    prefix_cache: bool = False
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -181,8 +200,16 @@ class ServingEngine:
                 raise ValueError(
                     f"kv_dtype={sc.kv_dtype!r} requires paged=True (the "
                     "dense engine stores the arena in the model dtype)")
+            if sc.prefix_cache:
+                raise ValueError("prefix_cache=True requires paged=True "
+                                 "(prefix reuse shares physical pages "
+                                 "through the block tables)")
             self.pool = None
             self.cache = init_cache(cfg, B, S)
+        self.prefix: Optional[PrefixCache] = None
+        if sc.paged and sc.prefix_cache:
+            self.prefix = PrefixCache(sc.page_size,
+                                      self.pool.shareable_capacity())
         self.slot_pos = np.full((B,), -1, np.int64)     # next write position
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
@@ -198,6 +225,9 @@ class ServingEngine:
         self.preemptions = 0             # lifetime pool evictions (paged)
         self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
         self._tick_preemptions = 0
+        self.prefill_tokens_executed = 0  # chunk tokens actually computed
+        self.cow_copies = 0              # device page copies (COW)
+        self.cache_evicted_pages = 0     # pages reclaimed from the cache
         # the dense arena pins its full footprint up front; computed here
         # because the cache arrays are donated (buffers move every call)
         self._dense_kv_bytes = (0 if sc.paged else sum(
@@ -208,6 +238,8 @@ class ServingEngine:
         # (group, kind) -> jitted program; built lazily so each strategy
         # only compiles the programs its groups actually execute
         self._programs: Dict[Tuple[str, str], Callable] = {}
+        # run -> jitted COW page copy (donated in-place, one per run shape)
+        self._copy_programs: Dict[int, Callable] = {}
         self._rng = jax.random.PRNGKey(sc.seed)
         self._key0 = jax.random.PRNGKey(sc.seed)
 
@@ -351,11 +383,86 @@ class ServingEngine:
             req.slot = slot
             req.state = RequestState.PREFILLING
             self.slot_req[slot] = req
+            self._try_prefix_attach(req)
             admitted.append(req)
         return admitted
 
     def _by_id(self) -> Dict[int, Request]:
         return {r.req_id: r for r in self.slot_req if r is not None}
+
+    # -- prefix cache ------------------------------------------------------------
+    def _try_prefix_attach(self, req: Request) -> None:
+        """Admission-time prefix lookup: point the slot's leading block-
+        table rows at the longest cached prefix (shared, refcounted) and
+        start prefill past it.  The match is capped at len - 1 so at
+        least one token remains to prefill — the prompt's last-token
+        logits seed decoding."""
+        if self.prefix is None:
+            return
+        tokens = self._effective_tokens(req)
+        matched, pages = self.prefix.match(
+            tokens, max_tokens=int(tokens.shape[-1]) - 1)
+        if matched <= 0:
+            return
+        self.pool.attach(req.slot, pages, matched)
+        req.prefill_pos = matched
+        req.cached_tokens = matched
+
+    def _publish_prefix(self, req: Request) -> None:
+        """Publish a freshly-prefilled request's PROMPT pages into the
+        cache.  Ring purity gate: a sliding-window run's pages are
+        position-pure only while the total prefilled length has not
+        wrapped its ring — once it has, row 0 holds late positions and
+        the prefix is unpublishable (see docs/serving.md §Prefix cache)."""
+        if self.prefix is None:
+            return
+        if self._effective_len(req) > self.pool.shareable_capacity():
+            return
+        prompt = self._effective_tokens(req)[..., :req.prompt_len]
+        self.prefix.insert(prompt, self.pool, req.slot)
+
+    def _reclaim_cache(self, n_pages: int) -> int:
+        """Evict LRU cached blocks until at least ``n_pages`` pages are
+        actually FREE again (blocks still pinned by live slots are
+        skipped — evicting them frees nothing and only loses future
+        hits).  Cached pages are reclaimable capacity: this always runs
+        before any live request is preempted."""
+        if self.prefix is None:
+            return 0
+        freed = self.prefix.evict(self.pool, max(n_pages, 1))
+        self.cache_evicted_pages += freed
+        return freed
+
+    def _copy_pages(self, copies) -> None:
+        """Mirror ``KVPool.ensure_writable``'s accounting with the device
+        copies: one donated in-place program per run moves page ``old``'s
+        rows to ``new`` before the writer's program launches."""
+        for r, old, new in copies:
+            if r not in self._copy_programs:
+                # pool leaves are [L, n_pages, P, ...]: pages live on axis 1
+                self._copy_programs[r] = jax.jit(
+                    lambda c, src, dst: jax.tree.map(
+                        lambda x: x.at[:, dst].set(x[:, src]), c),
+                    donate_argnums=(0,))
+            self.cache[r] = self._copy_programs[r](
+                self.cache[r], jnp.int32(old), jnp.int32(new))
+        self.cow_copies += len(copies)
+
+    def _ensure_writable(self, slot: int, start: int, end: int) -> bool:
+        """COW every shared page a write to [start, end) would dirty,
+        reclaiming cached pages for copy targets if needed.  False if
+        copy targets remain unavailable (caller preempts or defers)."""
+        copies = self.pool.ensure_writable(slot, start, end)
+        if copies is None:
+            # reclaim exactly the copy-target deficit (a multi-page chunk
+            # may need several targets per run — one fixed-size reclaim
+            # would drip-feed it through the stall breaker)
+            self._reclaim_cache(self.pool.cow_deficit(slot, start, end))
+            copies = self.pool.ensure_writable(slot, start, end)
+        if copies is None:
+            return False
+        self._copy_pages(copies)
+        return True
 
     # -- recompute-on-resume -----------------------------------------------------
     def _effective_tokens(self, req: Request) -> np.ndarray:
@@ -385,6 +492,7 @@ class ServingEngine:
         req.slot = -1
         req.state = RequestState.WAITING
         req.prefill_pos = 0
+        req.cached_tokens = 0           # re-matched at re-admission
         req.n_preempted += 1
         self.preemptions += 1
         self._tick_preemptions += 1
@@ -418,6 +526,9 @@ class ServingEngine:
         if not any(r is not None and r.state == RequestState.PREFILLING
                    for r in self.slot_req):
             return
+        # cached pages yield before any live request does
+        if self._reclaim_cache(1):
+            return
         holders = [r for r in self.slot_req
                    if r is not None and self.pool.len_of(r.slot) > 0]
         if not holders:
@@ -436,6 +547,7 @@ class ServingEngine:
             req.generated.append(int(flat[0]))
 
     def _start_decoding(self, req: Request, tok_row) -> None:
+        self._publish_prefix(req)       # prompt pages complete & unwrapped
         self.slot_pos[req.slot] = self._effective_len(req)
         self._append_token(req, tok_row)
         if req.t_first_token == 0.0:    # a resumed prefill keeps its TTFT
@@ -453,7 +565,7 @@ class ServingEngine:
                 last = last[0] if last else None
             if last == req.eos_id:
                 return True
-        limit = self.pool.capacity if self.paged else self.sc.max_len
+        limit = self.pool.length_bound if self.paged else self.sc.max_len
         if self.slot_pos[req.slot] >= limit - 1:
             return True
         return False
@@ -467,6 +579,27 @@ class ServingEngine:
         self.slot_pos[req.slot] = -1
         self.done.append(req)
 
+    def _grow_for_decode(self, r: Request) -> bool:
+        """Secure this tick's one-token write for ``r``: grow the slot by
+        one position and COW any shared page that position lands in
+        (ring wrap over attached/published prefix pages).  Exhaustion
+        order: reclaim cached pages first, preempt live requests only
+        after the cache is dry.  Returns False iff ``r`` itself was
+        evicted."""
+        pos = int(self.slot_pos[r.slot])
+        while True:
+            if self.pool.grow(r.slot, pos + 1):
+                if self._ensure_writable(r.slot, pos, pos + 1):
+                    return True
+                # grown but no COW target: roll back before freeing pages
+                self.pool.shrink(r.slot, pos)
+            elif self._reclaim_cache(1):
+                continue
+            victim = self._preemption_victim(r)
+            self._preempt(victim)
+            if victim is r:
+                return False
+
     # -- phase execution --------------------------------------------------------
     def _run_prefill_tick(self, plan: TickPlan) -> None:
         """Execute the plan's prefill chunks on the planned worker group."""
@@ -477,28 +610,40 @@ class ServingEngine:
             return
         if not self.chunked:
             # atomic whole-prompt prefill (SSM / shared-attn state handoff)
+            self._prefill_progress = True
             for req, take in chunks:
                 tokens = jnp.asarray(req.prompt[None], jnp.int32)
                 toks, self.cache = self._program(plan.prefill_group, "whole")(
                     self.params, tokens, jnp.int32(req.slot), self.cache,
                     self._next_key())
                 req.prefill_pos = req.prompt_len
+                self.prefill_tokens_executed += req.prompt_len
                 self._start_decoding(req, self._to_host(toks)[0])
             return
 
         if self.paged:
             # claim the chunks' pages; the scheduler planned against the
             # pool headroom, so this succeeds — trim defensively (one
-            # query, one grow) if a same-tick race says otherwise
+            # query, one grow) if a same-tick race says otherwise.  Any
+            # SHARED page the chunk would dirty (a ring wrap over attached
+            # prefix pages) is copied first; if no copy target exists even
+            # after reclaiming cached pages, the chunk rolls back and
+            # waits for a later tick.
             claimed = []
             for req, take in chunks:
                 take = min(take, self.pool.max_grow_tokens(req.slot))
-                if take > 0 and self.pool.grow(req.slot,
-                                               req.prefill_pos + take):
-                    claimed.append((req, take))
+                if take <= 0 or not self.pool.grow(req.slot,
+                                                   req.prefill_pos + take):
+                    continue
+                if not self._ensure_writable(req.slot, req.prefill_pos,
+                                             req.prefill_pos + take):
+                    self.pool.shrink(req.slot, req.prefill_pos)
+                    continue
+                claimed.append((req, take))
             chunks = claimed
             if not chunks:
                 return
+        self._prefill_progress = True
 
         # pack the tick's chunks into one padded batch (pow2 buckets bound
         # the number of compiled shapes)
@@ -528,6 +673,7 @@ class ServingEngine:
                 self.params, jnp.asarray(tokens), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(slots), self.cache,
                 self._next_key())
+        self.prefill_tokens_executed += sum(take for _, take in chunks)
         sampled = None
         for i, (req, take) in enumerate(chunks):
             req.prefill_pos += take
@@ -541,21 +687,17 @@ class ServingEngine:
         active = [reqs[rid] for rid in plan.decode_reqs
                   if rid in reqs and reqs[rid].state == RequestState.DECODING]
         if self.paged and active:
-            # each decode write may cross into a fresh page; grow oldest-
-            # first and PREEMPT the youngest page holder when the pool is
-            # out — its pages come back, it re-queues for recompute
+            # each decode write may cross into a fresh page (or, shared-
+            # prefix, into a page another request still reads — COW).
+            # Grow oldest-first; when the pool is out, reclaim CACHED
+            # pages LRU-first, and only if the cache cannot help PREEMPT
+            # the youngest page holder — its pages come back, it
+            # re-queues for recompute
             survivors = []
             for r in sorted(active, key=lambda r: r.req_id):
                 if r.state != RequestState.DECODING or r.slot < 0:
                     continue                        # evicted earlier this loop
-                evicted_self = False
-                while not self.pool.grow(r.slot, int(self.slot_pos[r.slot]) + 1):
-                    victim = self._preemption_victim(r)
-                    self._preempt(victim)
-                    if victim is r:
-                        evicted_self = True
-                        break
-                if not evicted_self:
+                if self._grow_for_decode(r):
                     survivors.append(r)
             active = survivors
         if not active:
@@ -596,6 +738,7 @@ class ServingEngine:
         """One engine tick: plan (scheduler) -> execute (this method)."""
         t0 = time.monotonic()
         self._tick_preemptions = 0
+        self._prefill_progress = False
         self._admit()
         # age order (FIFO): under page contention the oldest request gets
         # the prefill budget/pages first — with slot order a recycled low
@@ -616,14 +759,15 @@ class ServingEngine:
                  if r is not None and r.state == RequestState.DECODING])
             plan = self.scheduler.plan_tick(
                 prefilling, decoding, free_pages=headroom,
-                page_size=self.sc.page_size)
+                page_size=self.sc.page_size,
+                capacity=self.pool.widest_capacity())
         else:
             plan = self.scheduler.plan_tick(prefilling, decoding)
         if plan.prefill_chunks:
             self._run_prefill_tick(plan)
         if plan.decode_reqs:
             self._run_decode_tick(plan)
-        if self.paged and not plan.prefill_chunks and not plan.decode_reqs:
+        if self.paged and not plan.decode_reqs and not self._prefill_progress:
             self._break_prefill_stall()
         resident = self.pool.resident_bytes() if self.paged else 0
         self.kv_resident_peak = max(self.kv_resident_peak, resident)
@@ -673,6 +817,25 @@ class ServingEngine:
         return {"reserved": self._dense_kv_bytes,
                 "resident": self._dense_kv_bytes,
                 "peak_resident": self._dense_kv_bytes}
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Prefix-cache effectiveness: hit rate, tokens served from cache
+        vs prefill tokens actually computed, COW copies, evictions.
+        Zeros when the cache is off (the comparison baseline)."""
+        out = {
+            "prefill_tokens_executed": float(self.prefill_tokens_executed),
+            "cow_copies": float(self.cow_copies),
+            "cache_evicted_pages": float(self.cache_evicted_pages),
+            "hit_rate": 0.0,
+            "hit_tokens": 0.0,
+            "cached_pages": 0.0,
+        }
+        if self.prefix is not None:
+            s = self.prefix.stats()
+            out["hit_rate"] = float(s["hit_rate"])
+            out["hit_tokens"] = float(s["hit_tokens"])
+            out["cached_pages"] = float(s["cached_pages"])
+        return out
 
     def phase_occupancy(self) -> Dict[str, float]:
         """Fractions of ticks running prefill / decode / both (interleave).

@@ -19,8 +19,11 @@ locality) while placement becomes fully dynamic.  See docs/serving.md.
 Two layers:
 
 * ``PagePool`` — pure host-side accounting for ONE pool: free list,
-  per-slot block tables, grow/shrink/release.  No jax; property-testable
-  (no page is ever double-assigned, pages are conserved).
+  per-slot block tables, per-page REFCOUNTS, grow/shrink/release plus
+  attach (share another owner's pages), retain/release_ref (external —
+  prefix-cache — references) and copy-on-write.  No jax; property-testable
+  (refcounts are conserved, no page is freed while referenced, COW never
+  leaves a writer aliasing a shared page).
 * ``KVPool`` — one ``PagePool`` + device page arrays per attention run of
   the model plan, ring/MLA-aware via ``cache_len``: a sliding-window run
   pools only its ring of ``min(window, capacity)`` logical entries, an MLA
@@ -39,12 +42,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import build_plan, cache_len
-
-
-def pages_for(length: int, page_size: int, capacity: int) -> int:
-    """Physical pages holding a sequence of ``length`` tokens (ring-clamped
-    to ``capacity`` logical entries)."""
-    return -(-min(max(length, 0), capacity) // page_size)
+from repro.serving.scheduler import pages_for
 
 
 class PagePool:
@@ -53,9 +51,16 @@ class PagePool:
     Tracks, per slot: the logical length and the block table row mapping
     logical page ``i`` to a physical page (the sentinel ``n_pages`` means
     "never allocated" — device scatters through it drop, gathers clamp and
-    mask).  Pure Python/numpy; every mutation preserves the two pool
-    invariants (no double assignment, page conservation) that
-    tests/test_kv_pool.py property-checks under arbitrary interleavings.
+    mask).  Pages carry a REFCOUNT: a page may back the same logical range
+    of several slots at once (shared-prefix reuse) and may additionally be
+    pinned by an external holder (the radix prefix cache) via
+    ``retain``/``release_ref``.  A page returns to the free list only when
+    its last reference drops; a writer about to dirty a shared page must
+    go through ``cow`` first.  Pure Python/numpy; every mutation preserves
+    the pool invariants (refcount conservation: ref == table references +
+    external references; no free-while-referenced; no double assignment)
+    that tests/test_kv_pool.py property-checks under arbitrary
+    interleavings.
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
@@ -73,6 +78,10 @@ class PagePool:
         self.free: List[int] = list(range(n_pages - 1, -1, -1))
         self.table = np.full((n_slots, self.width), n_pages, np.int32)
         self.lens = np.zeros((n_slots,), np.int64)
+        # ref[p] = block-table rows pointing at p + external (cache) holds;
+        # external is tracked separately so conservation is checkable
+        self.ref = np.zeros((n_pages,), np.int32)
+        self.external = np.zeros((n_pages,), np.int32)
 
     # -- queries ---------------------------------------------------------------
     def pages_of(self, length: int) -> int:
@@ -88,7 +97,41 @@ class PagePool:
     def used_pages(self) -> int:
         return self.n_pages - len(self.free)
 
+    def is_shared(self, page: int) -> bool:
+        """True iff ``page`` has more than one reference (another slot's
+        table row, or the prefix cache) — a writer must COW it first."""
+        return int(self.ref[page]) > 1
+
+    def rows_touched(self, start: int, end: int) -> List[int]:
+        """Block-table rows a write to logical positions [start, end)
+        lands in (ring mapping: entry = pos % capacity).  A write range
+        spanning the whole ring touches every row."""
+        if end - start >= self.capacity:
+            return list(range(self.width))
+        rows, pos = [], start
+        while pos < end:
+            e = pos % self.capacity
+            rows.append(e // self.page_size)
+            # hop to the next page boundary OR the ring wrap, whichever
+            # comes first (a ring span that is not a page multiple wraps
+            # mid-page: positions on both sides land in different rows)
+            pos += min(self.page_size - (e % self.page_size),
+                       self.capacity - e)
+        return sorted(set(rows))
+
     # -- mutations ---------------------------------------------------------------
+    def _alloc(self) -> int:
+        p = self.free.pop()
+        assert self.ref[p] == 0, "free page had live references"
+        self.ref[p] = 1
+        return p
+
+    def _decref(self, page: int) -> None:
+        self.ref[page] -= 1
+        assert self.ref[page] >= 0, "refcount underflow"
+        if self.ref[page] == 0:
+            self.free.append(int(page))
+
     def grow(self, slot: int, new_len: int) -> bool:
         """Allocate the pages taking ``slot`` to ``new_len`` logical tokens.
         All-or-nothing: returns False (state unchanged) if the pool cannot
@@ -101,31 +144,92 @@ class PagePool:
         if need > len(self.free):
             return False
         for j in range(need):
-            self.table[slot, have + j] = self.free.pop()
+            self.table[slot, have + j] = self._alloc()
         self.lens[slot] = new_len
         return True
 
+    def attach(self, slot: int, pages: Sequence[int], new_len: int) -> None:
+        """Point an EMPTY slot's leading table rows at existing pages
+        (shared-prefix reuse): each page gains a table reference, no page
+        is allocated.  ``pages`` must exactly cover ``new_len`` tokens."""
+        if int(self.lens[slot]) != 0:
+            raise ValueError(f"attach: slot {slot} is not empty "
+                             f"(len {int(self.lens[slot])})")
+        if len(pages) != self.pages_of(new_len):
+            raise ValueError(
+                f"attach: {len(pages)} pages cannot back {new_len} tokens "
+                f"(need {self.pages_of(new_len)})")
+        for i, p in enumerate(pages):
+            if not (0 <= p < self.n_pages) or self.ref[p] < 1:
+                raise ValueError(f"attach: page {p} is not live")
+            self.table[slot, i] = p
+            self.ref[p] += 1
+        self.lens[slot] = new_len
+
+    def cow(self, slot: int, row: int) -> Optional[tuple]:
+        """Copy-on-write the shared page behind ``table[slot, row]``: move
+        the row to a freshly-allocated page and drop the old reference.
+        Returns (old_page, new_page) for the caller's device copy, None if
+        the page was exclusive (nothing to do).  Raises IndexError if the
+        free list cannot supply the copy target — callers check
+        ``free_pages()`` (or evict) first."""
+        old = int(self.table[slot, row])
+        if old >= self.n_pages or not self.is_shared(old):
+            return None
+        if not self.free:
+            raise IndexError("cow: no free page for the copy target")
+        new = self._alloc()
+        self.table[slot, row] = new
+        self.ref[old] -= 1              # > 0 by is_shared: never frees here
+        return (old, new)
+
     def shrink(self, slot: int, new_len: int) -> None:
-        """Release the pages beyond ``new_len`` (rollback / partial free)."""
+        """Drop the slot's references beyond ``new_len`` (rollback /
+        partial free).  A page another slot or the prefix cache still
+        references survives; exclusive pages return to the free list."""
         cur = int(self.lens[slot])
         if new_len > cur:
             raise ValueError(f"shrink: new_len {new_len} > current {cur}")
         keep = self.pages_of(new_len)
         for i in range(keep, self.pages_of(cur)):
-            self.free.append(int(self.table[slot, i]))
+            self._decref(int(self.table[slot, i]))
             self.table[slot, i] = self.n_pages
         self.lens[slot] = new_len
 
     def release(self, slot: int) -> None:
-        """Free every page the slot owns (request done / preempted)."""
+        """Drop every reference the slot holds (request done / preempted)."""
         self.shrink(slot, 0)
+
+    # -- external (prefix cache) references ---------------------------------------
+    def retain(self, page: int) -> None:
+        """Pin a live page from outside the block tables (prefix cache)."""
+        if not (0 <= page < self.n_pages) or self.ref[page] < 1:
+            raise ValueError(f"retain: page {page} is not live")
+        self.ref[page] += 1
+        self.external[page] += 1
+
+    def release_ref(self, page: int) -> None:
+        """Drop one external reference; frees the page at refcount zero."""
+        if self.external[page] < 1:
+            raise ValueError(f"release_ref: page {page} has no external ref")
+        self.external[page] -= 1
+        self._decref(int(page))
 
     # -- invariants (asserted by the property tests) -----------------------------
     def check_invariants(self) -> None:
-        owned = [int(p) for row in self.table for p in row if p < self.n_pages]
-        assert len(owned) == len(set(owned)), "page double-assigned"
-        assert not (set(owned) & set(self.free)), "page both owned and free"
-        assert len(owned) + len(self.free) == self.n_pages, "pages leaked"
+        table_refs = np.zeros((self.n_pages,), np.int64)
+        for row in self.table:
+            for p in row:
+                if p < self.n_pages:
+                    table_refs[p] += 1
+        live = self.ref > 0
+        assert (self.ref == table_refs + self.external).all(), \
+            "refcount conservation violated (ref != table + external)"
+        assert not (set(np.nonzero(live)[0].tolist()) & set(self.free)), \
+            "page both referenced and free"
+        assert len(self.free) == int((~live).sum()), \
+            "free list does not match zero-ref pages"
+        assert len(set(self.free)) == len(self.free), "free list duplicates"
         for s in range(self.n_slots):
             assert self.pages_of(int(self.lens[s])) == int(
                 (self.table[s] < self.n_pages).sum()), "table/len mismatch"
@@ -159,6 +263,14 @@ class KVPool:
         # a position-indexed (full-attention / MLA) run can address the
         # whole pool from one slot: that IS the new length bound
         self.capacity = n_pages * page_size
+        # ... but a plan whose every run is a ring (all-sliding-window)
+        # bounds nothing: rings reuse their pages forever, so sequence
+        # length is unlimited (the scheduler's ring-clamped page charge
+        # and the decode kernels' pos % R addressing both already handle
+        # arbitrary positions)
+        self.length_bound = (self.capacity
+                             if any(r.window == 0 for r in plan)
+                             else (1 << 62))
         self.plan = plan
         self.pools: List[PagePool] = []
         self.caches: List[Any] = []
@@ -194,8 +306,10 @@ class KVPool:
     # -- capacity queries ---------------------------------------------------------
     def fits(self, total_len: int) -> bool:
         """Can the pool EVER hold a request of ``total_len`` tokens (prompt +
-        generation), assuming it runs alone?"""
-        if total_len > self.capacity:
+        generation), assuming it runs alone?  Position-indexed runs bound
+        length by pool span; an all-ring plan bounds nothing (pages_of is
+        ring-clamped, so the per-run page check is what binds)."""
+        if total_len > self.length_bound:
             return False
         return all(p.pages_of(total_len) <= p.n_pages for p in self.pools)
 
@@ -232,6 +346,29 @@ class KVPool:
             room = cov if room is None else min(room, cov)
         return self.capacity if room is None else max(room, 0)
 
+    # -- prefix-sharing queries ----------------------------------------------------
+    def shareable_capacity(self) -> int:
+        """Longest prefix (tokens) whose pages are position-pure in EVERY
+        run: up to the narrowest ring span, logical page ``i`` is table row
+        ``i`` for all runs, so one per-run page list describes the prefix.
+        Beyond a run's ring span the ring has wrapped and its pages mix
+        positions — those are never shared."""
+        return min(p.capacity for p in self.pools)
+
+    def widest_capacity(self) -> int:
+        """Logical span of the widest run — the scheduler's conservative
+        page-charge basis (see ``PhaseScheduler.plan_tick``)."""
+        return max(p.capacity for p in self.pools)
+
+    def prefix_pages(self, slot: int, n_tokens: int) -> List[List[int]]:
+        """Per-run physical pages backing the slot's first ``n_tokens``
+        tokens (``n_tokens`` page-aligned, within ``shareable_capacity``)."""
+        if n_tokens % self.page_size or n_tokens > self.shareable_capacity():
+            raise ValueError(f"prefix of {n_tokens} tokens is not "
+                             "page-aligned/shareable")
+        n = n_tokens // self.page_size
+        return [[int(q) for q in p.table[slot, :n]] for p in self.pools]
+
     # -- mutations ---------------------------------------------------------------
     def grow(self, slot: int, new_len: int) -> bool:
         """Grow ``slot`` to ``new_len`` logical tokens in EVERY run's pool —
@@ -246,9 +383,67 @@ class KVPool:
             done.append(p)
         return True
 
+    def attach(self, slot: int, pages: Sequence[Sequence[int]],
+               new_len: int) -> None:
+        """Point an empty slot at cached prefix pages (one page list per
+        run) — shared, refcounted, no allocation.  ``new_len`` must be
+        page-aligned and within ``shareable_capacity``."""
+        if new_len % self.page_size or new_len > self.shareable_capacity():
+            raise ValueError(f"attach of {new_len} tokens is not "
+                             "page-aligned/shareable")
+        for p, pp in zip(self.pools, pages):
+            p.attach(slot, pp, new_len)
+
+    def cow_deficit(self, slot: int, start: int, end: int) -> int:
+        """Free pages still missing before ``ensure_writable(slot, start,
+        end)`` could supply every COW copy target (max across runs; 0 when
+        it would succeed right now)."""
+        deficit = 0
+        for p in self.pools:
+            need = sum(1 for row in p.rows_touched(start, end)
+                       if int(p.table[slot, row]) < p.n_pages
+                       and p.is_shared(int(p.table[slot, row])))
+            deficit = max(deficit, need - p.free_pages())
+        return max(deficit, 0)
+
+    def ensure_writable(self, slot: int, start: int, end: int
+                        ) -> Optional[List[tuple]]:
+        """Copy-on-write every SHARED page a write to logical positions
+        [start, end) of ``slot`` would dirty, across all runs.  Returns
+        [(run, old_page, new_page)] — the caller must mirror each entry
+        with a device page copy BEFORE launching the write — or None,
+        state unchanged, if some run's free list cannot supply its copy
+        targets (the caller evicts/preempts and retries)."""
+        planned: List[tuple] = []                 # (run, pool, row)
+        for r, p in enumerate(self.pools):
+            rows = [row for row in p.rows_touched(start, end)
+                    if int(p.table[slot, row]) < p.n_pages
+                    and p.is_shared(int(p.table[slot, row]))]
+            if len(rows) > p.free_pages():
+                return None                       # nothing mutated yet
+            planned.extend((r, p, row) for row in rows)
+        copies: List[tuple] = []
+        for r, p, row in planned:
+            moved = p.cow(slot, row)
+            assert moved is not None
+            copies.append((r, *moved))
+        return copies
+
+    def shrink(self, slot: int, new_len: int) -> None:
+        """Drop every run's references beyond ``new_len`` (rollback)."""
+        for p in self.pools:
+            p.shrink(slot, new_len)
+
     def release(self, slot: int) -> None:
         for p in self.pools:
             p.release(slot)
+
+    # -- external (prefix cache) references ---------------------------------------
+    def retain(self, run: int, page: int) -> None:
+        self.pools[run].retain(page)
+
+    def release_ref(self, run: int, page: int) -> None:
+        self.pools[run].release_ref(page)
 
     # -- device-facing views --------------------------------------------------------
     def block_tables(self, active: Optional[np.ndarray] = None) -> List[Any]:

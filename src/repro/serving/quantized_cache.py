@@ -16,7 +16,7 @@ Scales are per-token so a ring-buffer / scatter update stays one-slot local.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp

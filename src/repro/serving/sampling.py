@@ -32,8 +32,13 @@ def sample_tokens(logits, *, greedy: bool = True, temperature: float = 1.0,
     scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
     if top_k and top_k > 0:
         k = min(int(top_k), scaled.shape[-1])   # clamp: top_k may exceed V
-        kth = jnp.sort(scaled, axis=-1)[..., -k][..., None]
-        scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+        # lax.top_k is O(V log k) vs a full sort's O(V log V), and its
+        # index set is exactly k wide — scattering the kept values into a
+        # NEG_INF field keeps ties at the k-th value within the k-candidate
+        # budget (a `scaled < kth` mask would admit every tied logit)
+        vals, idx = jax.lax.top_k(scaled, k)
+        scaled = jnp.put_along_axis(jnp.full_like(scaled, NEG_INF), idx,
+                                    vals, axis=-1, inplace=False)
     flat = scaled.reshape(-1, scaled.shape[-1])
     toks = jax.random.categorical(key, flat, axis=-1)
     return toks.reshape(scaled.shape[:-1]).astype(jnp.int32)

@@ -35,6 +35,19 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 
+def pages_for(length: int, page_size: int, capacity: int) -> int:
+    """Physical pages holding a sequence of ``length`` tokens, ring-clamped
+    to ``capacity`` logical entries.
+
+    Lives here (pure Python, no jax) so both the scheduler's token-level
+    admission and ``kv_pool.PagePool``'s accounting share ONE definition —
+    the two diverging is exactly the sliding-window mis-charge bug this
+    module used to have (an unclamped ``ceil(cur_len / page_size)`` charged
+    ring runs pages they reuse forever).
+    """
+    return -(-min(max(length, 0), capacity) // page_size)
+
+
 @dataclass(frozen=True)
 class PhaseAwareConfig:
     strategy: str = "halo"             # halo | cent | attacc
@@ -87,7 +100,8 @@ class PhaseScheduler:
 
     def plan_tick(self, waiting: Sequence[tuple], decoding: List[int], *,
                   free_pages: Optional[int] = None,
-                  page_size: int = 0) -> TickPlan:
+                  page_size: int = 0,
+                  capacity: Optional[int] = None) -> TickPlan:
         """waiting: [(req_id, remaining_prompt_tokens[, chunkable[,
         cur_len]])]; decoding: [req_id].
 
@@ -106,6 +120,18 @@ class PhaseScheduler:
         crosses into it).  The engine reserves this tick's decode-growth
         pages before calling, so prefill can never starve decode of its
         one-token writes.
+
+        ``capacity`` is the logical span of the pool's WIDEST run (the
+        engine passes ``max(p.capacity for p in pools)``): page charges are
+        ring-clamped with the same ``pages_for`` rule ``PagePool`` uses, so
+        a sliding-window request whose ``cur_len`` exceeds its ring span is
+        charged ZERO fresh pages for growth (the ring reuses its pages
+        forever).  Charging by the widest run is a safe upper bound for
+        every narrower run — page growth is monotone in capacity — while
+        ``free_pages`` is already the min across runs.  Tokens already in
+        the arena at admission (a prefix-cache hit attaches shared pages
+        before the request ever reaches this planner) never appear in
+        ``remaining``, so cached work is admitted at zero token/page cost.
         """
         pg, dg = self.groups_for()
         plan = TickPlan(prefill_group=pg, decode_group=dg)
@@ -130,9 +156,18 @@ class PhaseScheduler:
                 # to prevent.
                 take = remaining if budget > 0 else 0
             if pages_left is not None and page_size > 0 and take > 0:
-                # tokens coverable = tail of the current page + free pages
-                used = -(-cur_len // page_size)          # pages already held
-                coverable = (used + pages_left) * page_size - cur_len
+                cap = capacity if capacity is not None else cur_len + take
+                used = pages_for(cur_len, page_size, cap)
+                width = pages_for(cap, page_size, cap)
+                if used + pages_left >= width:
+                    # the free pages reach the run's full width: the ring
+                    # (or the request's final pages) covers ANY growth
+                    coverable = take
+                else:
+                    # tokens coverable = tail of the current (clamped) page
+                    # + free pages
+                    clamped = min(max(cur_len, 0), cap)
+                    coverable = (used + pages_left) * page_size - clamped
                 if not chunkable and coverable < take:
                     take = 0                             # atomic: all or none
                 take = min(take, coverable)
@@ -142,8 +177,9 @@ class PhaseScheduler:
             plan.prefill_chunks.append((rid, take))
             budget -= take
             if pages_left is not None and page_size > 0:
-                pages_left -= (-(-(cur_len + take) // page_size)
-                               - -(-cur_len // page_size))
+                cap = capacity if capacity is not None else cur_len + take
+                pages_left -= (pages_for(cur_len + take, page_size, cap)
+                               - pages_for(cur_len, page_size, cap))
             if take >= remaining:
                 free_slots -= 1        # request becomes a decode occupant
         return plan

@@ -3,12 +3,10 @@ mesh (512 forced host devices) in a subprocess, assert the roofline row is
 sane.  Slowish (~1 min) but this is the deliverable path — it must not rot.
 """
 
-import json
 import os
 import subprocess
 import sys
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -7,17 +7,10 @@ exists).
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo, parse_stack_tables
-from repro.launch.roofline import (
-    COLLECTIVE_WEIGHT,
-    PEAK_FLOPS,
-    Roofline,
-    model_flops_for,
-    parse_collectives,
-)
+from repro.launch.roofline import Roofline, model_flops_for, parse_collectives
 
 
 def compile_text(fn, *args):

@@ -104,6 +104,98 @@ def test_kv_pool_accounting():
     assert pool.resident_bytes() == 0 and pool.free_pages() == 8
 
 
+# ---------------------------------------------------------------------------
+# refcounts, sharing, copy-on-write
+# ---------------------------------------------------------------------------
+
+
+def test_attach_shares_pages_and_refcounts():
+    p = PagePool(n_pages=8, page_size=4, n_slots=3, capacity=32)
+    assert p.grow(0, 8)                  # 2 pages
+    pages = [int(x) for x in p.table[0, :2]]
+    p.attach(1, pages, 8)                # no allocation, refcount++
+    assert p.used_pages() == 2           # still 2 distinct pages
+    assert all(p.is_shared(q) for q in pages)
+    p.check_invariants()
+    # releasing one sharer keeps the pages live for the other
+    p.release(0)
+    assert p.used_pages() == 2 and not any(p.is_shared(q) for q in pages)
+    p.release(1)
+    assert p.free_pages() == 8
+    p.check_invariants()
+
+
+def test_attach_validates():
+    p = PagePool(n_pages=8, page_size=4, n_slots=2, capacity=32)
+    assert p.grow(0, 8)
+    pages = [int(x) for x in p.table[0, :2]]
+    with pytest.raises(ValueError):      # wrong page count for the length
+        p.attach(1, pages[:1], 8)
+    with pytest.raises(ValueError):      # dead page
+        p.attach(1, [7, 7], 8)
+    assert p.grow(1, 2)
+    with pytest.raises(ValueError):      # slot not empty
+        p.attach(1, pages, 8)
+
+
+def test_cow_moves_writer_never_frees_shared():
+    p = PagePool(n_pages=8, page_size=4, n_slots=2, capacity=32)
+    assert p.grow(0, 6)
+    pages = [int(x) for x in p.table[0, :2]]
+    p.attach(1, pages, 6)                # tail page shared mid-fill
+    moved = p.cow(1, 1)                  # writer 1 extends the tail
+    assert moved is not None
+    old, new = moved
+    assert old == pages[1] and new != old
+    assert int(p.table[1, 1]) == new and int(p.table[0, 1]) == old
+    assert not p.is_shared(old) and not p.is_shared(new)   # aliasing gone
+    assert p.cow(1, 1) is None           # second write: already exclusive
+    p.check_invariants()
+
+
+def test_cow_requires_free_page():
+    p = PagePool(n_pages=2, page_size=4, n_slots=2, capacity=8)
+    assert p.grow(0, 8)                  # pool full
+    pages = [int(x) for x in p.table[0, :2]]
+    p.attach(1, pages, 8)                # shared, and no free copy target
+    with pytest.raises(IndexError):
+        p.cow(1, 0)
+    p.check_invariants()
+
+
+def test_external_refs_keep_pages_past_release():
+    """A cache-retained page survives its publisher's release and frees
+    only when the external ref drops too (no free-while-referenced)."""
+    p = PagePool(n_pages=4, page_size=4, n_slots=1, capacity=16)
+    assert p.grow(0, 8)
+    pages = [int(x) for x in p.table[0, :2]]
+    for q in pages:
+        p.retain(q)
+    p.release(0)
+    assert p.free_pages() == 2           # retained pages did NOT free
+    p.check_invariants()
+    for q in pages:
+        p.release_ref(q)
+    assert p.free_pages() == 4
+    p.check_invariants()
+    with pytest.raises(ValueError):
+        p.release_ref(pages[0])          # no external ref left
+
+
+def test_kv_pool_ensure_writable_is_atomic():
+    """If any run lacks COW copy targets, ensure_writable mutates NOTHING
+    (the caller retries after evicting)."""
+    cfg = tiny_cfg()
+    pool = KVPool(cfg, n_slots=2, n_pages=4, page_size=4)
+    assert pool.grow(0, 16)              # pool full
+    pool.attach(1, pool.prefix_pages(0, 16), 16)   # all shared, none free
+    before = [p.table.copy() for p in pool.pools]
+    assert pool.ensure_writable(1, 0, 4) is None
+    for p, t in zip(pool.pools, before):
+        assert (p.table == t).all()
+        p.check_invariants()
+
+
 try:
     import hypothesis  # noqa: F401
     HAVE_HYPOTHESIS = True
@@ -118,26 +210,114 @@ if HAVE_HYPOTHESIS:
         n_pages=st.integers(2, 16),
         page_size=st.integers(1, 8),
         ops=st.lists(
-            st.tuples(st.integers(0, 2),       # 0 grow, 1 release, 2 shrink
+            st.tuples(st.integers(0, 5),       # 0 grow, 1 release, 2 shrink,
+                                               # 3 attach, 4 retain+release_ref,
+                                               # 5 cow
                       st.integers(0, 3),       # slot
-                      st.integers(0, 40)),     # length delta / target
+                      st.integers(0, 40)),     # length delta / target / row
             max_size=60),
     )
     def test_page_pool_interleavings_conserve_pages(n_pages, page_size, ops):
-        """ANY interleaving of grow/release/shrink (alloc, retire, preempt)
-        never double-assigns a page and conserves n_pages."""
+        """ANY interleaving of grow/release/shrink/attach/retain/cow
+        (alloc, retire, preempt, prefix share, cache pin, write fault)
+        conserves refcounts, never frees a referenced page, and never
+        leaves a COW'd writer aliasing a shared page."""
         pool = PagePool(n_pages, page_size, n_slots=4,
                         capacity=n_pages * page_size)
+        external: list = []              # pages we hold cache refs on
         for kind, slot, arg in ops:
             if kind == 0:
                 pool.grow(slot, int(pool.lens[slot]) + arg)
             elif kind == 1:
                 pool.release(slot)
-            else:
+            elif kind == 2:
                 pool.shrink(slot, min(int(pool.lens[slot]), arg))
+            elif kind == 3:
+                src = arg % pool.n_slots
+                n = int((pool.table[src] < pool.n_pages).sum())
+                if src != slot and int(pool.lens[slot]) == 0 and n:
+                    take_tok = min(int(pool.lens[src]), n * page_size)
+                    take = pool.pages_of(take_tok)
+                    pool.attach(slot, [int(q) for q in pool.table[src, :take]],
+                                take_tok)
+            elif kind == 4:
+                if external and arg % 2:
+                    pool.release_ref(external.pop())
+                else:
+                    live = np.nonzero(pool.ref > 0)[0]
+                    if len(live):
+                        q = int(live[arg % len(live)])
+                        pool.retain(q)
+                        external.append(q)
+            else:
+                rows = np.nonzero(pool.table[slot] < pool.n_pages)[0]
+                if len(rows):
+                    row = int(rows[arg % len(rows)])
+                    try:
+                        moved = pool.cow(slot, row)
+                    except IndexError:   # no copy target: state unchanged
+                        moved = None
+                    if moved is not None:
+                        old, new = moved
+                        # the writer aliases nobody and owns the new page
+                        assert int(pool.table[slot, row]) == new
+                        assert pool.ref[new] == 1
             pool.check_invariants()
-        assert (sum(p2.used_pages() for p2 in [pool])
-                + pool.free_pages()) == n_pages
+        assert pool.used_pages() + pool.free_pages() == n_pages
+
+    @settings(max_examples=80, deadline=None)
+    @given(
+        n_pages=st.integers(1, 24),
+        page_size=st.integers(1, 8),
+        window=st.integers(0, 64),       # 0: full attention
+        budget=st.integers(1, 256),
+        chunk=st.integers(1, 128),
+        waiting=st.lists(st.tuples(st.integers(0, 200),   # remaining
+                                   st.integers(0, 200)),  # cur_len
+                         min_size=1, max_size=4),
+        decoding=st.integers(0, 3),
+    )
+    def test_plan_tick_never_exceeds_budget_or_pool(n_pages, page_size,
+                                                    window, budget, chunk,
+                                                    waiting, decoding):
+        """Under ARBITRARY (waiting, decoding, pool, window) the planned
+        chunks respect the token budget AND every chunk's pages can
+        actually be granted by a real PagePool seeded with the same
+        state — the scheduler's ring-clamped charge (pages_for) and the
+        pool's are the same rule."""
+        from repro.serving.scheduler import pages_for
+        capacity = min(window, n_pages * page_size) if window > 0 \
+            else n_pages * page_size
+        pool = PagePool(n_pages, page_size, n_slots=len(waiting),
+                        capacity=capacity)
+        entries = []
+        for i, (remaining, cur_len) in enumerate(waiting):
+            if not pool.grow(i, cur_len):
+                return                   # seed state not realizable
+            entries.append((i, remaining, True, cur_len))
+        s = PhaseScheduler(PhaseAwareConfig(
+            "halo", max_decode_batch=4, max_prefill_tokens=budget,
+            prefill_chunk=chunk))
+        plan = s.plan_tick(entries, list(range(decoding)),
+                           free_pages=pool.free_pages(),
+                           page_size=page_size, capacity=capacity)
+        assert plan.prefill_tokens <= budget
+        by_id = {e[0]: e for e in entries}
+        for rid, take in plan.prefill_chunks:
+            _, remaining, _, cur_len = by_id[rid]
+            assert 0 < take <= remaining
+            assert take <= chunk
+            # the real pool grants EVERY planned chunk, in plan order
+            assert pool.grow(rid, cur_len + take), (
+                f"planned chunk ({rid}, {take}) exceeds what the pool "
+                f"can grant (cur_len={cur_len}, "
+                f"free={pool.free_pages()})")
+            pool.check_invariants()
+        # cross-check the scheduler's page arithmetic directly
+        for rid, take in plan.prefill_chunks:
+            cur = by_id[rid][3]
+            assert (pages_for(cur + take, page_size, capacity)
+                    - pages_for(cur, page_size, capacity)) >= 0
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +353,55 @@ def test_scheduler_page_accounting_across_requests():
     plan = s.plan_tick(waiting=[(1, 5, True, 0), (2, 5, True, 0)],
                        decoding=[], free_pages=1, page_size=8)
     assert plan.prefill_chunks == [(1, 5)]   # req 2 has no page left
+
+
+def test_scheduler_ring_clamp_matches_pool():
+    """Regression (sliding-window admission): a request whose arena length
+    exceeds the ring span holds ceil(R / P) pages FOREVER — growth costs
+    zero fresh pages.  The unclamped ``ceil(cur_len / page_size)`` charge
+    used to diverge from ``PagePool.pages_of``'s ring clamp and refuse
+    (or page-charge) work the pool grants for free."""
+    s = PhaseScheduler(PhaseAwareConfig(
+        "halo", max_decode_batch=4, max_prefill_tokens=1000,
+        prefill_chunk=600))
+    # ring R = 16, P = 8: a slot at cur_len 40 has long since wrapped
+    plan = s.plan_tick(waiting=[(1, 100, True, 40)], decoding=[],
+                       free_pages=0, page_size=8, capacity=16)
+    assert plan.prefill_chunks == [(1, 100)]   # ring reuse: zero pages
+    # the real pool agrees: grow costs nothing once wrapped
+    pool = PagePool(n_pages=2, page_size=8, n_slots=1, capacity=16)
+    assert pool.grow(0, 40) and pool.free_pages() == 0
+    assert pool.grow(0, 140)
+    pool.check_invariants()
+    # unclamped (capacity omitted = legacy behavior): mis-charges 5 pages
+    # and admits nothing — exactly the bug the clamp fixes
+    legacy = s.plan_tick(waiting=[(1, 100, True, 40)], decoding=[],
+                         free_pages=0, page_size=8)
+    assert legacy.prefill_chunks == []
+
+
+def test_scheduler_ring_clamp_engine_end_to_end():
+    """A sliding-window config whose prompt exceeds the window serves
+    through an exactly-ring-sized pool: without the clamp the planner
+    starves (it charges pages the ring never needs)."""
+    cfg = tiny_cfg("gemma3-1b")          # window 16
+    window = cfg.attn.sliding_window
+    # force an ALL-sliding-window plan so the ring is the binding run
+    # (local_global_ratio=0 + sliding_window>0 -> every layer local);
+    # rename: cached_params keys on cfg.name
+    cfg = dataclasses.replace(
+        cfg, name="gemma3-1b-all-local",
+        attn=dataclasses.replace(cfg.attn, local_global_ratio=0))
+    from repro.models.transformer import build_plan
+    assert all(r.window > 0 for r in build_plan(cfg))
+    eng = make_engine(cfg, max_batch=1, paged=True, page_size=8,
+                      n_pages=window // 8, prefill_chunk=8,
+                      max_prefill_tokens=8)
+    r = eng.submit(prompts(cfg, 1, 3 * window, seed=3)[0],
+                   max_new_tokens=4)     # prompt far beyond the ring
+    eng.run_until_drained(max_ticks=200)
+    assert r.state == RequestState.DONE
+    assert len(r.generated) == 4
 
 
 # ---------------------------------------------------------------------------

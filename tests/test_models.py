@@ -14,9 +14,7 @@ from repro.configs.base import get_config, list_archs
 from repro.models.transformer import (
     build_plan,
     decode_step,
-    forward,
     forward_train,
-    init_cache,
     init_params,
     pad_cache,
     prefill,

@@ -1,0 +1,277 @@
+"""Shared-prefix KV reuse: radix cache indexing, refcounted copy-on-write
+page sharing, cache-before-preemption eviction order, and the acceptance
+bar — greedy token streams bit-identical with the cache on vs off (the
+cache is a pure optimization) across GQA / sliding-window / MLA plans."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.transformer import init_params
+from repro.serving.engine import RequestState, ServeConfig, ServingEngine
+from repro.serving.kv_pool import KVPool
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import PhaseAwareConfig
+
+
+def tiny_cfg(name="qwen3-1.7b"):
+    return dataclasses.replace(get_config(name).reduced(), dtype="float32")
+
+
+_PARAMS = {}
+
+
+def cached_params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[cfg.name]
+
+
+def make_engine(cfg, max_batch=2, *, page_size=8, n_pages=24,
+                prefill_chunk=16, max_prefill_tokens=32,
+                prefix_cache=False):
+    sc = ServeConfig(max_batch=max_batch, max_len=64,
+                     phase=PhaseAwareConfig(max_decode_batch=max_batch,
+                                            prefill_chunk=prefill_chunk,
+                                            max_prefill_tokens=max_prefill_tokens),
+                     paged=True, page_size=page_size, n_pages=n_pages,
+                     prefix_cache=prefix_cache)
+    return ServingEngine(cfg, cached_params(cfg), sc)
+
+
+def shared_prefix_prompts(cfg, n, head_len, tail_len, seed=0):
+    """n prompts opening with the same head (the system-prompt pattern)."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, (head_len,), dtype=np.int32)
+    out = []
+    for _ in range(n):
+        tail = rng.integers(0, cfg.vocab_size, (tail_len,), dtype=np.int32)
+        out.append(np.concatenate([head, tail]) if tail_len else head.copy())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# radix index over a real pool (host logic, no model)
+# ---------------------------------------------------------------------------
+
+
+def _pool_and_cache(n_pages=16, page_size=4):
+    cfg = tiny_cfg()
+    pool = KVPool(cfg, n_slots=4, n_pages=n_pages, page_size=page_size)
+    return pool, PrefixCache(page_size, pool.shareable_capacity())
+
+
+def test_radix_match_insert_dedupe():
+    pool, pc = _pool_and_cache()
+    toks = np.arange(12, dtype=np.int32)
+    assert pc.match(toks) == (0, [])
+    assert pool.grow(0, 12)
+    assert pc.insert(toks, pool, 0) == 3          # 3 blocks of 4
+    # full match (no cap): all 3 blocks
+    matched, pages = pc.match(toks)
+    assert matched == 12
+    assert pages == pool.prefix_pages(0, 12)
+    # partial prompt matches its whole blocks only
+    matched, pages = pc.match(toks[:7])
+    assert matched == 4 and len(pages[0]) == 1
+    # a diverging block stops the walk
+    other = toks.copy()
+    other[5] = 99
+    assert pc.match(other)[0] == 4
+    # the max_tokens cap keeps >= 1 token to prefill
+    assert pc.match(toks, max_tokens=11)[0] == 8
+    # re-insert is a no-op (existing pages stay canonical)
+    assert pc.insert(toks, pool, 0) == 0
+    for p in pool.pools:
+        p.check_invariants()
+
+
+def test_cached_pages_survive_publisher_release():
+    """Cache pins outlive the publishing request; eviction drops them and
+    the pages return to the free list (no free-while-referenced)."""
+    pool, pc = _pool_and_cache()
+    toks = np.arange(8, dtype=np.int32)
+    assert pool.grow(0, 8)
+    pc.insert(toks, pool, 0)
+    pool.release(0)                               # publisher retires
+    assert pool.free_pages() < pool.n_pages       # cache still pins 2 pages
+    matched, pages = pc.match(toks[:8])
+    assert matched == 8                           # still matchable
+    pool.attach(1, pages, 8)                      # new request shares them
+    # pinned blocks are NOT evictable (freeing nothing, losing hits)...
+    assert pc.evict(pool, 99) == 0
+    assert len(pc) == 2
+    # ...but flush drops them unconditionally; slot 1 then holds the
+    # last references and the pages free with its release
+    assert pc.flush(pool) == 0
+    assert pool.free_pages() < pool.n_pages
+    pool.release(1)
+    assert pool.free_pages() == pool.n_pages
+    for p in pool.pools:
+        p.check_invariants()
+
+
+def test_lru_evicts_leaf_first_oldest_first():
+    pool, pc = _pool_and_cache()
+    a = np.arange(8, dtype=np.int32)
+    b = np.concatenate([a[:4], np.full(4, 77, np.int32)])
+    assert pool.grow(0, 8) and pool.grow(1, 8)
+    pc.insert(a, pool, 0)                         # chain: blk0 -> a1
+    pc.insert(b, pool, 1)                         # shared blk0 -> b1
+    pool.release(0)                               # publishers retire: only
+    pool.release(1)                               # the cache pins the pages
+    pc.match(a)                                   # a's chain is MRU
+    n = len(pc)
+    assert pc.evict(pool, 1) == 1                 # drops ONE leaf: b's tip
+    assert len(pc) == n - 1
+    assert pc.match(b)[0] == 4                    # b lost its tip
+    assert pc.match(a)[0] == 8                    # a's chain intact
+    pc.flush(pool)
+    assert pool.free_pages() == pool.n_pages
+
+
+def test_pinned_blocks_survive_transient_exhaustion():
+    """Regression: when every cached page is pinned by live slots, a page
+    shortage must NOT flush the cache block by block (each eviction frees
+    nothing) — the blocks stay and serve hits once pressure passes."""
+    pool, pc = _pool_and_cache(n_pages=4, page_size=4)
+    toks = np.arange(16, dtype=np.int32)
+    assert pool.grow(0, 16)                       # slot 0 holds the pool
+    pc.insert(toks, pool, 0)                      # every block pinned
+    assert pc.evict(pool, 1) == 0                 # nothing freeable
+    assert len(pc) == 4                           # cache intact, hits live
+    assert pc.match(toks)[0] == 16
+    for p in pool.pools:
+        p.check_invariants()
+
+
+def test_prefix_cache_requires_paged():
+    cfg = tiny_cfg()
+    sc = ServeConfig(paged=False, prefix_cache=True)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, cached_params(cfg), sc)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: identity cache-on vs cache-off, with real reuse happening
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,head,tail", [
+    ("qwen3-1.7b", 24, 8),        # GQA
+    ("gemma3-1b", 16, 6),         # sliding-window ring (COW on wrap)
+    ("deepseek-v2-236b", 24, 6),  # MLA latent pages
+])
+def test_greedy_identity_cache_on_vs_off(arch, head, tail):
+    """Greedy streams are bit-identical with the prefix cache on vs off,
+    while the cache demonstrably works: hit rate > 0 and fewer prefill
+    tokens executed on the same shared-system-prompt workload."""
+    cfg = tiny_cfg(arch)
+    ps = ([shared_prefix_prompts(cfg, 1, head, 0, seed=3)[0]]
+          + shared_prefix_prompts(cfg, 3, head, tail, seed=3))
+    outs, engines = {}, {}
+    for pc in (False, True):
+        eng = make_engine(cfg, prefix_cache=pc)
+        rs = [eng.submit(p.copy(), max_new_tokens=8) for p in ps]
+        eng.run_until_drained()
+        outs[pc] = [r.generated for r in rs]
+        engines[pc] = eng
+    assert outs[False] == outs[True]
+    s = engines[True].prefix_stats()
+    assert s["hit_rate"] > 0
+    assert s["hit_tokens"] > 0
+    assert (engines[True].prefill_tokens_executed
+            < engines[False].prefill_tokens_executed)
+    # the pool is clean at drain: cached pages are the only residents
+    pool = engines[True].pool
+    for p in pool.pools:
+        p.check_invariants()
+        assert (p.ref[p.ref > 0] == p.external[p.ref > 0]).all(), \
+            "a drained engine's only live refs are the cache's"
+
+
+def test_cow_isolates_divergent_tails():
+    """Two requests share a page-aligned prefix then diverge inside the
+    next page; COW must keep the writers isolated (same outputs as the
+    cache-off run) while the shared prefix pages stay deduplicated."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(9)
+    head = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+    ps = [np.concatenate([head, np.full((5,), t, np.int32)])
+          for t in (7, 11, 13)]
+    outs = {}
+    for pc in (False, True):
+        eng = make_engine(cfg, max_batch=1, prefix_cache=pc)  # sequential
+        rs = [eng.submit(p.copy(), max_new_tokens=6) for p in ps]
+        eng.run_until_drained()
+        outs[pc] = [r.generated for r in rs]
+        if pc:
+            assert eng.prefix_stats()["hit_tokens"] >= 32  # 2 hits x 16
+    assert outs[False] == outs[True]
+
+
+def test_resumed_request_rematches_cache():
+    """Recompute-on-resume goes through admission again, so a preempted
+    request re-attaches the cached prefix instead of recomputing it."""
+    cfg = tiny_cfg()
+    ps = shared_prefix_prompts(cfg, 3, 16, 4, seed=5)
+    solo = []
+    for p in ps:
+        eng = make_engine(cfg, max_batch=1, n_pages=24)
+        r = eng.submit(p.copy(), max_new_tokens=10)
+        eng.run_until_drained()
+        solo.append(r.generated)
+    # tight pool forces preemption mid-flight with the cache on
+    eng = make_engine(cfg, max_batch=3, n_pages=8, prefix_cache=True)
+    rs = [eng.submit(p.copy(), max_new_tokens=10) for p in ps]
+    eng.run_until_drained(max_ticks=500)
+    assert all(r.state == RequestState.DONE for r in rs)
+    assert [r.generated for r in rs] == solo
+    assert eng.preemptions > 0
+
+
+# ---------------------------------------------------------------------------
+# eviction order: cached pages yield before live requests are preempted
+# ---------------------------------------------------------------------------
+
+
+def test_cache_evicted_before_preemption():
+    """A pool mostly squatted by cached pages must serve fresh no-reuse
+    traffic by EVICTING the cache, not by preempting live requests."""
+    cfg = tiny_cfg()
+    eng = make_engine(cfg, max_batch=1, n_pages=8, prefix_cache=True)
+    rng = np.random.default_rng(11)
+    # publisher fills the cache (4 pages of prefix + pool churn)
+    a = eng.submit(rng.integers(0, cfg.vocab_size, (32,), np.int32),
+                   max_new_tokens=2)
+    eng.run_until_drained()
+    assert a.state == RequestState.DONE
+    assert eng.prefix.cached_pages() > 0
+    # an unrelated prompt needs more pages than the free list has left
+    b = eng.submit(rng.integers(0, cfg.vocab_size, (40,), np.int32),
+                   max_new_tokens=2)
+    eng.run_until_drained(max_ticks=200)
+    assert b.state == RequestState.DONE
+    assert eng.cache_evicted_pages > 0           # the cache yielded
+    assert eng.preemptions == 0                  # no live request did
+    for p in eng.pool.pools:
+        p.check_invariants()
+
+
+def test_ring_wrap_gates_publication():
+    """A sliding-window request whose prefilled length wrapped the ring
+    publishes NOTHING (its early rows hold late positions); an unwrapped
+    one publishes normally."""
+    cfg = tiny_cfg("gemma3-1b")                  # window 16
+    long_eng = make_engine(cfg, prefix_cache=True)
+    p = shared_prefix_prompts(cfg, 1, 24, 0, seed=7)[0]   # 24 > ring 16
+    long_eng.submit(p, max_new_tokens=2)
+    long_eng.run_until_drained()
+    assert long_eng.prefix.stats()["inserted_blocks"] == 0
+    short_eng = make_engine(cfg, prefix_cache=True)
+    short_eng.submit(p[:14], max_new_tokens=2)   # 14 + 2 <= 16: no wrap
+    short_eng.run_until_drained()
+    assert short_eng.prefix.stats()["inserted_blocks"] == 1

@@ -1,6 +1,5 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 
-import math
 
 import jax
 import jax.numpy as jnp

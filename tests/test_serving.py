@@ -9,8 +9,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
-from repro.models.transformer import decode_step, init_cache, init_params, prefill
-from repro.serving.engine import Request, RequestState, ServeConfig, ServingEngine
+from repro.models.transformer import decode_step, init_params, prefill
+from repro.serving.engine import RequestState, ServeConfig, ServingEngine
 from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler
 
 
@@ -280,6 +280,58 @@ def test_prefill_tick_batches_multiple_requests():
     assert len(eng.tick_log) == 1
     assert len(eng.tick_log[0].prefill_reqs) == 3
     assert eng.tick_log[0].prefill_tokens == 30
+
+
+# ---------------------------------------------------------------------------
+# device-side sampling (serving/sampling.py)
+# ---------------------------------------------------------------------------
+
+
+def test_top_k_ties_respect_candidate_budget():
+    """Regression: with ties AT the k-th value, the old ``scaled < kth``
+    mask kept every tied logit (more than k candidates).  lax.top_k's
+    index set is exactly k wide — sampling must never leave it."""
+    from repro.serving.sampling import sample_tokens
+
+    # four-way tie at the top, k = 2: exactly 2 tokens may ever appear
+    logits = jnp.array([[5.0, 5.0, 5.0, 5.0, 1.0, 0.0]])
+    vals, idx = jax.lax.top_k(logits[0], 2)
+    allowed = set(np.asarray(idx).tolist())
+    seen = set()
+    for i in range(200):
+        t = sample_tokens(logits, greedy=False, temperature=1.0, top_k=2,
+                          key=jax.random.PRNGKey(i))
+        seen.add(int(t[0]))
+    assert seen <= allowed
+    assert len(seen) == 2                 # both survivors actually reachable
+
+
+def test_top_k_masks_low_logits_and_clamps():
+    from repro.serving.sampling import sample_tokens
+
+    logits = jnp.array([[0.0, 10.0, 9.0, -3.0]])
+    seen = {int(sample_tokens(logits, greedy=False, temperature=0.5,
+                              top_k=2, key=jax.random.PRNGKey(i))[0])
+            for i in range(100)}
+    assert seen <= {1, 2}                 # only the top-2 survive
+    # k > V clamps instead of crashing; greedy ignores k entirely
+    t = sample_tokens(logits, greedy=False, temperature=1.0, top_k=99,
+                      key=jax.random.PRNGKey(0))
+    assert 0 <= int(t[0]) < 4
+    assert int(sample_tokens(logits, greedy=True)[0]) == 1
+
+
+def test_top_k_batch_rows_independent():
+    """Each row's k-candidate set is its own (put_along_axis is per-row)."""
+    from repro.serving.sampling import sample_tokens
+
+    logits = jnp.array([[9.0, 8.0, 0.0, 0.0],
+                        [0.0, 0.0, 8.0, 9.0]])
+    for i in range(50):
+        a, b = np.asarray(sample_tokens(
+            logits, greedy=False, temperature=0.7, top_k=2,
+            key=jax.random.PRNGKey(i)))
+        assert int(a) in (0, 1) and int(b) in (2, 3)
 
 
 # ---------------------------------------------------------------------------

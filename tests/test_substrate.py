@@ -1,7 +1,6 @@
 """Substrate tests: optimizers, schedules, data pipeline, checkpointing,
 fault-tolerance logic, trainer restart equivalence."""
 
-import os
 
 import jax
 import jax.numpy as jnp
