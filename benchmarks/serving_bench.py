@@ -16,7 +16,12 @@ engine rather than the analytical model:
     opens with the same prompt head (the interactive-serving pattern
     HALO targets), and the radix cache turns the redundant prefill into
     a block-table attach: hit rate, prefill tokens skipped, and TTFT
-    vs the same stream with the cache off.
+    vs the same stream with the cache off;
+  * speculative decoding on a repetitive-suffix workload — the n-gram
+    and self-draft model drafters against the non-speculative baseline:
+    acceptance rate, tokens per decode tick, TPOT, with greedy token
+    identity asserted across all configurations (``--speculative``;
+    the multi-token decode path of docs/serving.md §Speculative).
 
 Also reports the per-tick decode wall time at max_batch=8 — the number
 device-side sampling improves (one host transfer per tick instead of one
@@ -54,7 +59,8 @@ def _cfg_params():
 def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
          prompt_len=24, requests=8, max_new=8, prefill_chunk=2048,
          max_prefill_tokens=8192, paged=False, page_size=8, n_pages=64,
-         prefix_cache=False, shared_prefix=0):
+         prefix_cache=False, shared_prefix=0, speculative=None,
+         repeat_suffix=0):
     from repro.serving.engine import ServeConfig, ServingEngine
     from repro.serving.scheduler import PhaseAwareConfig
 
@@ -64,7 +70,7 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
                          prefill_chunk=prefill_chunk,
                          max_prefill_tokens=max_prefill_tokens),
                      paged=paged, page_size=page_size, n_pages=n_pages,
-                     prefix_cache=prefix_cache)
+                     prefix_cache=prefix_cache, speculative=speculative)
     eng = ServingEngine(cfg, params, sc)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
@@ -73,6 +79,13 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
     for _ in range(requests):
         tail = rng.integers(0, cfg.vocab_size,
                             (prompt_len - len(shared),), dtype=np.int32)
+        if repeat_suffix > 0:
+            # repetitive-suffix workload (speculative decoding): the
+            # prompt ends with a short block tiled several times, the
+            # pattern prompt-lookup drafting feeds on
+            block = tail[:repeat_suffix]
+            reps = -(-len(tail) // repeat_suffix)
+            tail = np.tile(block, reps)[: len(tail)]
         eng.submit(np.concatenate([shared, tail]), max_new_tokens=max_new)
     done = eng.run_until_drained()
     wall = time.monotonic() - t0
@@ -211,8 +224,52 @@ def bench_prefix_cache() -> List[Row]:
     return rows
 
 
+def bench_speculative() -> List[Row]:
+    """Speculative decoding on a repetitive-suffix workload: spec off vs
+    the n-gram (prompt-lookup) drafter at two k, plus a self-draft model
+    drafter (same arch/seed — the acceptance-rate ceiling).  Greedy token
+    streams must be identical across every configuration (asserted);
+    what changes is acceptance rate, tokens per (request, decode-tick),
+    and TPOT — the multi-token decode lever HALO's CiD regime wants."""
+    from repro.serving.speculative import SpecConfig
+
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+    outs = {}
+    configs = [
+        ("spec_off", None),
+        ("ngram_k2", SpecConfig(k=2)),
+        ("ngram_k4", SpecConfig(k=4)),
+        ("model_k4", SpecConfig(k=4, drafter="model",
+                                draft_arch="qwen3-1.7b", draft_seed=0)),
+    ]
+    for label, spec in configs:
+        eng, done, wall = _run(cfg, params, max_batch=2, prompt_len=24,
+                               requests=4, max_new=40, prefill_chunk=16,
+                               max_prefill_tokens=32, paged=True,
+                               page_size=8, n_pages=64, speculative=spec,
+                               repeat_suffix=6)
+        outs[label] = [r.generated
+                       for r in sorted(done, key=lambda r: r.req_id)]
+        ss = eng.spec_stats()
+        pre = f"serve.spec.{label}"
+        rows.append((f"{pre}.tpot_p50_ms",
+                     float(np.median([r.tpot for r in done])) * 1e3,
+                     "ms", ""))
+        rows.append((f"{pre}.tokens_per_tick", ss["tokens_per_tick"],
+                     "tok", ""))
+        rows.append((f"{pre}.acceptance_rate", ss["acceptance_rate"],
+                     "frac", ""))
+        rows.append((f"{pre}.windows", ss["windows"], "count", ""))
+        rows.append((f"{pre}.ticks", float(eng.n_ticks), "count", ""))
+    for label, _ in configs[1:]:
+        assert outs[label] == outs["spec_off"], (
+            f"speculative decoding ({label}) changed greedy token streams")
+    return rows
+
+
 ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick,
-       bench_paged_vs_dense, bench_prefix_cache]
+       bench_paged_vs_dense, bench_prefix_cache, bench_speculative]
 
 
 def main(argv=None) -> int:
@@ -221,15 +278,39 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small paged-vs-dense sweep only (CI smoke)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative-decoding sweep only (with --quick: "
+                         "the CI leg, asserting acceptance rate > 0 and "
+                         "tokens/tick > 1 on top of token identity)")
     args = ap.parse_args(argv)
 
     print("name,value,unit,paper")
-    suites = [bench_paged_vs_dense, bench_prefix_cache] if args.quick else ALL
+    if args.speculative:
+        suites = [bench_speculative]
+    elif args.quick:
+        suites = [bench_paged_vs_dense, bench_prefix_cache]
+    else:
+        suites = ALL
     rows: List[Row] = []
     for fn in suites:
         rows.extend(fn())
     for name, value, unit, paper in rows:
         print(f"{name},{value:.6g},{unit},{paper}")
+    if args.speculative and args.quick:
+        vals = {n: v for n, v, _, _ in rows}
+        for label in ("ngram_k4", "model_k4"):
+            acc = vals[f"serve.spec.{label}.acceptance_rate"]
+            tpt = vals[f"serve.spec.{label}.tokens_per_tick"]
+            assert acc > 0, f"{label}: acceptance rate was 0"
+            assert tpt > 1, (
+                f"{label}: mean tokens/tick {tpt} <= 1 (speculation "
+                "never amortized a decode tick)")
+        assert vals["serve.spec.spec_off.tokens_per_tick"] == 1.0, \
+            "non-speculative decode must emit exactly one token per tick"
+        print("# quick smoke OK: greedy streams identical spec on/off; "
+              "acceptance > 0 and tokens/tick > 1 for ngram and model "
+              "drafters", file=sys.stderr)
+        return 0
     if args.quick:
         vals = {n: v for n, v, _, _ in rows}
         for plen in (48, 96):

@@ -6,6 +6,10 @@ per strategy — the measured counterpart of the paper's Fig. 7.  A second
 table shows the chunked-prefill TTFT/TPOT trade-off on long prompts: with
 chunking, decode ticks interleave between the chunks of a long prefill
 (``mixed`` tick fraction > 0) instead of head-of-line blocking behind it.
+Later tables show the paged-vs-dense KV arena, the radix prefix cache on
+a shared-system-prompt stream, and speculative decoding (n-gram and
+small-model drafters) — every variant must reproduce the reference token
+streams exactly.
 
 Run:  PYTHONPATH=src python examples/serve_halo.py [--requests 24]
 """
@@ -26,7 +30,7 @@ from repro.serving.scheduler import PhaseAwareConfig
 def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_batch=4, max_len=128, prefill_chunk=2048,
                max_prefill_tokens=8192, paged=False, page_size=16,
-               n_pages=64, prefix_cache=False):
+               n_pages=64, prefix_cache=False, speculative=None):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
@@ -34,7 +38,7 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                                prefill_chunk=prefill_chunk,
                                max_prefill_tokens=max_prefill_tokens),
         paged=paged, page_size=page_size, n_pages=n_pages,
-        prefix_cache=prefix_cache))
+        prefix_cache=prefix_cache, speculative=speculative))
     t0 = time.monotonic()
     for p in prompts:
         engine.submit(p.copy(), max_new_tokens=max_new)
@@ -142,6 +146,36 @@ def main():
               f"{ps['hit_rate']:9.2f} "
               f"{ps['prefill_tokens_executed']:12.0f} "
               f"{ps['cow_copies']:5.0f}  {same}")
+
+    # speculative decoding: the drafter proposes k tokens per decode tick
+    # (n-gram prompt-lookup, or a small draft model), one verify window of
+    # the target model accepts/rejects them all at once — multi-token
+    # decode with bit-identical greedy streams
+    from repro.serving.speculative import SpecConfig
+    print(f"\n{'speculative':14s} {'TPOT p50':>10s} {'accept':>7s} "
+          f"{'tok/tick':>9s} {'ticks':>6s}  outputs identical?")
+    spec_stream = [rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+                   for _ in range(6)]
+    base = None
+    for label, spec in (("off", None),
+                        ("ngram k=4", SpecConfig(k=4)),
+                        ("model k=4", SpecConfig(
+                            k=4, drafter="model", draft_arch=args.arch,
+                            draft_seed=0))):
+        eng, done, _ = run_stream(cfg, params, spec_stream, max_new=32,
+                                  prefill_chunk=16, max_prefill_tokens=32,
+                                  paged=True, page_size=8, n_pages=64,
+                                  speculative=spec)
+        outs = [r.generated for r in done]
+        same = "(reference)" if base is None else (
+            "yes" if outs == base else "NO")
+        if base is None:
+            base = outs
+        ss = eng.spec_stats()
+        print(f"{label:14s} "
+              f"{np.median([r.tpot for r in done])*1e3:9.1f}ms "
+              f"{ss['acceptance_rate']:7.2f} "
+              f"{ss['tokens_per_tick']:9.2f} {eng.n_ticks:6d}  {same}")
 
     print("\nNote: strategies schedule the same math onto different worker "
           "groups (separate compiled programs); outputs must match exactly. "

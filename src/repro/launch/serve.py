@@ -16,6 +16,10 @@ preemption counts.  ``--kv-dtype int8`` stores GQA pages quantized.
 copy-on-write through a radix prefix cache; ``--shared-prefix N`` gives
 every request the same N-token prompt head so the cache has something to
 hit, and the report adds hit rate + prefill tokens skipped.
+``--speculative`` (with ``--paged``) turns on the draft/verify loop
+(serving/speculative.py): ``--spec-k`` draft tokens per decode tick from
+the model-free n-gram drafter, or from a small draft model with
+``--draft <arch>``; the report adds acceptance rate and tokens/tick.
 """
 
 from __future__ import annotations
@@ -46,7 +50,17 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 enables device-side sampling")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling threshold (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: draft/verify loop over "
+                         "the paged arena (paged only)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens per verify window (default 4)")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="draft-model arch (e.g. qwen3-1.7b); default is "
+                         "the model-free n-gram drafter")
     ap.add_argument("--paged", action="store_true",
                     help="paged block-pool KV arena (capacity = pool, "
                          "not max_len; preemption on exhaustion)")
@@ -63,6 +77,13 @@ def main(argv=None) -> int:
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
     args = ap.parse_args(argv)
+    if (args.draft or args.spec_k is not None) and not args.speculative:
+        ap.error("--draft/--spec-k require --speculative")
+    if args.speculative and not args.paged:
+        ap.error("--speculative requires --paged (the draft/verify loop "
+                 "runs over the paged arena)")
+    if args.spec_k is None:
+        args.spec_k = 4
 
     import jax
     from repro.configs.base import get_config
@@ -76,6 +97,13 @@ def main(argv=None) -> int:
         cfg = dataclasses.replace(cfg, dtype="float32")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    spec = None
+    if args.speculative:
+        from repro.serving.speculative import SpecConfig
+        spec = SpecConfig(
+            k=args.spec_k,
+            drafter="model" if args.draft else "ngram",
+            draft_arch=args.draft)
     sc = ServeConfig(
         max_batch=args.max_batch, max_len=args.max_len,
         phase=PhaseAwareConfig(strategy=args.strategy,
@@ -84,9 +112,10 @@ def main(argv=None) -> int:
                                max_prefill_tokens=args.max_prefill_tokens),
         greedy=args.temperature <= 0.0,
         temperature=max(args.temperature, 1e-6),
-        top_k=args.top_k, seed=args.seed,
+        top_k=args.top_k, top_p=args.top_p, seed=args.seed,
         paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
-        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache)
+        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache,
+        speculative=spec)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
@@ -138,6 +167,13 @@ def main(argv=None) -> int:
               f"prefill-executed={ps['prefill_tokens_executed']:.0f} "
               f"cow-copies={ps['cow_copies']:.0f} "
               f"evicted-pages={ps['cache_evicted_pages']:.0f}")
+    if args.speculative:
+        ss = engine.spec_stats()
+        drafter = args.draft or "ngram"
+        print(f"speculative drafter={drafter} k={args.spec_k} "
+              f"windows={ss['windows']:.0f} "
+              f"acceptance={ss['acceptance_rate']:.2f} "
+              f"tokens/tick={ss['tokens_per_tick']:.2f}")
     return 0
 
 

@@ -645,7 +645,8 @@ def supports_paged(cfg: ModelConfig) -> bool:
 
 def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
                   lengths, slots, cache: List[Any],
-                  block_tables: Optional[List[Any]] = None):
+                  block_tables: Optional[List[Any]] = None,
+                  return_all_logits: bool = False):
     """Packed chunked prefill, writing K/V directly into the decode arena.
 
     tokens: [N, C] (or [N, K, C] multi-codebook) — N chunk rows padded to C
@@ -658,7 +659,12 @@ def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
 
     Returns (last_logits [N, 1, ...], new_cache): the logits of each row's
     last valid position — only meaningful for rows whose chunk completes
-    the prompt.  Requires ``supports_chunked_prefill(cfg)``.
+    the prompt.  With ``return_all_logits`` the logits of EVERY window
+    position come back instead ([N, C, ...]) — the speculative-decode
+    verify program scores each draft token against the position that
+    predicts it (see serving/speculative.py); positions past a row's
+    ``lengths`` are garbage the caller must mask.  Requires
+    ``supports_chunked_prefill(cfg)``.
     """
     plan = build_plan(cfg)
     x = embed_tokens(params, cfg, tokens)
@@ -689,6 +695,8 @@ def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
         new_caches.append(ys)
         x = constrain(x, "act_btd")
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_all_logits:
+        return lm_logits(params, cfg, x), new_caches             # [N, C, ...]
     last = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     h_last = x[jnp.arange(N), last][:, None, :]                  # [N, 1, d]
     return lm_logits(params, cfg, h_last), new_caches

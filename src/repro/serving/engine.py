@@ -58,6 +58,19 @@ LRU-first whenever live work needs pages, BEFORE any live request is
 preempted.  Greedy token streams are bit-identical with the cache on or
 off; only the prefill work executed changes.
 
+SPECULATIVE DECODING (``ServeConfig(speculative=SpecConfig(...))``,
+requires paged): every decode tick, a drafter proposes up to k tokens
+per decoding request — the model-free n-gram prompt-lookup drafter by
+default, or a small draft model with its own paged KV pool — and ONE
+verify window of the target model (a k+1-token prefill-shaped chunk on
+the CiM-analogue verify group, logits at every window position) accepts
+the longest agreeing prefix and emits one correction/bonus token on top.
+Rejected tokens' KV rolls back via ``KVPool.truncate`` (shared /
+prefix-cache-pinned pages survive; COW already privatized the writer).
+Greedy streams are bit-identical with speculation on or off; only the
+number of ticks changes.  See serving/speculative.py and
+docs/serving.md §Speculative decoding.
+
 This is a single-host engine; launch/serve.py instantiates it either on
 the host CPU (examples, tests) or under the production mesh with the
 decode shardings from distributed/sharding.py.
@@ -86,8 +99,14 @@ from repro.models.transformer import (
 )
 from repro.serving.kv_pool import KVPool
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.sampling import sample_tokens
-from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
+from repro.serving.sampling import sample_tokens, verify_draft
+from repro.serving.scheduler import (
+    PhaseAwareConfig,
+    PhaseScheduler,
+    TickPlan,
+    bucket_pow2 as _bucket,
+)
+from repro.serving.speculative import SpecConfig, build_drafter
 
 
 class RequestState(Enum):
@@ -137,6 +156,8 @@ class TickRecord:
     wall_s: float
     preemptions: int = 0                # pool evictions this tick (paged)
     kv_resident_bytes: int = 0          # allocated KV bytes after the tick
+    spec_drafted: int = 0               # draft tokens verified this tick
+    spec_accepted: int = 0              # draft tokens accepted this tick
 
     @property
     def mixed(self) -> bool:
@@ -152,7 +173,12 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     top_k: int = 0
+    top_p: float = 0.0                  # nucleus sampling (0 = off)
     seed: int = 0
+    # speculative decoding (serving/speculative.py, requires paged): a
+    # drafter proposes up to k tokens per decode tick and one verify
+    # window of the target model accepts/rejects them all at once
+    speculative: Optional[SpecConfig] = None
     # paged KV arena (serving/kv_pool.py): capacity = n_pages * page_size
     # tokens PER POOL, not per slot — prompts/generations are bounded by
     # pool capacity rather than max_len
@@ -163,14 +189,6 @@ class ServeConfig:
     # radix prefix cache over the page pool (requires paged): shared-prompt
     # KV pages are reused copy-on-write instead of recomputed
     prefix_cache: bool = False
-
-
-def _bucket(n: int, cap: int) -> int:
-    """Round up to a power of two (capped) — bounds jit recompiles."""
-    b = 1
-    while b < n:
-        b *= 2
-    return max(1, min(b, cap)) if cap else b
 
 
 class ServingEngine:
@@ -210,6 +228,25 @@ class ServingEngine:
         if sc.paged and sc.prefix_cache:
             self.prefix = PrefixCache(sc.page_size,
                                       self.pool.shareable_capacity())
+        self.spec = sc.speculative
+        self.drafter = None
+        if self.spec is not None:
+            if not sc.paged:
+                raise ValueError(
+                    "speculative decoding requires paged=True (the "
+                    "draft/verify loop writes and rolls back through the "
+                    "paged arena's block tables)")
+            if cfg.n_codebooks > 1:
+                raise ValueError("speculative decoding does not support "
+                                 "multi-codebook heads")
+            self.drafter = build_drafter(self.spec, cfg, n_slots=B,
+                                         n_pages=sc.n_pages,
+                                         page_size=sc.page_size)
+            # rings bound rollback: a draft written at position p >= R
+            # would overwrite live history at p - R that a rejection
+            # cannot restore — speculation stops there (see
+            # KVPool.rollback_bound) and decode falls back to one token
+            self._rollback_bound = self.pool.rollback_bound()
         self.slot_pos = np.full((B,), -1, np.int64)     # next write position
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
@@ -228,6 +265,14 @@ class ServingEngine:
         self.prefill_tokens_executed = 0  # chunk tokens actually computed
         self.cow_copies = 0              # device page copies (COW)
         self.cache_evicted_pages = 0     # pages reclaimed from the cache
+        # speculative decoding counters (spec_stats)
+        self.spec_windows = 0            # verify windows executed
+        self.spec_drafted = 0            # draft tokens verified
+        self.spec_accepted = 0           # draft tokens accepted
+        self.decode_tokens_emitted = 0   # tokens from decode/verify phases
+        self.decode_slot_ticks = 0       # (request, tick) decode occupancies
+        self._tick_spec_drafted = 0
+        self._tick_spec_accepted = 0
         # the dense arena pins its full footprint up front; computed here
         # because the cache arrays are donated (buffers move every call)
         self._dense_kv_bytes = (0 if sc.paged else sum(
@@ -264,7 +309,8 @@ class ServingEngine:
                 "whole": (self._prefill_whole_impl, 3),
                 "decode": (self._decode_impl, 2),
                 "chunk_paged": (self._prefill_chunk_paged_impl, 5),
-                "decode_paged": (self._decode_paged_impl, 2)}[kind]
+                "decode_paged": (self._decode_paged_impl, 2),
+                "verify": (self._verify_impl, 5)}[kind]
             self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,))
         return self._programs[key]
 
@@ -273,7 +319,8 @@ class ServingEngine:
         """logits [N, 1, V] (or [N, 1, K, V]) -> int32 tokens [N] / [N, K]."""
         return sample_tokens(logits[:, -1], greedy=self.sc.greedy,
                              temperature=self.sc.temperature,
-                             top_k=self.sc.top_k, key=key)
+                             top_k=self.sc.top_k, top_p=self.sc.top_p,
+                             key=key)
 
     def _prefill_chunk_impl(self, params, tokens, offsets, lengths, slots,
                             cache, key):
@@ -295,6 +342,24 @@ class ServingEngine:
                                           lengths, slots, cache,
                                           block_tables=block_tables)
         return self._sample(logits, key), new_cache
+
+    def _verify_impl(self, params, tokens, offsets, lengths, slots, cache,
+                     block_tables, draft, key):
+        """Speculative verify: ONE chunk forward of the target model over
+        each row's [last_committed, d_1, .., d_k] window against the
+        paged arena (K/V written arena-direct like any prefill chunk),
+        returning logits at EVERY window position; accept/resample runs
+        on device (sampling.verify_draft) so the host sees one packed
+        [N, C+1] array — C candidate tokens plus the emission count."""
+        logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
+                                          lengths, slots, cache,
+                                          block_tables=block_tables,
+                                          return_all_logits=True)
+        toks, n_emit = verify_draft(
+            logits, draft, jnp.asarray(lengths, jnp.int32) - 1,
+            greedy=self.sc.greedy, temperature=self.sc.temperature,
+            top_k=self.sc.top_k, top_p=self.sc.top_p, key=key)
+        return jnp.concatenate([toks, n_emit[:, None]], axis=1), new_cache
 
     def _decode_paged_impl(self, params, tokens, cache, pos, block_tables,
                            key):
@@ -486,6 +551,8 @@ class ServingEngine:
         """Evict ``req`` from its slot: pages back to the pool, request
         back to WAITING (age-ordered) for recompute-on-resume."""
         assert self.paged and req.slot >= 0
+        if self.drafter is not None:
+            self.drafter.release(req.slot)
         self.pool.release(req.slot)
         self.slot_req[req.slot] = None
         self.slot_pos[req.slot] = -1
@@ -556,7 +623,12 @@ class ServingEngine:
         if self._finished(req):
             self._retire(req)
 
-    def _finished(self, req: Request) -> bool:
+    def _stream_done(self, req: Request) -> bool:
+        """Token-stream termination only (max_new / eos) — what a verify
+        window's emission loop may stop on.  The arena position bound is
+        NOT checked here: a window commits its slot_pos jump before the
+        tokens append, so mid-emission the position test would fire early
+        and drop accepted tokens non-speculative decode would emit."""
         if len(req.generated) >= req.max_new_tokens:
             return True
         if req.eos_id is not None and req.generated:
@@ -565,6 +637,11 @@ class ServingEngine:
                 last = last[0] if last else None
             if last == req.eos_id:
                 return True
+        return False
+
+    def _finished(self, req: Request) -> bool:
+        if self._stream_done(req):
+            return True
         limit = self.pool.length_bound if self.paged else self.sc.max_len
         if self.slot_pos[req.slot] >= limit - 1:
             return True
@@ -573,6 +650,8 @@ class ServingEngine:
     def _retire(self, req: Request) -> None:
         req.state = RequestState.DONE
         req.t_done = time.monotonic()
+        if self.drafter is not None:
+            self.drafter.release(req.slot)
         if self.paged:
             self.pool.release(req.slot)
         self.slot_req[req.slot] = None
@@ -682,10 +761,123 @@ class ServingEngine:
                     sampled = self._to_host(toks)   # one transfer per tick
                 self._start_decoding(req, sampled[i])
 
+    # -- speculative draft/verify ------------------------------------------------
+    def _spec_budget(self, r: Request) -> int:
+        """Largest draft window this tick could commit AND roll back for
+        ``r``, before any drafter runs: the ring rollback bound, the pool
+        length bound, the remaining token budget (a window emits up to
+        k+1 tokens), and the pages the pool can grant without preempting
+        anyone (speculation is opportunistic — the one-token decode path
+        owns the preemption machinery).  Computed drafter-free so
+        permanently unspeculatable requests (a ring target past its
+        rollback bound) never pay drafting cost at all."""
+        pos = int(self.slot_pos[r.slot])
+        return min(
+            self.spec.k,
+            self._rollback_bound - pos - 1,
+            self.pool.length_bound - pos - 2,
+            r.max_new_tokens - len(r.generated) - 1,
+            self.pool.max_grow_tokens(r.slot) - 1,
+        )
+
+    def _run_verify_tick(self, plan: TickPlan,
+                         rows: List[Tuple[Request, np.ndarray]]) -> None:
+        """Execute the tick's verify windows as ONE packed batch on the
+        verify (CiM-analogue) worker group and commit the results:
+        accepted drafts + one correction/bonus token per row, with the
+        rejected tail's KV rolled back via ``KVPool.truncate``."""
+        kmax = max(int(d.shape[-1]) for _, d in rows)
+        N = _bucket(len(rows), self.sc.max_batch)
+        C = _bucket(kmax + 1, self.spec.k + 1)
+        tokens = np.zeros((N, C), np.int32)
+        draft = np.zeros((N, C - 1), np.int32)
+        offs = np.zeros((N,), np.int32)
+        lens = np.zeros((N,), np.int32)
+        slots = np.full((N,), self.sc.max_batch, np.int32)  # OOB rows: drop
+        for i, (r, d) in enumerate(rows):
+            kd = int(d.shape[-1])
+            tokens[i, 0] = r.generated[-1]
+            tokens[i, 1:1 + kd] = d
+            draft[i, :kd] = d
+            offs[i] = self.slot_pos[r.slot]
+            lens[i] = kd + 1
+            slots[i] = r.slot
+        out, self.cache = self._program(plan.verify_group, "verify")(
+            self.params, jnp.asarray(tokens), jnp.asarray(offs),
+            jnp.asarray(lens), jnp.asarray(slots), self.cache,
+            self.pool.block_tables(), jnp.asarray(draft), self._next_key())
+        packed = self._to_host(out)                 # [N, C+1], one transfer
+        for i, (r, d) in enumerate(rows):
+            kd = int(d.shape[-1])
+            n_emit = int(packed[i, -1])
+            accepted = n_emit - 1
+            self.decode_slot_ticks += 1
+            self.spec_windows += 1
+            self.spec_drafted += kd
+            self.spec_accepted += accepted
+            self._tick_spec_drafted += kd
+            self._tick_spec_accepted += accepted
+            # the emitted tokens' KV: window inputs [gen[-1], d_1..d_acc]
+            # are committed; the final emitted token is fed next tick; the
+            # rejected tail (positions past pos + acc + 1) rolls back
+            new_pos = int(self.slot_pos[r.slot]) + accepted + 1
+            self.pool.truncate(r.slot, new_pos)
+            self.slot_pos[r.slot] = new_pos
+            for t in packed[i, :n_emit]:
+                self._append_token(r, t)
+                self.decode_tokens_emitted += 1
+                if self._stream_done(r):        # eos / max_new clip only
+                    break
+            if self.drafter is not None:
+                self.drafter.observe(r.slot, r.req_id,
+                                     self._effective_len(r))
+            if self._finished(r):
+                self._retire(r)
+
+    def _plan_speculation(self, active: List[Request]
+                          ) -> Tuple[List[Tuple[Request, np.ndarray]],
+                                     List[Request]]:
+        """Partition this tick's decode occupants into verify rows (the
+        drafter proposed something usable, window pages secured, shared
+        pages COW'd) and plain one-token decoders (everything else)."""
+        budgets: Dict[int, int] = {}
+        plain: List[Request] = []
+        candidates: List[Request] = []
+        for r in sorted(active, key=lambda r: r.req_id):
+            budgets[r.req_id] = self._spec_budget(r)
+            (candidates if budgets[r.req_id] >= 1 else plain).append(r)
+        proposals = self.drafter.propose_batch(
+            [(r.slot, r.req_id, self._effective_tokens(r))
+             for r in candidates],
+            self.spec.k) if candidates else {}
+        rows: List[Tuple[Request, np.ndarray]] = []
+        for r in candidates:
+            d = proposals.get(r.slot)
+            kd = min(budgets[r.req_id], int(d.shape[-1])) \
+                if d is not None else 0
+            if kd < 1:
+                plain.append(r)
+                continue
+            d = np.asarray(d[:kd], np.int32)
+            pos = int(self.slot_pos[r.slot])
+            if not self.pool.grow(r.slot, pos + kd + 1):
+                plain.append(r)                     # raced: fall back
+                continue
+            if not self._ensure_writable(r.slot, pos, pos + kd + 1):
+                self.pool.shrink(r.slot, pos)       # roll the claim back
+                plain.append(r)
+                continue
+            rows.append((r, d))
+        return rows, plain
+
     def _run_decode_tick(self, plan: TickPlan) -> None:
         reqs = self._by_id()
         active = [reqs[rid] for rid in plan.decode_reqs
                   if rid in reqs and reqs[rid].state == RequestState.DECODING]
+        if self.spec is not None and active:
+            rows, active = self._plan_speculation(active)
+            if rows:
+                self._run_verify_tick(plan, rows)
         if self.paged and active:
             # each decode write may cross into a fresh page (or, shared-
             # prefix, into a page another request still reads — COW).
@@ -729,6 +921,11 @@ class ServingEngine:
         sampled = self._to_host(toks)               # one transfer per tick
         for r in active:
             self._append_token(r, sampled[r.slot])
+            # occupancy is counted at emission, not at planning: a request
+            # preempted by its own growth failure emitted nothing and must
+            # not drag tokens_per_tick below the non-speculative 1.0 floor
+            self.decode_tokens_emitted += 1
+            self.decode_slot_ticks += 1
             self.slot_pos[r.slot] += 1
             if self._finished(r):
                 self._retire(r)
@@ -738,6 +935,8 @@ class ServingEngine:
         """One engine tick: plan (scheduler) -> execute (this method)."""
         t0 = time.monotonic()
         self._tick_preemptions = 0
+        self._tick_spec_drafted = 0
+        self._tick_spec_accepted = 0
         self._prefill_progress = False
         self._admit()
         # age order (FIFO): under page contention the oldest request gets
@@ -751,18 +950,23 @@ class ServingEngine:
             key=lambda e: e[0])
         decoding = [r.req_id for r in self.slot_req
                     if r is not None and r.state == RequestState.DECODING]
+        spec_k = self.spec.k if self.spec is not None else 0
         if self.paged:
             # token-level admission: prefill work is planned against the
             # pool's free pages, with this tick's decode growth reserved
+            # (a speculative verify window grows by up to k+1 tokens — the
+            # windows are charged like mini prefill chunks)
             headroom = self.pool.headroom_pages(
                 [self.pool.len_of(r.slot) for r in self.slot_req
-                 if r is not None and r.state == RequestState.DECODING])
+                 if r is not None and r.state == RequestState.DECODING],
+                growth=spec_k + 1)
             plan = self.scheduler.plan_tick(
                 prefilling, decoding, free_pages=headroom,
                 page_size=self.sc.page_size,
-                capacity=self.pool.widest_capacity())
+                capacity=self.pool.widest_capacity(), spec_k=spec_k)
         else:
-            plan = self.scheduler.plan_tick(prefilling, decoding)
+            plan = self.scheduler.plan_tick(prefilling, decoding,
+                                            spec_k=spec_k)
         if plan.prefill_chunks:
             self._run_prefill_tick(plan)
         if plan.decode_reqs:
@@ -780,7 +984,9 @@ class ServingEngine:
             decode_group=plan.decode_group,
             wall_s=time.monotonic() - t0,
             preemptions=self._tick_preemptions,
-            kv_resident_bytes=resident)
+            kv_resident_bytes=resident,
+            spec_drafted=self._tick_spec_drafted,
+            spec_accepted=self._tick_spec_accepted)
         self.tick_log.append(rec)
         self._n_ticks += 1
         self._n_prefill_ticks += bool(rec.prefill_reqs)
@@ -836,6 +1042,25 @@ class ServingEngine:
             out["hit_tokens"] = float(s["hit_tokens"])
             out["cached_pages"] = float(s["cached_pages"])
         return out
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative-decoding effectiveness.
+
+        ``acceptance_rate``: accepted / drafted (the drafter-quality
+        number k should be tuned against); ``tokens_per_tick``: tokens
+        emitted per (request, decode-tick) occupancy — 1.0 exactly for
+        non-speculative decode, > 1 as soon as any draft survives
+        verification.  Zeros/1.0 when speculation is off (the comparison
+        baseline)."""
+        return {
+            "windows": float(self.spec_windows),
+            "drafted": float(self.spec_drafted),
+            "accepted": float(self.spec_accepted),
+            "acceptance_rate": self.spec_accepted / max(self.spec_drafted, 1),
+            "decode_tokens": float(self.decode_tokens_emitted),
+            "tokens_per_tick": (self.decode_tokens_emitted
+                                / max(self.decode_slot_ticks, 1)),
+        }
 
     def phase_occupancy(self) -> Dict[str, float]:
         """Fractions of ticks running prefill / decode / both (interleave).

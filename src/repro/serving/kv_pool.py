@@ -317,13 +317,16 @@ class KVPool:
         """Binding free-page count (min across runs)."""
         return min(p.free_pages() for p in self.pools)
 
-    def headroom_pages(self, decode_lens: Sequence[int]) -> int:
+    def headroom_pages(self, decode_lens: Sequence[int],
+                       growth: int = 1) -> int:
         """Free pages available to NEW prefill work after reserving the
-        growth this tick's decode writes need (one token per listed slot
-        length).  Min across runs; floored at 0."""
+        growth this tick's decode writes need (``growth`` tokens per
+        listed slot length — one for a plain decode step, ``spec_k + 1``
+        when speculative verify windows write a whole draft window).
+        Min across runs; floored at 0."""
         room = None
         for p in self.pools:
-            reserve = sum(p.pages_of(l + 1) - p.pages_of(l)
+            reserve = sum(p.pages_of(l + growth) - p.pages_of(l)
                           for l in decode_lens)
             r = p.free_pages() - reserve
             room = r if room is None else min(room, r)
@@ -433,6 +436,40 @@ class KVPool:
         """Drop every run's references beyond ``new_len`` (rollback)."""
         for p in self.pools:
             p.shrink(slot, new_len)
+
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Roll ``slot`` back to ``new_len`` logical tokens — the
+        speculative-decode rejection path (rejected draft tokens' KV must
+        stop being addressable).  Per run: pages that backed ONLY the
+        rejected tail return to the free list; pages still referenced —
+        another slot sharing the prefix, a prefix-cache pin — survive with
+        their references intact (a rejected token never frees a shared
+        page out from under its sharers), and a page holding both kept and
+        rejected tokens is kept whole (the stale entries past ``new_len``
+        are masked by position validity on every read path and overwritten
+        in place by the accepted continuation).  COW'd pages the verify
+        write privatized stay private.  Returns pages freed across runs.
+        """
+        if new_len > self.len_of(slot):
+            raise ValueError(f"truncate: new_len {new_len} > current "
+                             f"{self.len_of(slot)}")
+        before = sum(p.free_pages() for p in self.pools)
+        self.shrink(slot, new_len)
+        return sum(p.free_pages() for p in self.pools) - before
+
+    def rollback_bound(self) -> int:
+        """Highest arena position (exclusive) through which speculative
+        writes can still be ROLLED BACK safely.  A ring (sliding-window)
+        run's entry at index ``p % R`` holds live position ``p - R`` once
+        ``p >= R`` — writing a draft token there destroys history a
+        rollback cannot restore, so the draft/verify loop must stop
+        speculating at the narrowest ring span and fall back to one-token
+        decode.  Position-indexed runs (full attention, MLA) mask stale
+        entries by length, so any position the pool can address is
+        rollback-safe."""
+        bounds = [p.capacity for p, run in zip(self.pools, self.plan)
+                  if run.window > 0]
+        return min(bounds) if bounds else self.length_bound
 
     def release(self, slot: int) -> None:
         for p in self.pools:

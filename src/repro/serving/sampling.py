@@ -6,8 +6,23 @@ device->host syncs per decode step.  Sampling INSIDE the jitted phase
 program instead returns a single int32 token array ([B] or [B, K] for
 multi-codebook heads), so the engine performs exactly one host transfer
 per tick regardless of batch size.  Greedy is the default (and is what
-the token-identity tests pin down); temperature / top-k sampling shares
-the same entry point and threads a PRNG key through the tick loop.
+the token-identity tests pin down); temperature / top-k / top-p sampling
+shares the same entry point and threads a PRNG key through the tick loop.
+
+``verify_draft`` is the speculative-decoding acceptance rule
+(serving/speculative.py): given the target model's logits at every
+position of a draft window, it accepts the longest draft prefix the
+target agrees with and emits one extra token (the correction at the
+first disagreement, or the bonus token after a fully-accepted window).
+Greedy verification is bit-identical to non-speculative greedy decode by
+construction — the emitted tokens ARE the target's argmax stream.
+Stochastic verification is Leviathan-style rejection sampling
+(arXiv:2211.17192) specialized to this engine's deterministic drafters
+(the proposal is a point mass): draft token d is accepted with
+probability p(d) under the temperature/top-k/top-p-filtered target
+distribution, and a rejection resamples from the residual
+``normalize((p - onehot(d))+)`` — p with d removed — which keeps the
+overall emission distribution exactly p.
 """
 
 from __future__ import annotations
@@ -18,18 +33,15 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def sample_tokens(logits, *, greedy: bool = True, temperature: float = 1.0,
-                  top_k: int = 0, key=None):
-    """logits [..., V] float -> int32 token ids [...].
+def _filter_logits(scaled, top_k: int, top_p: float):
+    """Top-k and/or nucleus (top-p) truncation of pre-softmax logits.
 
-    greedy: argmax (deterministic, key unused).  Otherwise softmax sampling
-    at ``temperature`` with optional top-k truncation; ``key`` required.
+    Both filters share the NEG_INF-scatter tie discipline: the kept
+    candidate set comes from ``lax.top_k``'s index set (exactly k wide /
+    the minimal nucleus prefix of the descending sort), and kept values
+    are scattered into a NEG_INF field — a ``scaled < threshold`` mask
+    would admit every logit tied at the boundary and overrun the budget.
     """
-    if greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if key is None:
-        raise ValueError("non-greedy sampling requires a PRNG key")
-    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
     if top_k and top_k > 0:
         k = min(int(top_k), scaled.shape[-1])   # clamp: top_k may exceed V
         # lax.top_k is O(V log k) vs a full sort's O(V log V), and its
@@ -39,6 +51,113 @@ def sample_tokens(logits, *, greedy: bool = True, temperature: float = 1.0,
         vals, idx = jax.lax.top_k(scaled, k)
         scaled = jnp.put_along_axis(jnp.full_like(scaled, NEG_INF), idx,
                                     vals, axis=-1, inplace=False)
+    if top_p and 0.0 < top_p < 1.0:
+        # nucleus: keep the minimal prefix of the descending-probability
+        # sort whose cumulative mass reaches top_p.  ``csum - probs`` is
+        # the mass strictly BEFORE each candidate, so the candidate that
+        # crosses the threshold is kept and everything after it dropped;
+        # the first candidate is always kept (its "before" mass is 0).
+        V = scaled.shape[-1]
+        vals, idx = jax.lax.top_k(scaled, V)    # full descending sort
+        probs = jax.nn.softmax(vals, axis=-1)
+        keep = (jnp.cumsum(probs, axis=-1) - probs) < top_p
+        vals = jnp.where(keep, vals, NEG_INF)
+        scaled = jnp.put_along_axis(jnp.full_like(scaled, NEG_INF), idx,
+                                    vals, axis=-1, inplace=False)
+    return scaled
+
+
+def sample_tokens(logits, *, greedy: bool = True, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 0.0, key=None):
+    """logits [..., V] float -> int32 token ids [...].
+
+    greedy: argmax (deterministic, key unused).  Otherwise softmax sampling
+    at ``temperature`` with optional top-k and/or top-p (nucleus)
+    truncation; ``key`` required.
+    """
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("non-greedy sampling requires a PRNG key")
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    scaled = _filter_logits(scaled, top_k, top_p)
     flat = scaled.reshape(-1, scaled.shape[-1])
     toks = jax.random.categorical(key, flat, axis=-1)
     return toks.reshape(scaled.shape[:-1]).astype(jnp.int32)
+
+
+def verify_draft(logits, draft, draft_len, *, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0,
+                 top_p: float = 0.0, key=None):
+    """Vectorized accept/resample over a speculative draft window.
+
+    logits:    [N, C, V] target logits at every window position; window
+               inputs are [last_committed, d_1, .., d_K] so position j's
+               logits predict the token AFTER d_j (position 0 predicts
+               d_1, position draft_len predicts the bonus token).
+    draft:     [N, C-1] int32 proposed tokens (rows padded past their
+               draft_len; padding is never read).
+    draft_len: [N] int32 — valid draft tokens per row (<= C-1).
+
+    Returns (tokens [N, C] int32, n_emitted [N] int32): row n commits
+    ``tokens[n, :n_emitted[n]]`` — its accepted draft prefix plus ONE
+    extra token (the correction at the first rejection, or the bonus
+    sampled from the last window position when every draft survived).
+    ``n_emitted`` is always in [1, draft_len + 1].
+
+    Greedy: accept while the target argmax agrees with the draft; the
+    emitted tokens are exactly the target's argmax stream, so speculative
+    and non-speculative greedy decode are identical by construction.
+    Stochastic: Leviathan rejection sampling against a point-mass
+    proposal — accept d with prob p(d) (p = the filtered/softmaxed
+    target distribution), resample rejections from p with d removed.
+    """
+    N, C, _ = logits.shape
+    K = C - 1
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    draft = jnp.asarray(draft, jnp.int32)
+    j = jnp.arange(K, dtype=jnp.int32)
+    within = j[None, :] < draft_len[:, None]                     # [N, K]
+
+    if greedy:
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # [N, C]
+        match = (tgt[:, :K] == draft) & within
+        acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+        # accepted drafts == the argmax prefix, the correction/bonus is
+        # the argmax at position acc: the whole emission IS tgt[:, :acc+1]
+        return tgt, (acc + 1).astype(jnp.int32)
+
+    if key is None:
+        raise ValueError("stochastic verification requires a PRNG key")
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    logp = jax.nn.log_softmax(_filter_logits(scaled, top_k, top_p), axis=-1)
+    p = jnp.exp(logp)                                            # [N, C, V]
+    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+    # accept d_j with prob p_j(d_j) (proposal is a point mass at d_j)
+    p_d = jnp.take_along_axis(p[:, :K], draft[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(k_acc, (N, K))
+    match = (u < p_d) & within
+    acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+    # residual at every draft position: p with the draft token removed
+    # (normalize((p - onehot(d))+)); categorical renormalizes log-space
+    res_logp = jnp.where(
+        jnp.arange(p.shape[-1])[None, None, :] == draft[..., None],
+        NEG_INF, logp[:, :K])
+    res = jax.random.categorical(
+        k_res, res_logp.reshape(N * K, -1), axis=-1
+    ).reshape(N, K).astype(jnp.int32)
+    # bonus: a fresh sample from the last window position (index draft_len)
+    bonus_logp = jnp.take_along_axis(
+        logp, draft_len[:, None, None], axis=1)[:, 0]            # [N, V]
+    bonus = jax.random.categorical(k_bonus, bonus_logp,
+                                   axis=-1).astype(jnp.int32)
+    res_at_acc = jnp.take_along_axis(
+        res, jnp.clip(acc, 0, K - 1)[:, None], axis=1)[:, 0]
+    extra = jnp.where(acc < draft_len, res_at_acc, bonus)        # [N]
+    jj = jnp.arange(C, dtype=jnp.int32)
+    draft_pad = jnp.concatenate(
+        [draft, jnp.zeros((N, 1), jnp.int32)], axis=1)           # [N, C]
+    tokens = jnp.where(jj[None, :] < acc[:, None], draft_pad,
+                       jnp.where(jj[None, :] == acc[:, None],
+                                 extra[:, None], 0))
+    return tokens.astype(jnp.int32), (acc + 1).astype(jnp.int32)

@@ -48,6 +48,16 @@ def pages_for(length: int, page_size: int, capacity: int) -> int:
     return -(-min(max(length, 0), capacity) // page_size)
 
 
+def bucket_pow2(n: int, cap: int = 0) -> int:
+    """Round up to a power of two (optionally capped) — the engine and
+    the model drafter bucket their packed-batch shapes through this so
+    the number of compiled program shapes stays bounded."""
+    b = 1
+    while b < n:
+        b *= 2
+    return max(1, min(b, cap)) if cap else b
+
+
 @dataclass(frozen=True)
 class PhaseAwareConfig:
     strategy: str = "halo"             # halo | cent | attacc
@@ -76,6 +86,12 @@ class TickPlan:
     # which worker group executes each phase this tick
     prefill_group: str = "prefill"
     decode_group: str = "decode"
+    # speculative decoding: decode occupants whose drafter proposed tokens
+    # run a VERIFY window this tick — a k+1-token prefill-shaped batch
+    # that belongs on the compute-bound (CiM) group, while the drafting
+    # itself stays a memory-bound decode op on the CiD group
+    spec_k: int = 0
+    verify_group: str = "prefill"
 
     @property
     def prefill_tokens(self) -> int:
@@ -101,7 +117,8 @@ class PhaseScheduler:
     def plan_tick(self, waiting: Sequence[tuple], decoding: List[int], *,
                   free_pages: Optional[int] = None,
                   page_size: int = 0,
-                  capacity: Optional[int] = None) -> TickPlan:
+                  capacity: Optional[int] = None,
+                  spec_k: int = 0) -> TickPlan:
         """waiting: [(req_id, remaining_prompt_tokens[, chunkable[,
         cur_len]])]; decoding: [req_id].
 
@@ -132,9 +149,21 @@ class PhaseScheduler:
         the arena at admission (a prefix-cache hit attaches shared pages
         before the request ever reaches this planner) never appear in
         ``remaining``, so cached work is admitted at zero token/page cost.
+
+        SPECULATIVE DECODING (``spec_k`` > 0): each decode occupant may
+        run a verify window this tick — a (spec_k + 1)-token
+        prefill-shaped batch charged like a mini prefill chunk.  The
+        engine reserves the page coverage for those windows BEFORE
+        computing ``free_pages`` (``KVPool.headroom_pages(growth =
+        spec_k + 1)``), so the admission arithmetic here is unchanged;
+        this planner stamps the plan with the window size and routes
+        verification to the compute-bound (CiM-analogue) worker group —
+        verifying k+1 tokens is small-batch prefill work — while draft
+        steps remain decode ops on the CiD-analogue group.
         """
         pg, dg = self.groups_for()
-        plan = TickPlan(prefill_group=pg, decode_group=dg)
+        plan = TickPlan(prefill_group=pg, decode_group=dg,
+                        spec_k=max(spec_k, 0), verify_group=pg)
         plan.decode_reqs = decoding[: self.cfg.max_decode_batch]
         budget = self.cfg.max_prefill_tokens
         free_slots = self.cfg.max_decode_batch - len(plan.decode_reqs)

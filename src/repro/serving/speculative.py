@@ -1,0 +1,351 @@
+"""Speculative decoding: a phase-aware draft/verify loop over the paged
+KV arena.
+
+HALO targets exactly the regime where speculation pays off most —
+low-batch, latency-sensitive decode that is memory-bound on CiD — and its
+phase split generalizes naturally to multi-token decoding:
+
+* DRAFT stays a memory-bound decode op.  The model-free n-gram drafter
+  costs no device work at all (a host-side prompt-lookup over the token
+  stream); the small-model drafter runs k one-token decode GEMV sweeps
+  over its OWN paged KV pool — CiD-shaped work on the CiD group.
+* VERIFY is a (k+1)-token prefill-shaped batch: the TARGET model runs one
+  chunk forward over [last_committed, d_1, .., d_k] against the paged
+  arena, returning logits at EVERY window position (the chunked-prefill
+  path usually discards all but the last).  Compute-bound, small-batch
+  GEMM work — the engine routes it to the CiM-analogue worker group
+  (``TickPlan.verify_group``), mirroring heterogeneous-PIM designs that
+  place multi-token ops on the compute die (HPIM, arXiv:2509.12993).
+
+Acceptance is ``serving/sampling.py::verify_draft`` (greedy: bit-identical
+to non-speculative decode by construction; stochastic: Leviathan-style
+residual resampling).  Rejected tokens' KV is rolled back with
+``KVPool.truncate`` — pages backing only the rejected tail free, shared /
+prefix-cache-pinned pages survive (COW already moved the writer off them
+before the window was written).
+
+Two draft providers behind one interface (``propose_batch`` / ``observe``
+/ ``release``):
+
+* ``NGramDrafter`` (default) — prompt-lookup decoding: propose the
+  continuation of the most recent earlier occurrence of the stream's own
+  suffix n-gram.  Zero extra weights, zero device work; shines on
+  repetitive continuations (code, structured text, the loops small
+  models fall into).
+* ``ModelDrafter`` — a smaller model (e.g. ``qwen3-1.7b`` drafting for
+  ``qwen3-8b``) with its own paged ``KVPool``.  It lazily catches its
+  cache up to each request's committed context (one packed chunk-prefill
+  call), drafts k tokens with k batched greedy decode steps, and rolls
+  its own pool back after verification (``observe``) so rejected drafts
+  never pollute its cache.  Draft-pool exhaustion just skips speculation
+  for that request — the engine's one-token decode path is always live.
+
+Host-side orchestration lives in ``ServingEngine._run_decode_tick``; this
+module owns the drafters and their device programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models.transformer import (
+    forward,
+    forward_chunk,
+    init_params,
+    supports_chunked_prefill,
+    supports_paged,
+)
+from repro.serving.kv_pool import KVPool
+from repro.serving.scheduler import bucket_pow2 as _pow2
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs (``ServeConfig(speculative=...)``).
+
+    ``k`` drafts per verify window: each decode tick emits between 1 and
+    k+1 tokens per request.  Larger k amortizes more per-tick latency but
+    wastes more verify compute at low acceptance — see docs/serving.md
+    §Speculative decoding for acceptance-rate-vs-k guidance.
+    """
+    k: int = 4                        # draft tokens per verify window
+    drafter: str = "ngram"            # "ngram" | "model"
+    # n-gram (prompt-lookup) drafter: longest suffix n-gram tried first,
+    # matched against only the trailing ngram_search tokens of the stream
+    # (bounds the per-tick host scan; recent context is where the loops
+    # speculation feeds on live anyway)
+    ngram_max: int = 3
+    ngram_min: int = 1
+    ngram_search: int = 512
+    # small-model drafter
+    draft_arch: Optional[str] = None  # config id, e.g. "qwen3-1.7b"
+    draft_seed: int = 0
+    draft_n_pages: int = 0            # 0: target pool's n_pages
+    draft_page_size: int = 0          # 0: target pool's page_size
+    # per-tick cap on the drafter's catch-up prefill: a slot further
+    # behind than this prefills one bounded chunk per tick (no drafting
+    # until caught up) instead of one unbounded — and uncharged — prompt-
+    # sized chunk in the middle of a latency-sensitive decode tick
+    draft_chunk: int = 256
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if self.drafter not in ("ngram", "model"):
+            raise ValueError(f"drafter must be 'ngram' or 'model', got "
+                             f"{self.drafter!r}")
+        if self.drafter == "model" and not self.draft_arch:
+            raise ValueError("drafter='model' requires draft_arch")
+        if self.ngram_min < 1 or self.ngram_max < self.ngram_min:
+            raise ValueError(f"need 1 <= ngram_min <= ngram_max, got "
+                             f"{self.ngram_min}/{self.ngram_max}")
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafter.
+
+    Proposes the k tokens that followed the most recent earlier occurrence
+    of the stream's own trailing n-gram (longest n first).  Pure host-side
+    numpy over the committed token stream — no weights, no device work,
+    no state beyond the stream itself, so ``observe``/``release`` are
+    no-ops.  Returns an empty proposal when no n-gram recurs; the engine
+    then falls back to the ordinary one-token decode for that request.
+    """
+
+    def __init__(self, spec: SpecConfig):
+        self.spec = spec
+        self.proposed = 0                       # stats: tokens proposed
+
+    def _propose_one(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        ctx = ctx[..., -self.spec.ngram_search:]
+        T = int(ctx.shape[-1])
+        for n in range(min(self.spec.ngram_max, T - 1),
+                       self.spec.ngram_min - 1, -1):
+            pat = ctx[-n:]
+            # candidate starts i < T - n (the suffix itself is excluded and
+            # at least one continuation token exists)
+            win = np.lib.stride_tricks.sliding_window_view(ctx, n)
+            hits = np.nonzero((win[: T - n] == pat).all(axis=-1))[0]
+            if hits.size:
+                i = int(hits[-1])               # most recent occurrence
+                out = ctx[i + n: i + n + k]
+                self.proposed += int(out.shape[-1])
+                return np.asarray(out, np.int32)
+        return np.zeros((0,), np.int32)
+
+    def propose_batch(self, items: Sequence[Tuple[int, int, np.ndarray]],
+                      k: int) -> Dict[int, np.ndarray]:
+        """items: [(slot, req_id, ctx)] -> {slot: drafts [<=k]}."""
+        return {slot: d for slot, _, ctx in items
+                if (d := self._propose_one(ctx, k)).size}
+
+    def observe(self, slot: int, req_id: int, ctx_len: int) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+class ModelDrafter:
+    """Small-model drafter with its own paged KV pool.
+
+    Mirrors the target engine's slots: per slot it tracks which request
+    occupies it and how many context tokens its pool holds.  A
+    ``propose_batch`` call (1) catches every stale slot up to the
+    request's committed context minus its last token — one packed
+    chunk-prefill program call, exactly the engine's prefill shape —
+    then (2) drafts k tokens with k batched greedy one-token decode
+    steps feeding each slot's last committed token first.  After
+    verification the engine calls ``observe`` with the new committed
+    length and the drafter truncates its pool past the accepted prefix
+    (rejected drafts must not linger as context).  Pool exhaustion never
+    propagates: a slot the draft pool cannot hold is released and skipped
+    — speculation is opportunistic.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int,
+                 n_pages: int, page_size: int, draft_chunk: int = 256):
+        if not (supports_paged(cfg) and supports_chunked_prefill(cfg)):
+            raise ValueError(
+                f"{cfg.name}: the model drafter needs an all-attention "
+                "plan (paged pool + chunked catch-up prefill)")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.pool = KVPool(cfg, n_slots=n_slots, n_pages=n_pages,
+                           page_size=page_size)
+        self.draft_chunk = max(draft_chunk, 1)
+        self.cache = self.pool.caches
+        self.lens = np.zeros((n_slots,), np.int64)   # tokens in the pool
+        self.owner = np.full((n_slots,), -1, np.int64)
+        self.host_transfers = 0
+        # the draft pool rolls back after every verify exactly like the
+        # target arena, so the same ring hazard applies: a draft written
+        # at p >= R clobbers live draft context at p - R that truncate
+        # cannot restore — past the narrowest ring span (a sliding-window
+        # draft arch) drafting stops rather than silently corrupting its
+        # own context and collapsing acceptance
+        self._safe_len = min(self.pool.length_bound,
+                             self.pool.rollback_bound())
+        self._chunk_prog = jax.jit(self._chunk_impl, donate_argnums=(5,))
+        self._decode_prog = jax.jit(self._decode_impl, donate_argnums=(2,))
+
+    # -- jitted bodies ---------------------------------------------------------
+    def _chunk_impl(self, params, tokens, offsets, lengths, slots, cache,
+                    block_tables):
+        """Catch-up prefill into the draft pool (logits discarded)."""
+        _, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
+                                     lengths, slots, cache,
+                                     block_tables=block_tables)
+        return new_cache
+
+    def _decode_impl(self, params, tokens, cache, pos, block_tables):
+        """One greedy draft step: drafts are deterministic, so the
+        proposal distribution is a point mass and Leviathan acceptance
+        reduces to accept-with-p(d) (see sampling.verify_draft)."""
+        logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
+                                       phase="decode", cache=cache, pos=pos,
+                                       block_tables=block_tables)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), new_cache
+
+    # -- slot lifecycle --------------------------------------------------------
+    def release(self, slot: int) -> None:
+        if self.owner[slot] >= 0 or self.lens[slot] > 0:
+            self.pool.release(slot)
+        self.owner[slot] = -1
+        self.lens[slot] = 0
+
+    def observe(self, slot: int, req_id: int, ctx_len: int) -> None:
+        """Post-verify rollback: the pool may hold drafts past the
+        accepted prefix — truncate to the committed context minus its
+        last token (which is fed, not cached, on the next draft)."""
+        if self.owner[slot] != req_id:
+            return
+        keep = min(int(self.lens[slot]), max(ctx_len - 1, 0))
+        self.pool.truncate(slot, keep)
+        self.lens[slot] = keep
+
+    # -- drafting --------------------------------------------------------------
+    def _catch_up(self, rows: List[Tuple[int, np.ndarray, int]]) -> None:
+        """One packed chunk-prefill over every slot's missing context
+        tokens ``ctx[lens[slot] : T-1]`` (the last token is fed by the
+        first decode step instead, so its logits become draft #1)."""
+        if not rows:
+            return
+        N = _pow2(len(rows))
+        C = _pow2(max(need for _, _, need in rows))
+        tokens = np.zeros((N, C), np.int32)
+        offs = np.zeros((N,), np.int32)
+        lens = np.zeros((N,), np.int32)
+        slots = np.full((N,), self.n_slots, np.int32)     # OOB rows drop
+        for i, (slot, ctx, need) in enumerate(rows):
+            start = int(self.lens[slot])
+            tokens[i, :need] = ctx[start:start + need]
+            offs[i] = start
+            lens[i] = need
+            slots[i] = slot
+        self.cache = self._chunk_prog(
+            self.params, jnp.asarray(tokens), jnp.asarray(offs),
+            jnp.asarray(lens), jnp.asarray(slots), self.cache,
+            self.pool.block_tables())
+        for slot, _, need in rows:
+            self.lens[slot] += need
+
+    def propose_batch(self, items: Sequence[Tuple[int, int, np.ndarray]],
+                      k: int) -> Dict[int, np.ndarray]:
+        """items: [(slot, req_id, committed ctx)] -> {slot: drafts [k]}."""
+        live: List[Tuple[int, np.ndarray]] = []
+        catch_up: List[Tuple[int, np.ndarray, int]] = []
+        for slot, req_id, ctx in items:
+            T = int(ctx.shape[-1])
+            if self.owner[slot] != req_id:
+                self.release(slot)
+                self.owner[slot] = req_id
+            # the pool must hold ctx[:T-1] plus the k-1 fed drafts; the
+            # draft pool has no sharing, so plain grow/release suffices
+            if int(self.lens[slot]) > T - 1:   # engine rolled further back
+                self.pool.truncate(slot, T - 1)
+                self.lens[slot] = T - 1
+            if T - 1 + k > self._safe_len:
+                self.release(slot)             # free what it held; skip
+                continue
+            need = (T - 1) - int(self.lens[slot])
+            # on a grow failure the caught-up prefix is KEPT (no draft
+            # this tick, nothing released): releasing would throw real
+            # catch-up prefill work away and restart it from zero every
+            # contended tick — pages free anyway when the target retires
+            # or preempts (engine release hooks)
+            if need > self.draft_chunk:
+                # far behind (fresh slot, post-preemption resume): prefill
+                # one bounded chunk this tick and draft only once caught
+                # up — never an unbounded prompt-sized chunk mid-decode
+                take = self.draft_chunk
+                if self.pool.grow(slot, int(self.lens[slot]) + take):
+                    catch_up.append((slot, ctx, take))
+                continue
+            if not self.pool.grow(slot, T - 1 + k):
+                continue
+            if need > 0:
+                catch_up.append((slot, ctx, need))
+            live.append((slot, ctx))
+        self._catch_up(catch_up)
+        if not live:
+            return {}
+        # k batched greedy decode steps; slot s feeds ctx[-1] first, then
+        # its own drafts (positions T-1 .. T+k-2 get KV in the draft pool)
+        B = self.n_slots
+        feed = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for slot, ctx in live:
+            feed[slot, 0] = int(ctx[-1])
+            pos[slot] = int(ctx.shape[-1]) - 1
+            active[slot] = True
+        drafts = np.zeros((B, k), np.int32)
+        for step in range(k):
+            toks, self.cache = self._decode_prog(
+                self.params, jnp.asarray(feed), self.cache,
+                jnp.asarray(pos), self.pool.block_tables(active))
+            self.host_transfers += 1
+            out = np.asarray(toks)
+            drafts[:, step] = out
+            feed[:, 0] = out
+            pos += 1
+        for slot, ctx in live:
+            self.lens[slot] = int(ctx.shape[-1]) - 1 + k
+        return {slot: drafts[slot].copy() for slot, _ in live}
+
+
+def build_drafter(spec: SpecConfig, target_cfg: ModelConfig, *,
+                  n_slots: int, n_pages: int, page_size: int):
+    """Drafter factory for the engine.
+
+    ``drafter="model"`` resolves ``draft_arch`` from the config registry;
+    when the target is a ``*-reduced`` config the draft model is reduced
+    too (same smoke-test scale) and cast to the target dtype.  The two
+    vocabularies must match — draft tokens are target token ids.
+    """
+    if spec.drafter == "ngram":
+        return NGramDrafter(spec)
+    cfg = get_config(spec.draft_arch)
+    if target_cfg.name.endswith("-reduced") and not cfg.name.endswith(
+            "-reduced"):
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, dtype=target_cfg.dtype)
+    if cfg.vocab_size != target_cfg.vocab_size:
+        raise ValueError(
+            f"draft model {cfg.name} vocab {cfg.vocab_size} != target "
+            f"{target_cfg.name} vocab {target_cfg.vocab_size}: draft "
+            "tokens must be target token ids")
+    params = init_params(jax.random.PRNGKey(spec.draft_seed), cfg)
+    return ModelDrafter(cfg, params, n_slots=n_slots,
+                        n_pages=spec.draft_n_pages or n_pages,
+                        page_size=spec.draft_page_size or page_size,
+                        draft_chunk=spec.draft_chunk)

@@ -1,0 +1,572 @@
+"""Speculative decoding: verify_draft acceptance rule, top-p sampling,
+draft/verify engine identity across attention families, KV rollback
+(truncate) under sharing/COW, drafter behavior, and scheduler charging."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.transformer import init_params
+from repro.serving.engine import RequestState, ServeConfig, ServingEngine
+from repro.serving.kv_pool import KVPool
+from repro.serving.sampling import sample_tokens, verify_draft
+from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler
+from repro.serving.speculative import ModelDrafter, NGramDrafter, SpecConfig
+
+
+def tiny_cfg(name="qwen3-1.7b"):
+    return dataclasses.replace(get_config(name).reduced(), dtype="float32")
+
+
+_PARAMS = {}
+
+
+def cached_params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[cfg.name]
+
+
+def make_engine(cfg, max_batch=2, *, spec=None, page_size=8, n_pages=32,
+                prefill_chunk=16, max_prefill_tokens=32,
+                prefix_cache=False, greedy=True, temperature=1.0,
+                top_k=0, top_p=0.0):
+    params = cached_params(cfg)
+    sc = ServeConfig(max_batch=max_batch, max_len=96,
+                     phase=PhaseAwareConfig(max_decode_batch=max_batch,
+                                            prefill_chunk=prefill_chunk,
+                                            max_prefill_tokens=max_prefill_tokens),
+                     greedy=greedy, temperature=temperature, top_k=top_k,
+                     top_p=top_p, paged=True, page_size=page_size,
+                     n_pages=n_pages, prefix_cache=prefix_cache,
+                     speculative=spec)
+    return ServingEngine(cfg, params, sc)
+
+
+def prompts(cfg, n, L, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (L,), dtype=np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# verify_draft: the acceptance rule (pure device logic)
+# ---------------------------------------------------------------------------
+
+
+def _logits_for(seq, V=16, hot=10.0):
+    """[1, C, V] logits whose argmax stream is ``seq``."""
+    out = np.zeros((1, len(seq), V), np.float32)
+    for i, t in enumerate(seq):
+        out[0, i, t] = hot
+    return jnp.asarray(out)
+
+
+def test_verify_greedy_accepts_matching_prefix():
+    # target argmax stream: [5, 6, 7]; draft proposes [5, 9]
+    logits = _logits_for([5, 6, 7])
+    toks, n = verify_draft(logits, jnp.asarray([[5, 9]]),
+                           jnp.asarray([2]), greedy=True)
+    assert int(n[0]) == 2                      # d_1 accepted + correction
+    assert np.asarray(toks)[0, :2].tolist() == [5, 6]
+
+
+def test_verify_greedy_full_acceptance_emits_bonus():
+    logits = _logits_for([5, 6, 7])
+    toks, n = verify_draft(logits, jnp.asarray([[5, 6]]),
+                           jnp.asarray([2]), greedy=True)
+    assert int(n[0]) == 3                      # both drafts + bonus
+    assert np.asarray(toks)[0].tolist() == [5, 6, 7]
+
+
+def test_verify_greedy_respects_draft_len():
+    # row padded to K=2 but only 1 valid draft: the match at j=1 must not
+    # count, and the emission is d_1 + the position-1 bonus
+    logits = _logits_for([5, 6, 7])
+    toks, n = verify_draft(logits, jnp.asarray([[5, 6]]),
+                           jnp.asarray([1]), greedy=True)
+    assert int(n[0]) == 2
+    assert np.asarray(toks)[0, :2].tolist() == [5, 6]
+
+
+def test_verify_greedy_rejection_at_first_position():
+    logits = _logits_for([5, 6, 7])
+    toks, n = verify_draft(logits, jnp.asarray([[4, 6]]),
+                           jnp.asarray([2]), greedy=True)
+    assert int(n[0]) == 1                      # nothing accepted
+    assert int(np.asarray(toks)[0, 0]) == 5    # the correction
+
+
+def test_verify_stochastic_certain_draft_always_accepts():
+    # p(draft) ~ 1 at every position -> Leviathan accepts everything and
+    # the bonus comes from the last window position
+    logits = _logits_for([5, 6, 7], hot=50.0)
+    for i in range(20):
+        toks, n = verify_draft(logits, jnp.asarray([[5, 6]]),
+                               jnp.asarray([2]), greedy=False,
+                               temperature=1.0, key=jax.random.PRNGKey(i))
+        assert int(n[0]) == 3
+        assert np.asarray(toks)[0].tolist() == [5, 6, 7]
+
+
+def test_verify_stochastic_residual_excludes_rejected_token():
+    # p(draft token) ~ 0 -> always rejected at position 0, and the
+    # residual resample (p with the draft token removed) can never emit
+    # the rejected token itself
+    logits = _logits_for([5, 6, 7], hot=50.0)
+    for i in range(50):
+        toks, n = verify_draft(logits, jnp.asarray([[9, 6]]),
+                               jnp.asarray([2]), greedy=False,
+                               temperature=1.0, key=jax.random.PRNGKey(i))
+        assert int(n[0]) == 1
+        assert int(np.asarray(toks)[0, 0]) != 9
+
+
+# ---------------------------------------------------------------------------
+# top-p (nucleus) sampling
+# ---------------------------------------------------------------------------
+
+
+def test_top_p_keeps_minimal_nucleus():
+    # probs ~ [0.5, 0.3, 0.15, 0.05]: top_p=0.6 keeps {0, 1} (the mass
+    # before token 1 is 0.5 < 0.6; before token 2 it is 0.8 >= 0.6)
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    seen = {int(sample_tokens(logits, greedy=False, temperature=1.0,
+                              top_p=0.6, key=jax.random.PRNGKey(i))[0])
+            for i in range(200)}
+    assert seen == {0, 1}
+
+
+def test_top_p_tiny_reduces_to_argmax():
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    seen = {int(sample_tokens(logits, greedy=False, temperature=1.0,
+                              top_p=1e-6, key=jax.random.PRNGKey(i))[0])
+            for i in range(50)}
+    assert seen == {0}
+
+
+def test_top_p_one_is_off():
+    # top_p >= 1 keeps the full distribution (any token reachable)
+    logits = jnp.zeros((1, 4))                 # uniform
+    seen = {int(sample_tokens(logits, greedy=False, temperature=1.0,
+                              top_p=1.0, key=jax.random.PRNGKey(i))[0])
+            for i in range(200)}
+    assert seen == {0, 1, 2, 3}
+
+
+def test_top_p_composes_with_top_k():
+    # top_k=3 first, then top_p=0.75 over the renormalized survivors:
+    # survivors {0,1,2} have probs ~[0.526, 0.316, 0.158] -> nucleus {0,1}
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    seen = {int(sample_tokens(logits, greedy=False, temperature=1.0,
+                              top_k=3, top_p=0.75,
+                              key=jax.random.PRNGKey(i))[0])
+            for i in range(200)}
+    assert seen == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# engine identity: speculative on/off, every attention family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b",       # GQA (qk_norm)
+                                  "llama2-7b",        # MHA (paper model)
+                                  "qwen3-8b",         # GQA (paper model)
+                                  "gemma3-1b",        # sliding-window ring
+                                  "deepseek-v2-236b"  # MLA latent pages
+                                  ])
+def test_spec_greedy_token_identity(arch):
+    """Greedy streams are bit-identical with speculation on or off —
+    verification accepts exactly the target's argmax prefix, whatever
+    the drafter proposes.  Short prompts so the sliding-window config
+    actually speculates inside its ring before the rollback bound."""
+    cfg = tiny_cfg(arch)
+    ps = prompts(cfg, 3, 6, seed=2)
+    outs = {}
+    for label, spec in (("off", None), ("on", SpecConfig(k=3))):
+        eng = make_engine(cfg, max_batch=2, spec=spec)
+        rs = [eng.submit(p.copy(), max_new_tokens=16) for p in ps]
+        eng.run_until_drained()
+        outs[label] = [r.generated for r in rs]
+        assert all(r.state == RequestState.DONE for r in rs)
+    assert outs["off"] == outs["on"]
+
+
+def test_spec_identity_with_prefix_cache_on_and_off():
+    """Prefix cache and speculation compose: shared-prompt requests with
+    the cache on/off and speculation on/off all emit the same greedy
+    streams, and the pool invariants survive the combination."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(3)
+    head = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+    ps = [np.concatenate([head, rng.integers(0, cfg.vocab_size, (6,),
+                                             dtype=np.int32)])
+          for _ in range(4)]
+    outs = {}
+    for label, spec, pc in (("base", None, False),
+                            ("spec", SpecConfig(k=4), False),
+                            ("spec+pc", SpecConfig(k=4), True)):
+        eng = make_engine(cfg, max_batch=2, spec=spec, n_pages=40,
+                          prefill_chunk=8, max_prefill_tokens=16,
+                          prefix_cache=pc)
+        rs = [eng.submit(p.copy(), max_new_tokens=14) for p in ps]
+        eng.run_until_drained()
+        outs[label] = [r.generated for r in rs]
+        for p in eng.pool.pools:
+            p.check_invariants()
+        if pc:
+            assert eng.prefix_stats()["hit_rate"] > 0
+    assert outs["base"] == outs["spec"] == outs["spec+pc"]
+
+
+def test_spec_rollback_never_mutates_cached_pages():
+    """Rollback under sharing: requests decode speculatively on top of an
+    attached/published prefix; rejected tokens roll back via truncate.
+    The cached pages must survive bit-intact — a LATER request matching
+    the same prefix produces exactly the cache-off stream, and the
+    cache's external pins are still conserved after the drain."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(9)
+    head = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+    ps = [np.concatenate([head, rng.integers(0, cfg.vocab_size, (5,),
+                                             dtype=np.int32)])
+          for _ in range(3)]
+    # reference: no cache, no speculation
+    eng0 = make_engine(cfg, max_batch=1, n_pages=48)
+    r0 = [eng0.submit(p.copy(), max_new_tokens=12) for p in ps]
+    eng0.run_until_drained()
+    base = [r.generated for r in r0]
+    # speculation + cache, requests SERIALIZED (max_batch=1) so later
+    # requests read pages published and speculated-over by earlier ones
+    eng = make_engine(cfg, max_batch=1, spec=SpecConfig(k=4), n_pages=48,
+                      prefix_cache=True)
+    rs = [eng.submit(p.copy(), max_new_tokens=12) for p in ps]
+    eng.run_until_drained()
+    assert [r.generated for r in rs] == base
+    assert eng.prefix_stats()["hit_rate"] > 0     # later reqs hit the cache
+    assert eng.spec_stats()["windows"] > 0        # and speculation ran
+    for p in eng.pool.pools:
+        p.check_invariants()
+        # after the drain only cache pins hold pages: every live page is
+        # externally referenced (nothing leaked by truncate)
+        live = np.nonzero(p.ref > 0)[0]
+        assert all(p.external[q] > 0 for q in live)
+
+
+def test_spec_pool_returns_clean_after_drain():
+    cfg = tiny_cfg()
+    eng = make_engine(cfg, max_batch=2, spec=SpecConfig(k=4), n_pages=24)
+    for p in prompts(cfg, 3, 10, seed=4):
+        eng.submit(p, max_new_tokens=10)
+    eng.run_until_drained()
+    assert eng.pool.free_pages() == 24            # no page leaked
+    for p in eng.pool.pools:
+        p.check_invariants()
+    # the model-free drafter holds nothing either
+    assert isinstance(eng.drafter, NGramDrafter)
+
+
+def test_spec_eos_and_max_new_clip_inside_windows():
+    """A window may emit several tokens; eos and max_new must clip the
+    emission exactly where non-speculative decode would stop."""
+    cfg = tiny_cfg()
+    p = prompts(cfg, 1, 10, seed=5)[0]
+    probe = make_engine(cfg, max_batch=1)
+    r = probe.submit(p.copy(), max_new_tokens=12)
+    probe.run_until_drained()
+    eos = r.generated[6]
+    want = r.generated[: r.generated.index(eos) + 1]
+    eng = make_engine(cfg, max_batch=1, spec=SpecConfig(k=4))
+    rs = eng.submit(p.copy(), max_new_tokens=12, eos_id=eos)
+    eng.run_until_drained()
+    assert rs.generated == want
+    # max_new smaller than a full window
+    eng = make_engine(cfg, max_batch=1, spec=SpecConfig(k=4))
+    rs = eng.submit(p.copy(), max_new_tokens=3)
+    eng.run_until_drained()
+    assert rs.generated == r.generated[:3]
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NGramDrafter(SpecConfig(k=4, ngram_max=3, ngram_min=1))
+    # suffix [7, 8] occurred earlier, followed by [9, 1, 2, 3]
+    ctx = np.asarray([7, 8, 9, 1, 2, 3, 7, 8], np.int32)
+    out = d._propose_one(ctx, 4)
+    assert out.tolist() == [9, 1, 2, 3]
+    # most RECENT occurrence wins
+    ctx = np.asarray([5, 1, 5, 2, 5], np.int32)
+    assert d._propose_one(ctx, 2).tolist() == [2, 5][:2]
+    # no recurring n-gram: no proposal
+    assert d._propose_one(np.arange(8, dtype=np.int32), 4).size == 0
+
+
+def test_ngram_acceptance_positive_on_repetitive_stream():
+    """The acceptance-rate sanity check: greedy decode of the tiny model
+    falls into loops, and prompt-lookup drafting feeds on them — over a
+    long generation the n-gram drafter must land >> 0 acceptance and
+    push mean tokens per (request, decode-tick) above 1."""
+    cfg = tiny_cfg()
+    eng = make_engine(cfg, max_batch=2, spec=SpecConfig(k=4), n_pages=64,
+                      prefill_chunk=32, max_prefill_tokens=64)
+    for p in prompts(cfg, 3, 16, seed=0):
+        eng.submit(p, max_new_tokens=40)
+    eng.run_until_drained()
+    ss = eng.spec_stats()
+    assert ss["windows"] > 0 and ss["drafted"] > 0
+    assert ss["acceptance_rate"] > 0.02
+    assert ss["tokens_per_tick"] > 1.0
+
+
+def test_model_drafter_self_draft_acceptance():
+    """Self-drafting (draft model == target model, same seed) is the
+    acceptance ceiling: the drafter's greedy stream IS the target's, so
+    acceptance should be ~1 and windows commit k+1 tokens — and the
+    token stream still matches non-speculative decode exactly."""
+    cfg = tiny_cfg()
+    ps = prompts(cfg, 2, 12, seed=6)
+    base_eng = make_engine(cfg, max_batch=2, n_pages=48)
+    rb = [base_eng.submit(p.copy(), max_new_tokens=16) for p in ps]
+    base_eng.run_until_drained()
+    spec = SpecConfig(k=4, drafter="model", draft_arch="qwen3-1.7b",
+                      draft_seed=0)
+    eng = make_engine(cfg, max_batch=2, spec=spec, n_pages=48)
+    rs = [eng.submit(p.copy(), max_new_tokens=16) for p in ps]
+    eng.run_until_drained()
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+    ss = eng.spec_stats()
+    assert ss["acceptance_rate"] > 0.5
+    assert ss["tokens_per_tick"] > 2.0
+    # the draft pool drains clean too
+    assert eng.drafter.pool.free_pages() == eng.drafter.pool.n_pages
+
+
+def test_spec_identity_at_pool_length_bound():
+    """Regression: a fully-accepted window landing exactly at the pool's
+    length bound must still emit EVERY accepted token before retiring —
+    the position-bound retire check fires after the emission loop, not
+    inside it (the window commits its slot_pos jump up front, so an
+    in-loop _finished() would break after one token and drop the rest).
+    Self-drafting keeps acceptance ~1 so the final window is full."""
+    cfg = tiny_cfg()
+    ps = prompts(cfg, 1, 10, seed=8)
+    outs = {}
+    spec = SpecConfig(k=4, drafter="model", draft_arch="qwen3-1.7b",
+                      draft_seed=0)
+    for label, sp in (("off", None), ("on", spec)):
+        # 8 pages x 4 = a 32-token length bound the request must hit
+        eng = make_engine(cfg, max_batch=1, spec=sp, page_size=4,
+                          n_pages=8)
+        r = eng.submit(ps[0].copy(), max_new_tokens=40)
+        eng.run_until_drained()
+        assert r.state == RequestState.DONE
+        outs[label] = r.generated
+    assert len(outs["off"]) == 32 - 10          # bound-limited, not max_new
+    assert outs["off"] == outs["on"]
+
+
+def test_model_drafter_ring_guard():
+    """The draft pool rolls back after every verify just like the target
+    arena, so a sliding-window draft arch must stop drafting at its own
+    ring span — writing past it would clobber live draft context that
+    truncate cannot restore (acceptance would silently collapse)."""
+    cfg = tiny_cfg("gemma3-1b")
+    drafter = ModelDrafter(cfg, cached_params(cfg), n_slots=1, n_pages=8,
+                           page_size=4)
+    assert drafter._safe_len == cfg.attn.sliding_window
+    long_ctx = np.arange(20, dtype=np.int32)    # T-1+k = 23 > ring 16
+    assert drafter.propose_batch([(0, 1, long_ctx)], 4) == {}
+    short_ctx = np.arange(8, dtype=np.int32)    # T-1+k = 11 <= 16
+    out = drafter.propose_batch([(0, 1, short_ctx)], 4)
+    assert 0 in out and out[0].shape == (4,)
+    for p in drafter.pool.pools:
+        p.check_invariants()
+
+
+def test_model_drafter_bounded_catch_up():
+    """A slot far behind the committed context (fresh slot, resume after
+    preemption) catches up one bounded chunk per tick — never a single
+    unbounded prompt-sized prefill mid-decode — and only drafts once
+    caught up."""
+    cfg = tiny_cfg()
+    drafter = ModelDrafter(cfg, cached_params(cfg), n_slots=1, n_pages=16,
+                           page_size=4, draft_chunk=4)
+    ctx = np.asarray(prompts(cfg, 1, 12, seed=1)[0])
+    assert drafter.propose_batch([(0, 1, ctx)], 3) == {}   # 4 of 11 tokens
+    assert int(drafter.lens[0]) == 4
+    assert drafter.propose_batch([(0, 1, ctx)], 3) == {}   # 8 of 11
+    assert int(drafter.lens[0]) == 8
+    out = drafter.propose_batch([(0, 1, ctx)], 3)          # caught up
+    assert 0 in out and out[0].shape == (3,)
+    # pool holds ctx[:11] plus the 3 fed tokens (ctx[-1] + 2 drafts)
+    assert int(drafter.lens[0]) == 11 + 3
+
+
+def test_spec_identity_under_preemption_pressure():
+    """Speculation + pool exhaustion + preemption still reproduce the
+    non-speculative stream, and occupancy is counted at emission so
+    tokens_per_tick never dips below the 1.0 non-speculative floor."""
+    cfg = tiny_cfg()
+    ps = prompts(cfg, 3, 14, seed=7)
+    outs = {}
+    for label, spec in (("off", None), ("on", SpecConfig(k=3))):
+        eng = make_engine(cfg, max_batch=3, spec=spec, n_pages=6,
+                          prefill_chunk=8, max_prefill_tokens=16)
+        rs = [eng.submit(p.copy(), max_new_tokens=12) for p in ps]
+        eng.run_until_drained(max_ticks=500)
+        assert all(r.state == RequestState.DONE for r in rs)
+        outs[label] = [r.generated for r in rs]
+        assert eng.spec_stats()["tokens_per_tick"] >= 1.0
+        assert eng.preemptions > 0          # the pool really was starved
+    assert outs["off"] == outs["on"]
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(drafter="oracle")
+    with pytest.raises(ValueError):
+        SpecConfig(drafter="model")               # needs draft_arch
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=2, ngram_max=1)
+
+
+def test_spec_requires_paged():
+    cfg = tiny_cfg()
+    params = cached_params(cfg)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, ServeConfig(
+            max_batch=2, max_len=64,
+            phase=PhaseAwareConfig(max_decode_batch=2),
+            speculative=SpecConfig(k=4)))
+
+
+# ---------------------------------------------------------------------------
+# KVPool.truncate: rollback accounting
+# ---------------------------------------------------------------------------
+
+
+def test_truncate_frees_only_whole_rejected_pages():
+    cfg = tiny_cfg()
+    pool = KVPool(cfg, n_slots=2, n_pages=8, page_size=4)
+    assert pool.grow(0, 10)                       # 3 pages
+    assert pool.truncate(0, 9) == 0               # same page count
+    assert pool.truncate(0, 8) == len(pool.pools)  # 1 page per run
+    assert pool.len_of(0) == 8
+    with pytest.raises(ValueError):
+        pool.truncate(0, 9)                       # cannot grow via truncate
+    for p in pool.pools:
+        p.check_invariants()
+
+
+def test_truncate_respects_shared_and_pinned_pages():
+    """A rejected token never frees a page its sharers or the prefix
+    cache still hold: truncating the speculating slot drops only ITS
+    references."""
+    cfg = tiny_cfg()
+    pool = KVPool(cfg, n_slots=2, n_pages=8, page_size=4)
+    assert pool.grow(0, 8)
+    pages = pool.prefix_pages(0, 8)
+    pool.attach(1, pages, 8)                      # slot 1 shares both pages
+    for r, pp in enumerate(pages):
+        pool.retain(r, pp[0])                     # cache pins page 0
+    assert pool.truncate(1, 0) == 0               # shared: nothing frees
+    # page 1 is now slot-0-only: truncating slot 0 below it frees it
+    assert pool.truncate(0, 4) == len(pool.pools)
+    assert pool.len_of(0) == 4
+    pool.release(0)
+    # page 0 is still pinned by the cache reference
+    for r, pp in enumerate(pages):
+        assert int(pool.pools[r].ref[pp[0]]) == 1
+        pool.release_ref(r, pp[0])
+    assert pool.free_pages() == 8
+    for p in pool.pools:
+        p.check_invariants()
+
+
+def test_rollback_bound_ring_vs_full():
+    ring_cfg = tiny_cfg("gemma3-1b")              # mixed local/global
+    pool = KVPool(ring_cfg, n_slots=1, n_pages=8, page_size=4)
+    assert pool.rollback_bound() == ring_cfg.attn.sliding_window
+    full_cfg = tiny_cfg()                         # pure GQA
+    pool = KVPool(full_cfg, n_slots=1, n_pages=8, page_size=4)
+    assert pool.rollback_bound() == pool.length_bound
+
+
+def test_headroom_reserves_spec_growth():
+    cfg = tiny_cfg()
+    pool = KVPool(cfg, n_slots=2, n_pages=8, page_size=4)
+    assert pool.grow(0, 4)                        # page-aligned decode slot
+    # one-token growth needs 1 fresh page; a k=4 verify window (5 tokens)
+    # needs 2 — the reservation shrinks prefill headroom accordingly
+    assert pool.headroom_pages([4], growth=1) == 6
+    assert pool.headroom_pages([4], growth=5) == 5
+
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.integers(0, 3),              # 0 grow, 1 truncate,
+                                                  # 2 release, 3 attach
+                  st.integers(0, 2),              # slot
+                  st.integers(0, 40)),            # length / target
+        max_size=40))
+    def test_truncate_interleavings_conserve_refcounts(ops):
+        """ANY interleaving of grow/truncate/release/attach (the whole
+        speculative lifecycle: window claim, rejection rollback, retire,
+        prefix share) preserves every run pool's refcount conservation —
+        rings and position-indexed runs alike (gemma3's mixed plan)."""
+        cfg = tiny_cfg("gemma3-1b")
+        pool = KVPool(cfg, n_slots=3, n_pages=8, page_size=4)
+        for kind, slot, arg in ops:
+            if kind == 0:
+                pool.grow(slot, pool.len_of(slot) + arg)
+            elif kind == 1:
+                pool.truncate(slot, min(pool.len_of(slot), arg))
+            elif kind == 2:
+                pool.release(slot)
+            else:
+                src = (slot + 1) % 3
+                span = min(pool.len_of(src), pool.shareable_capacity())
+                span -= span % pool.page_size
+                if span > 0 and pool.len_of(slot) == 0:
+                    pool.attach(slot, pool.prefix_pages(src, span), span)
+            for p in pool.pools:
+                p.check_invariants()
+        for p in pool.pools:
+            assert p.used_pages() + p.free_pages() == p.n_pages
+
+
+# ---------------------------------------------------------------------------
+# scheduler: verify windows are planned onto the CiM-analogue group
+# ---------------------------------------------------------------------------
+
+
+def test_plan_tick_stamps_spec_window_and_verify_group():
+    for strategy, vg in (("halo", "prefill"), ("cent", "decode"),
+                         ("attacc", "prefill")):
+        s = PhaseScheduler(PhaseAwareConfig(strategy))
+        plan = s.plan_tick([], [1, 2], spec_k=4)
+        assert plan.spec_k == 4
+        assert plan.verify_group == vg            # verify = prefill-shaped
+        assert plan.decode_reqs == [1, 2]
+    assert PhaseScheduler(PhaseAwareConfig("halo")).plan_tick(
+        [], []).spec_k == 0
