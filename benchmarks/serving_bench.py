@@ -21,7 +21,18 @@ engine rather than the analytical model:
     and self-draft model drafters against the non-speculative baseline:
     acceptance rate, tokens per decode tick, TPOT, with greedy token
     identity asserted across all configurations (``--speculative``;
-    the multi-token decode path of docs/serving.md §Speculative).
+    the multi-token decode path of docs/serving.md §Speculative);
+  * the request-centric API — a mixed greedy/stochastic batch (per-
+    request SamplingParams in one program per tick; greedy rows must
+    match the all-greedy reference bit-exactly and the host-transfer
+    count must not grow), incremental streaming (RequestOutputs arrive
+    BEFORE the engine drains), and abort (pages return to the pool,
+    surviving streams unchanged, finish reasons surfaced).
+
+Latency stats are NaN-guarded: a request that never emitted a token
+(max_new_tokens=0, aborted before its first token) reports NaN
+ttft/tpot and is excluded from the percentiles; its finish_reason is
+reported instead.
 
 Also reports the per-tick decode wall time at max_batch=8 — the number
 device-side sampling improves (one host transfer per tick instead of one
@@ -44,6 +55,13 @@ import jax
 import numpy as np
 
 Row = Tuple[str, float, str, str]
+
+
+def _p50(xs) -> float:
+    """NaN-guarded median: requests that never emitted a token carry NaN
+    ttft/tpot (see Request.ttft) and are excluded; all-NaN -> NaN."""
+    xs = [x for x in xs if not np.isnan(x)]
+    return float(np.median(xs)) if xs else float("nan")
 
 
 def _cfg_params():
@@ -100,10 +118,10 @@ def bench_serving() -> List[Row]:
         eng, done, wall = _run(cfg, params, strategy=strategy)
         toks = sum(len(r.generated) for r in done)
         rows.append((f"serve.{strategy}.ttft_p50_ms",
-                     float(np.median([r.ttft for r in done])) * 1e3,
+                     _p50([r.ttft for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"serve.{strategy}.tpot_p50_ms",
-                     float(np.median([r.tpot for r in done])) * 1e3,
+                     _p50([r.tpot for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"serve.{strategy}.throughput",
                      toks / wall, "tok/s", ""))
@@ -126,10 +144,10 @@ def bench_chunked_prefill() -> List[Row]:
                                max_prefill_tokens=budget)
         toks = sum(len(r.generated) for r in done)
         rows.append((f"serve.{label}.ttft_p50_ms",
-                     float(np.median([r.ttft for r in done])) * 1e3,
+                     _p50([r.ttft for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"serve.{label}.tpot_p50_ms",
-                     float(np.median([r.tpot for r in done])) * 1e3,
+                     _p50([r.tpot for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"serve.{label}.throughput", toks / wall, "tok/s", ""))
         rows.append((f"serve.{label}.mixed_tick_frac",
@@ -178,10 +196,10 @@ def bench_paged_vs_dense() -> List[Row]:
             toks = sum(len(r.generated) for r in done)
             pre = f"serve.{label}.ctx{plen}"
             rows.append((f"{pre}.ttft_p50_ms",
-                         float(np.median([r.ttft for r in done])) * 1e3,
+                         _p50([r.ttft for r in done]) * 1e3,
                          "ms", ""))
             rows.append((f"{pre}.tpot_p50_ms",
-                         float(np.median([r.tpot for r in done])) * 1e3,
+                         _p50([r.tpot for r in done]) * 1e3,
                          "ms", ""))
             rows.append((f"{pre}.throughput", toks / wall, "tok/s", ""))
             rows.append((f"{pre}.kv_reserved_mb",
@@ -212,7 +230,7 @@ def bench_prefix_cache() -> List[Row]:
         ps = eng.prefix_stats()
         pre = f"serve.prefix.{label}"
         rows.append((f"{pre}.ttft_p50_ms",
-                     float(np.median([r.ttft for r in done])) * 1e3,
+                     _p50([r.ttft for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"{pre}.prefill_tokens_executed",
                      ps["prefill_tokens_executed"], "tok", ""))
@@ -254,7 +272,7 @@ def bench_speculative() -> List[Row]:
         ss = eng.spec_stats()
         pre = f"serve.spec.{label}"
         rows.append((f"{pre}.tpot_p50_ms",
-                     float(np.median([r.tpot for r in done])) * 1e3,
+                     _p50([r.tpot for r in done]) * 1e3,
                      "ms", ""))
         rows.append((f"{pre}.tokens_per_tick", ss["tokens_per_tick"],
                      "tok", ""))
@@ -268,8 +286,110 @@ def bench_speculative() -> List[Row]:
     return rows
 
 
+def bench_request_api() -> List[Row]:
+    """Request-centric API smoke: mixed per-request sampling, streaming,
+    and abort — asserting its correctness invariants inline (this is the
+    tier-2 CI streaming + abort leg):
+
+    * a batch interleaving greedy and stochastic requests (per-request
+      ``SamplingParams`` inside ONE jitted program per tick) leaves the
+      greedy rows bit-identical to the all-greedy run, with NO extra
+      host transfers for an equal-tick run;
+    * incremental ``RequestOutput``s arrive BEFORE the engine drains
+      (streaming, not batch-at-the-end);
+    * aborting a request mid-decode frees its pages back to the pool and
+      leaves the surviving streams bit-identical; finish reasons are
+      reported.
+    """
+    from repro.serving import SamplingParams, ServeConfig, ServingEngine
+    from repro.serving.scheduler import PhaseAwareConfig
+
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+
+    def mk():
+        return ServingEngine(cfg, params, ServeConfig(
+            max_batch=4, max_len=96,
+            phase=PhaseAwareConfig(max_decode_batch=4, prefill_chunk=16,
+                                   max_prefill_tokens=32),
+            paged=True, page_size=8, n_pages=64))
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+               for _ in range(6)]
+    max_new = 10
+
+    # all-greedy reference
+    eng0 = mk()
+    ref = eng0.generate([p.copy() for p in prompts],
+                        SamplingParams(max_new_tokens=max_new))
+    ref_streams = [r.generated for r in ref]
+
+    # mixed batch: odd requests stochastic, even greedy
+    eng1 = mk()
+    sps = [SamplingParams(max_new_tokens=max_new) if i % 2 == 0 else
+           SamplingParams(temperature=0.8, seed=50 + i,
+                          max_new_tokens=max_new)
+           for i in range(len(prompts))]
+    t0 = time.monotonic()
+    mixed = eng1.generate([p.copy() for p in prompts], sps)
+    wall = time.monotonic() - t0
+    for i, r in enumerate(mixed):
+        if sps[i].greedy:
+            assert r.generated == ref_streams[i], (
+                f"mixed-sampling batch changed greedy row {i}")
+    assert eng1.n_ticks == eng0.n_ticks, "mixed batch changed tick count"
+    assert eng1.host_transfers == eng0.host_transfers, (
+        "per-request sampling added host transfers "
+        f"({eng1.host_transfers} vs {eng0.host_transfers})")
+    rows.append(("serve.api.mixed.ttft_p50_ms",
+                 _p50([r.ttft for r in mixed]) * 1e3, "ms", ""))
+    rows.append(("serve.api.mixed.throughput",
+                 sum(len(r.generated) for r in mixed) / wall, "tok/s", ""))
+    rows.append(("serve.api.mixed.host_transfers",
+                 float(eng1.host_transfers), "count", ""))
+
+    # streaming + abort: outputs must arrive before drain; the aborted
+    # request's pages return; survivors are bit-identical
+    eng2 = mk()
+    reqs = [eng2.submit(p.copy(),
+                        sampling=SamplingParams(max_new_tokens=max_new))
+            for p in prompts]
+    victim = reqs[2]
+    incremental, aborted_at = 0, -1
+    for out in eng2.stream():
+        if not out.finished:
+            incremental += 1
+        if out.req_id == victim.req_id and out.n_generated >= 3 \
+                and victim.finish_reason is None:
+            assert eng2.abort(victim.req_id).finish_reason == "abort"
+            aborted_at = eng2.pool.free_pages()
+    assert incremental > 0, "no incremental output arrived before drain"
+    assert victim.finish_reason == "abort"
+    assert eng2.pool.free_pages() > aborted_at or \
+        eng2.pool.free_pages() == eng2.pool.n_pages, "abort leaked pages"
+    assert eng2.pool.free_pages() == eng2.pool.n_pages, (
+        "pages not fully recovered after drain")
+    for i, r in enumerate(reqs):
+        if r is not victim:
+            assert r.generated == ref_streams[i], (
+                f"abort changed surviving stream {i}")
+    reasons = {}
+    for r in eng2.done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    for reason in ("length", "eos", "stop", "abort"):
+        rows.append((f"serve.api.finish.{reason}",
+                     float(reasons.get(reason, 0)), "count", ""))
+    rows.append(("serve.api.streamed_outputs", float(incremental),
+                 "count", ""))
+    rows.append(("serve.api.abort.ttft_p50_ms",
+                 _p50([r.ttft for r in eng2.done]) * 1e3, "ms", ""))
+    return rows
+
+
 ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick,
-       bench_paged_vs_dense, bench_prefix_cache, bench_speculative]
+       bench_paged_vs_dense, bench_prefix_cache, bench_speculative,
+       bench_request_api]
 
 
 def main(argv=None) -> int:
@@ -288,7 +408,8 @@ def main(argv=None) -> int:
     if args.speculative:
         suites = [bench_speculative]
     elif args.quick:
-        suites = [bench_paged_vs_dense, bench_prefix_cache]
+        suites = [bench_paged_vs_dense, bench_prefix_cache,
+                  bench_request_api]
     else:
         suites = ALL
     rows: List[Row] = []
@@ -324,8 +445,15 @@ def main(argv=None) -> int:
         assert (vals["serve.prefix.cache_on.prefill_tokens_executed"]
                 < vals["serve.prefix.cache_off.prefill_tokens_executed"]), \
             "prefix cache did not reduce executed prefill tokens"
+        assert vals["serve.api.streamed_outputs"] > 0, \
+            "no incremental RequestOutput arrived before drain"
+        assert vals["serve.api.finish.abort"] == 1, \
+            "the aborted request did not finish with reason 'abort'"
         print("# quick smoke OK: paged peak-resident < dense reservation; "
-              "prefix cache hit and skipped prefill work", file=sys.stderr)
+              "prefix cache hit and skipped prefill work; mixed-sampling "
+              "greedy rows identical at equal host transfers; streaming "
+              "outputs arrived pre-drain; abort freed its pages",
+              file=sys.stderr)
     return 0
 
 

@@ -1,0 +1,62 @@
+"""Lint check: ``repro.serving.__all__`` must exactly match the names the
+package publicly re-exports.
+
+Pure AST — no imports of the package (the CI lint job has no jax), so it
+parses ``src/repro/serving/__init__.py`` and compares the ``__all__``
+literal against every public name bound at module top level (imports and
+assignments).  A name imported but not listed, or listed but never
+bound, fails the job; so does an unsorted or duplicated ``__all__``.
+
+  python scripts/check_serving_all.py
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+INIT = Path(__file__).resolve().parent.parent / "src/repro/serving/__init__.py"
+
+
+def main() -> int:
+    tree = ast.parse(INIT.read_text())
+    declared: list[str] = []
+    bound: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                name = alias.asname or alias.name.split(".")[0]
+                if not name.startswith("_"):
+                    bound.add(name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    if tgt.id == "__all__":
+                        declared = [ast.literal_eval(e)
+                                    for e in node.value.elts]
+                    elif not tgt.id.startswith("_"):
+                        bound.add(tgt.id)
+    errors = []
+    if not declared:
+        errors.append("no __all__ literal found")
+    missing = bound - set(declared)
+    if missing:
+        errors.append(f"bound but not in __all__: {sorted(missing)}")
+    phantom = set(declared) - bound
+    if phantom:
+        errors.append(f"in __all__ but never bound: {sorted(phantom)}")
+    if len(declared) != len(set(declared)):
+        errors.append("__all__ has duplicates")
+    if declared != sorted(declared):
+        errors.append("__all__ is not sorted")
+    if errors:
+        for e in errors:
+            print(f"check_serving_all: {INIT}: {e}", file=sys.stderr)
+        return 1
+    print(f"check_serving_all: OK ({len(declared)} exported names)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,14 @@ hit, and the report adds hit rate + prefill tokens skipped.
 (serving/speculative.py): ``--spec-k`` draft tokens per decode tick from
 the model-free n-gram drafter, or from a small draft model with
 ``--draft <arch>``; the report adds acceptance rate and tokens/tick.
+
+Sampling is PER REQUEST (``SamplingParams``): ``--temperature 0`` IS
+greedy — the CLI no longer rewrites 0 to 1e-6 — and ``--temperature``,
+``--top-k``, ``--top-p``, ``--stop-token`` (repeatable) apply to every
+request.  ``--mixed-sampling`` makes odd-indexed requests sample at the
+given temperature while even-indexed ones stay greedy — a mixed batch
+runs in ONE program per tick, and the report's finish-reason counts
+show what ended each stream.
 """
 
 from __future__ import annotations
@@ -48,11 +56,21 @@ def main(argv=None) -> int:
     ap.add_argument("--max-prefill-tokens", type=int, default=8192,
                     help="per-tick prefill token budget")
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy; > 0 enables device-side sampling")
+                    help="0 = greedy; > 0 enables device-side sampling "
+                         "(per-request SamplingParams — no epsilon rewrite)")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0,
                     help="nucleus sampling threshold (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    metavar="ID",
+                    help="extra stop-token id (repeatable; finish reason "
+                         "'stop')")
+    ap.add_argument("--mixed-sampling", action="store_true",
+                    help="odd-indexed requests sample at --temperature, "
+                         "even-indexed ones stay greedy (exercises "
+                         "per-request sampling heterogeneity in one "
+                         "program)")
     ap.add_argument("--speculative", action="store_true",
                     help="speculative decoding: draft/verify loop over "
                          "the paged arena (paged only)")
@@ -82,6 +100,9 @@ def main(argv=None) -> int:
     if args.speculative and not args.paged:
         ap.error("--speculative requires --paged (the draft/verify loop "
                  "runs over the paged arena)")
+    if args.mixed_sampling and args.temperature <= 0.0:
+        ap.error("--mixed-sampling needs --temperature > 0 (the stochastic "
+                 "half samples at that temperature)")
     if args.spec_k is None:
         args.spec_k = 4
 
@@ -89,6 +110,7 @@ def main(argv=None) -> int:
     from repro.configs.base import get_config
     from repro.models.transformer import init_params
     from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.sampling import SamplingParams
     from repro.serving.scheduler import PhaseAwareConfig
 
     cfg = get_config(args.arch)
@@ -110,9 +132,7 @@ def main(argv=None) -> int:
                                max_decode_batch=args.max_batch,
                                prefill_chunk=args.prefill_chunk,
                                max_prefill_tokens=args.max_prefill_tokens),
-        greedy=args.temperature <= 0.0,
-        temperature=max(args.temperature, 1e-6),
-        top_k=args.top_k, top_p=args.top_p, seed=args.seed,
+        seed=args.seed,
         paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
         kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache,
         speculative=spec)
@@ -122,6 +142,7 @@ def main(argv=None) -> int:
     shared = rng.integers(0, cfg.vocab_size,
                           (min(args.shared_prefix, args.prompt_len),),
                           dtype=np.int32)
+    stop = tuple(args.stop_token)
     t0 = time.monotonic()
     for i in range(args.requests):
         L = args.prompt_len
@@ -132,22 +153,44 @@ def main(argv=None) -> int:
             tail = rng.integers(0, cfg.vocab_size, (L - len(shared),),
                                 dtype=np.int32)
             prompt = np.concatenate([shared, tail])
-        engine.submit(prompt, max_new_tokens=args.max_new)
+        # per-request sampling: --temperature 0 IS greedy (no 1e-6
+        # rewrite); --mixed-sampling keeps even-indexed requests greedy
+        temp = args.temperature
+        if args.mixed_sampling and i % 2 == 0:
+            temp = 0.0
+        engine.submit(prompt, sampling=SamplingParams(
+            temperature=temp, top_k=args.top_k, top_p=args.top_p,
+            seed=args.seed + i, max_new_tokens=args.max_new, stop=stop))
     done = engine.run_until_drained()
     wall = time.monotonic() - t0
 
-    ttfts = [r.ttft for r in done]
-    tpots = [r.tpot for r in done]
+    # NaN-guarded latency stats: a request that never emitted a token
+    # (max_new 0, abort, stop on submit) reports NaN ttft/tpot and is
+    # excluded here; its finish_reason is surfaced below instead
+    ttfts = [r.ttft for r in done if not np.isnan(r.ttft)]
+    tpots = [r.tpot for r in done if not np.isnan(r.tpot)]
+    reasons = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
     total_new = sum(len(r.generated) for r in done)
     occ = engine.phase_occupancy()
     decode_ticks = [t.wall_s for t in engine.tick_log
                     if t.decode_reqs and not t.prefill_reqs]
+    mode_s = "mixed" if args.mixed_sampling else (
+        "greedy" if args.temperature <= 0.0 else
+        f"t={args.temperature}")
+    reasons_s = " ".join(f"{k}={v}" for k, v in sorted(
+        reasons.items(), key=lambda kv: str(kv[0])))
     print(f"arch={cfg.name} strategy={args.strategy} "
           f"chunk={args.prefill_chunk} chunked={engine.chunked} "
+          f"sampling={mode_s} "
           f"requests={len(done)} tokens={total_new} wall={wall:.2f}s")
-    print(f"TTFT p50={np.median(ttfts)*1e3:.1f}ms  "
-          f"TPOT p50={np.median(tpots)*1e3:.1f}ms  "
-          f"throughput={total_new / wall:.1f} tok/s")
+    ttft_p50 = np.median(ttfts) * 1e3 if ttfts else float("nan")
+    tpot_p50 = np.median(tpots) * 1e3 if tpots else float("nan")
+    print(f"TTFT p50={ttft_p50:.1f}ms  "
+          f"TPOT p50={tpot_p50:.1f}ms  "
+          f"throughput={total_new / wall:.1f} tok/s  "
+          f"finish[{reasons_s}]")
     print(f"ticks={engine.n_ticks} "
           f"occupancy prefill={occ['prefill']:.2f} decode={occ['decode']:.2f} "
           f"mixed={occ['mixed']:.2f}  "

@@ -1,20 +1,49 @@
 """Phase-disaggregated serving: the engine EXECUTES the scheduler's TickPlan
 — chunked prefill packed into one batch per tick, K/V written directly into
 the decode arena (the HALO CiM -> CiD handoff), device-side sampling (one
-host transfer per tick), and strategy-routed worker-group programs.  See
-docs/serving.md for the tick loop and its mapping onto the paper."""
+host transfer per tick), and strategy-routed worker-group programs.
+
+The public surface is REQUEST-centric: ``submit(prompt, sampling=
+SamplingParams(...))`` takes per-request sampling/termination parameters
+(temperature=0 is greedy), ``step()`` returns incremental
+``RequestOutput``s, ``stream()``/``generate()`` are the streaming/batch
+facades, and ``abort(req_id)`` cancels a request at any lifecycle stage.
+See docs/serving.md for the tick loop and its mapping onto the paper."""
 
 from repro.serving.engine import (
     Request,
+    RequestOutput,
     RequestState,
     ServeConfig,
     ServingEngine,
     TickRecord,
 )
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.sampling import sample_tokens
+from repro.serving.sampling import (
+    SamplingParams,
+    sample_tokens,
+    sample_tokens_rows,
+    verify_draft,
+    verify_draft_rows,
+)
 from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
+from repro.serving.speculative import SpecConfig
 
-__all__ = ["Request", "RequestState", "ServeConfig", "ServingEngine",
-           "TickRecord", "TickPlan", "PhaseScheduler", "PhaseAwareConfig",
-           "PrefixCache", "sample_tokens"]
+__all__ = [
+    "PhaseAwareConfig",
+    "PhaseScheduler",
+    "PrefixCache",
+    "Request",
+    "RequestOutput",
+    "RequestState",
+    "SamplingParams",
+    "ServeConfig",
+    "ServingEngine",
+    "SpecConfig",
+    "TickPlan",
+    "TickRecord",
+    "sample_tokens",
+    "sample_tokens_rows",
+    "verify_draft",
+    "verify_draft_rows",
+]

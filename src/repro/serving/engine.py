@@ -71,6 +71,21 @@ Greedy streams are bit-identical with speculation on or off; only the
 number of ticks changes.  See serving/speculative.py and
 docs/serving.md §Speculative decoding.
 
+THE REQUEST API: the unit of the serving interface is the REQUEST, not
+the batch run.  ``submit(prompt, sampling=SamplingParams(...))`` carries
+per-request temperature (0 = greedy) / top-k / top-p / seed / token
+budget / stop conditions; the jitted phase programs take per-slot ``[B]``
+parameter arrays so one compiled program serves a batch mixing greedy
+and stochastic requests (greedy rows bit-identical to an all-greedy
+run), still one host transfer per tick.  ``step()`` returns incremental
+``RequestOutput``s (new tokens, cumulative counts, finish reason:
+length/eos/stop/abort) and ``stream()`` / ``generate()`` are the
+streaming/batch facades over the tick loop.  ``abort(req_id)`` cancels a
+request at ANY lifecycle stage — WAITING, PREFILLING, or DECODING
+(speculative verify state included) — releasing its pages, prefix-cache
+attachments, and draft-pool state.  The old engine-wide ``ServeConfig``
+sampling fields survive as deprecated per-request defaults.
+
 This is a single-host engine; launch/serve.py instantiates it either on
 the host CPU (examples, tests) or under the production mesh with the
 decode shardings from distributed/sharding.py.
@@ -79,10 +94,14 @@ decode shardings from distributed/sharding.py.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from enum import Enum
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import (
+    Any, Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple,
+    Union,
+)
 
 import jax
 import jax.numpy as jnp
@@ -99,7 +118,13 @@ from repro.models.transformer import (
 )
 from repro.serving.kv_pool import KVPool
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.sampling import sample_tokens, verify_draft
+from repro.serving.sampling import (
+    SamplingParams,
+    row_keys,
+    sample_tokens_rows,
+    verify_draft,
+    verify_draft_rows,
+)
 from repro.serving.scheduler import (
     PhaseAwareConfig,
     PhaseScheduler,
@@ -120,11 +145,12 @@ class RequestState(Enum):
 class Request:
     req_id: int
     prompt: np.ndarray                  # [T] int32 (or [K, T])
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     # filled by the engine
     state: RequestState = RequestState.WAITING
     generated: List[Any] = field(default_factory=list)
+    finish_reason: Optional[str] = None  # "length"|"eos"|"stop"|"abort"
+    seed: int = 0                       # effective per-request PRNG seed
     slot: int = -1
     prompt_len: int = 0
     prefill_pos: int = 0                # prompt tokens already in the arena
@@ -135,13 +161,49 @@ class Request:
     t_done: float = 0.0
 
     @property
+    def max_new_tokens(self) -> int:
+        return self.sampling.max_new_tokens
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.sampling.eos_id
+
+    @property
     def ttft(self) -> float:
+        """Time to first token; NaN for a request that never emitted one
+        (max_new_tokens=0, aborted pre-first-token) — the old sentinel
+        arithmetic returned a large negative number instead."""
+        if self.t_first_token <= 0.0:
+            return float("nan")
         return self.t_first_token - self.t_submit
 
     @property
     def tpot(self) -> float:
+        """Time per output token after the first; NaN when undefined
+        (no token ever emitted, or not yet finished)."""
+        if self.t_first_token <= 0.0 or self.t_done <= 0.0:
+            return float("nan")
         n = max(len(self.generated) - 1, 1)
         return (self.t_done - self.t_first_token) / n
+
+
+@dataclass(frozen=True)
+class RequestOutput:
+    """One incremental slice of a request's token stream.
+
+    ``step()`` returns one per request that advanced this tick (new
+    tokens appended and/or the request finished); ``stream()`` yields
+    them as they are produced.  ``new_token_ids`` holds only THIS
+    step's tokens (ints, or per-codebook lists for multi-codebook
+    heads); ``n_generated`` is the cumulative count.  ``finish_reason``
+    is set on the final output: "length" (max_new_tokens or arena/pool
+    length bound), "eos", "stop" (a ``SamplingParams.stop`` token), or
+    "abort"."""
+    req_id: int
+    new_token_ids: List[Any]
+    n_generated: int
+    finished: bool
+    finish_reason: Optional[str] = None
 
 
 @dataclass
@@ -170,11 +232,15 @@ class ServeConfig:
     max_batch: int = 8
     max_len: int = 512                  # dense arena length (unused if paged)
     phase: PhaseAwareConfig = field(default_factory=PhaseAwareConfig)
+    # DEPRECATED engine-wide sampling fields: sampling is per-request now
+    # (``submit(..., sampling=SamplingParams(...))``).  These survive as
+    # the default SamplingParams for submits that pass none — setting any
+    # of them off-default warns at engine construction.
     greedy: bool = True
     temperature: float = 1.0
     top_k: int = 0
     top_p: float = 0.0                  # nucleus sampling (0 = off)
-    seed: int = 0
+    seed: int = 0                       # base seed for derived request seeds
     # speculative decoding (serving/speculative.py, requires paged): a
     # drafter proposes up to k tokens per decode tick and one verify
     # window of the target model accepts/rejects them all at once
@@ -190,6 +256,22 @@ class ServeConfig:
     # KV pages are reused copy-on-write instead of recomputed
     prefix_cache: bool = False
 
+    _LEGACY_SAMPLING_DEFAULTS = (True, 1.0, 0, 0.0)
+
+    def legacy_sampling_overridden(self) -> bool:
+        return ((self.greedy, self.temperature, self.top_k, self.top_p)
+                != self._LEGACY_SAMPLING_DEFAULTS)
+
+    def default_sampling(self) -> SamplingParams:
+        """The deprecated engine-wide sampling fields as a per-request
+        default.  ``greedy=True`` maps to temperature 0 (the new API's
+        greedy); the legacy ``max(temperature, 1e-6)`` floor applies only
+        inside this shim — ``SamplingParams(temperature=0)`` itself IS
+        greedy, with no epsilon rewriting."""
+        return SamplingParams(
+            temperature=0.0 if self.greedy else max(self.temperature, 1e-6),
+            top_k=self.top_k, top_p=self.top_p)
+
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
@@ -198,6 +280,14 @@ class ServingEngine:
         self.params = params
         self.sc = sc
         self.mesh = mesh
+        if sc.legacy_sampling_overridden():
+            warnings.warn(
+                "ServeConfig's engine-wide sampling fields (greedy/"
+                "temperature/top_k/top_p) are deprecated: pass per-request "
+                "SamplingParams via submit(..., sampling=...).  The values "
+                "given are used as the default SamplingParams for submits "
+                "that pass none.", DeprecationWarning, stacklevel=2)
+        self._default_sampling = sc.default_sampling()
         self.scheduler = PhaseScheduler(sc.phase)
         B, S = sc.max_batch, sc.max_len
         self.paged = sc.paged
@@ -259,6 +349,7 @@ class ServingEngine:
         self._n_decode_ticks = 0
         self._n_mixed_ticks = 0
         self.host_transfers = 0          # device->host syncs (see _to_host)
+        self.aborted = 0                 # requests cancelled via abort()
         self.preemptions = 0             # lifetime pool evictions (paged)
         self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
         self._tick_preemptions = 0
@@ -285,8 +376,6 @@ class ServingEngine:
         self._programs: Dict[Tuple[str, str], Callable] = {}
         # run -> jitted COW page copy (donated in-place, one per run shape)
         self._copy_programs: Dict[int, Callable] = {}
-        self._rng = jax.random.PRNGKey(sc.seed)
-        self._key0 = jax.random.PRNGKey(sc.seed)
 
     # -- program table ---------------------------------------------------------
     def _program(self, group: str, kind: str) -> Callable:
@@ -303,66 +392,92 @@ class ServingEngine:
         if key not in self._programs:
             # the arena argument is donated: the engine rebinds self.cache
             # to the program's output every call, so XLA updates the KV
-            # arena (dense or page pool) in place instead of copying it
-            impl, cache_arg = {
-                "chunk": (self._prefill_chunk_impl, 5),
-                "whole": (self._prefill_whole_impl, 3),
-                "decode": (self._decode_impl, 2),
-                "chunk_paged": (self._prefill_chunk_paged_impl, 5),
-                "decode_paged": (self._decode_paged_impl, 2),
-                "verify": (self._verify_impl, 5)}[kind]
-            self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,))
+            # arena (dense or page pool) in place instead of copying it.
+            # ``all_greedy`` (the trailing argument of every impl) is
+            # STATIC: an all-greedy tick compiles to plain argmax with no
+            # sort/PRNG work, a mixed tick compiles the per-row path — at
+            # most two specializations per program.
+            impl, cache_arg, static_arg = {
+                "chunk": (self._prefill_chunk_impl, 5, 11),
+                "whole": (self._prefill_whole_impl, 3, 9),
+                "decode": (self._decode_impl, 2, 10),
+                "chunk_paged": (self._prefill_chunk_paged_impl, 5, 12),
+                "decode_paged": (self._decode_paged_impl, 2, 10),
+                "verify": (self._verify_impl, 5, 13)}[kind]
+            self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,),
+                                          static_argnums=(static_arg,))
         return self._programs[key]
 
     # -- jitted bodies ---------------------------------------------------------
-    def _sample(self, logits, key):
-        """logits [N, 1, V] (or [N, 1, K, V]) -> int32 tokens [N] / [N, K]."""
-        return sample_tokens(logits[:, -1], greedy=self.sc.greedy,
-                             temperature=self.sc.temperature,
-                             top_k=self.sc.top_k, top_p=self.sc.top_p,
-                             key=key)
+    def _sample(self, logits, temps, top_ks, top_ps, seeds, counters,
+                all_greedy):
+        """logits [N, 1, V] (or [N, 1, K, V]) -> int32 tokens [N] / [N, K].
+
+        Per-row sampling params ([N] arrays); a row with temperature <= 0
+        is greedy, so one program serves mixed batches.  ``all_greedy``
+        is static — the common greedy tick never builds keys or sorts."""
+        lg = logits[:, -1]
+        if all_greedy:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return sample_tokens_rows(lg, temps, top_ks, top_ps,
+                                  row_keys(seeds, counters))
 
     def _prefill_chunk_impl(self, params, tokens, offsets, lengths, slots,
-                            cache, key):
+                            cache, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy):
         """Packed chunk prefill: K/V written arena-direct at (slot, offset)."""
         logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
                                           lengths, slots, cache)
-        return self._sample(logits, key), new_cache
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
 
-    def _prefill_whole_impl(self, params, tokens, slot, cache, key):
+    def _prefill_whole_impl(self, params, tokens, slot, cache, temps,
+                            top_ks, top_ps, seeds, counters, all_greedy):
         """Whole-prompt prefill + on-device arena splice (SSM / hybrid)."""
         logits, new_cache = prefill_into_arena(
             params, self.cfg, {"tokens": tokens}, slot, cache)
-        return self._sample(logits, key), new_cache
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
 
     def _prefill_chunk_paged_impl(self, params, tokens, offsets, lengths,
-                                  slots, cache, block_tables, key):
+                                  slots, cache, block_tables, temps, top_ks,
+                                  top_ps, seeds, counters, all_greedy):
         """Packed chunk prefill into the page pool (block-table scatter)."""
         logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
                                           lengths, slots, cache,
                                           block_tables=block_tables)
-        return self._sample(logits, key), new_cache
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
 
     def _verify_impl(self, params, tokens, offsets, lengths, slots, cache,
-                     block_tables, draft, key):
+                     block_tables, draft, temps, top_ks, top_ps, seeds,
+                     counters, all_greedy):
         """Speculative verify: ONE chunk forward of the target model over
         each row's [last_committed, d_1, .., d_k] window against the
         paged arena (K/V written arena-direct like any prefill chunk),
         returning logits at EVERY window position; accept/resample runs
-        on device (sampling.verify_draft) so the host sees one packed
-        [N, C+1] array — C candidate tokens plus the emission count."""
+        on device with PER-ROW sampling params (greedy rows accept the
+        argmax prefix — bit-identical to their non-speculative decode —
+        stochastic rows run Leviathan residual resampling with their own
+        key chain) so the host sees one packed [N, C+1] array — C
+        candidate tokens plus the emission count."""
         logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
                                           lengths, slots, cache,
                                           block_tables=block_tables,
                                           return_all_logits=True)
-        toks, n_emit = verify_draft(
-            logits, draft, jnp.asarray(lengths, jnp.int32) - 1,
-            greedy=self.sc.greedy, temperature=self.sc.temperature,
-            top_k=self.sc.top_k, top_p=self.sc.top_p, key=key)
+        draft_len = jnp.asarray(lengths, jnp.int32) - 1
+        if all_greedy:
+            toks, n_emit = verify_draft(logits, draft, draft_len,
+                                        greedy=True)
+        else:
+            toks, n_emit = verify_draft_rows(
+                logits, draft, draft_len, temps, top_ks, top_ps,
+                row_keys(seeds, counters))
         return jnp.concatenate([toks, n_emit[:, None]], axis=1), new_cache
 
     def _decode_paged_impl(self, params, tokens, cache, pos, block_tables,
-                           key):
+                           temps, top_ks, top_ps, seeds, counters,
+                           all_greedy):
         """One-token decode over the page pool.
 
         No merge-with-mask pass: inactive slots carry all-sentinel block
@@ -373,9 +488,11 @@ class ServingEngine:
         logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
                                        phase="decode", cache=cache, pos=pos,
                                        block_tables=block_tables)
-        return self._sample(logits, key), new_cache
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
 
-    def _decode_impl(self, params, tokens, cache, pos, slot_mask, key):
+    def _decode_impl(self, params, tokens, cache, pos, slot_mask, temps,
+                     top_ks, top_ps, seeds, counters, all_greedy):
         logits, new_cache, _ = forward(params, self.cfg, {"tokens": tokens},
                                        phase="decode", cache=cache, pos=pos)
         # frozen slots keep their old cache (mask out writes of idle slots).
@@ -391,13 +508,32 @@ class ServingEngine:
             return jnp.where(b, new, old)
 
         merged = jax.tree.map(merge, cache, new_cache)
-        return self._sample(logits, key), merged
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), merged
 
     # -- public API -----------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> Request:
-        req = Request(self._next_id, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id)
+    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None, *,
+               sampling: Optional[SamplingParams] = None) -> Request:
+        """Queue one request.
+
+        ``sampling`` carries the per-request parameters (temperature=0 is
+        greedy); omitted, the ``ServeConfig`` legacy defaults apply.  The
+        positional ``max_new_tokens`` / ``eos_id`` arguments are kept for
+        existing callers and override the corresponding ``sampling``
+        fields when given."""
+        sp = sampling if sampling is not None else self._default_sampling
+        if max_new_tokens is not None:
+            sp = replace(sp, max_new_tokens=max_new_tokens)
+        if eos_id is not None:
+            sp = replace(sp, eos_id=eos_id)
+        req = Request(self._next_id, np.asarray(prompt, np.int32), sp)
+        # effective seed: explicit, or derived from (engine seed, req_id) —
+        # deterministic across runs, distinct across requests.  Python-int
+        # arithmetic, masked to int31: uint32 scalar math would overflow
+        # (NumPy 2 warns, and raises outright for a negative sc.seed)
+        req.seed = sp.seed if sp.seed is not None else (
+            (self.sc.seed * 2654435761 + req.req_id + 1) & 0x7FFFFFFF)
         req.prompt_len = int(req.prompt.shape[-1])
         if self.paged:
             # capacity is a POOL property: a prompt fits iff the pool can
@@ -416,6 +552,45 @@ class ServingEngine:
         self.queue.append(req)
         return req
 
+    def abort(self, req_id: int) -> Optional[RequestOutput]:
+        """Cancel a request at ANY lifecycle stage.
+
+        WAITING: dequeued.  PREFILLING / DECODING (speculative verify
+        state included): its slot is vacated — paged pool references
+        (owned AND prefix-cache-attached pages), draft-pool state, and
+        the dense slot mask are all released; pages the prefix cache
+        pinned stay cached (they are the cache's references, reclaimable
+        as usual).  Returns the terminal ``RequestOutput``
+        (finish_reason "abort"), or None for an unknown / already
+        finished id.  Tokens already generated remain on the Request."""
+        req = None
+        for i, r in enumerate(self.queue):
+            if r.req_id == req_id:
+                req = self.queue.pop(i)
+                break
+        if req is None:
+            for r in self.slot_req:
+                if r is not None and r.req_id == req_id:
+                    req = r
+                    if self.drafter is not None:
+                        self.drafter.release(r.slot)
+                    if self.paged:
+                        self.pool.release(r.slot)
+                    self.slot_req[r.slot] = None
+                    self.slot_pos[r.slot] = -1
+                    r.slot = -1
+                    break
+        if req is None:
+            return None
+        self.aborted += 1
+        req.state = RequestState.DONE
+        req.finish_reason = "abort"
+        req.t_done = time.monotonic()
+        self.done.append(req)
+        return RequestOutput(req_id=req.req_id, new_token_ids=[],
+                             n_generated=len(req.generated), finished=True,
+                             finish_reason="abort")
+
     # -- helpers ----------------------------------------------------------------
     def _to_host(self, arr) -> np.ndarray:
         """The engine's single device->host transfer point.
@@ -430,11 +605,31 @@ class ServingEngine:
         self.host_transfers += 1
         return np.asarray(arr)
 
-    def _next_key(self):
-        if self.sc.greedy:
-            return self._key0                   # unused by argmax sampling
-        self._rng, k = jax.random.split(self._rng)
-        return k
+    def _pack_params(self, rows: Sequence[Tuple[int, Request]], n: int):
+        """Pack per-request sampling params into [n]-shaped device arrays
+        for one jitted phase call.  ``rows`` maps row index -> request
+        (a packed-batch index for prefill/verify, the SLOT for decode);
+        unmapped rows are greedy placeholders (temperature 0 — argmax,
+        result discarded).  The counter is the index of the token being
+        sampled (= tokens emitted so far), which keys the request's
+        per-row PRNG chain (see sampling.row_keys).  Returns the arrays
+        plus the static ``all_greedy`` flag."""
+        temps = np.zeros((n,), np.float32)
+        top_ks = np.zeros((n,), np.int32)
+        top_ps = np.zeros((n,), np.float32)
+        seeds = np.zeros((n,), np.int32)
+        counters = np.zeros((n,), np.int32)
+        all_greedy = True
+        for i, r in rows:
+            sp = r.sampling
+            temps[i] = sp.temperature
+            top_ks[i] = sp.top_k
+            top_ps[i] = sp.top_p
+            seeds[i] = r.seed
+            counters[i] = len(r.generated)
+            all_greedy = all_greedy and sp.greedy
+        return (jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
+                jnp.asarray(seeds), jnp.asarray(counters)), all_greedy
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -616,6 +811,12 @@ class ServingEngine:
     def _start_decoding(self, req: Request, tok_row) -> None:
         self._publish_prefix(req)       # prompt pages complete & unwrapped
         self.slot_pos[req.slot] = self._effective_len(req)
+        if req.sampling.max_new_tokens == 0 and not req.generated:
+            # prefill-only request: the seeding sample is discarded, no
+            # token ever emits (ttft/tpot stay NaN), reason is "length"
+            req.finish_reason = "length"
+            self._retire(req)
+            return
         self._append_token(req, tok_row)
         if req.t_first_token == 0.0:    # a resumed prefill keeps its TTFT
             req.t_first_token = time.monotonic()
@@ -623,29 +824,38 @@ class ServingEngine:
         if self._finished(req):
             self._retire(req)
 
-    def _stream_done(self, req: Request) -> bool:
-        """Token-stream termination only (max_new / eos) — what a verify
-        window's emission loop may stop on.  The arena position bound is
-        NOT checked here: a window commits its slot_pos jump before the
-        tokens append, so mid-emission the position test would fire early
-        and drop accepted tokens non-speculative decode would emit."""
+    def _stream_reason(self, req: Request) -> Optional[str]:
+        """Token-stream termination only (max_new / eos / stop) — what a
+        verify window's emission loop may stop on.  The arena position
+        bound is NOT checked here: a window commits its slot_pos jump
+        before the tokens append, so mid-emission the position test would
+        fire early and drop accepted tokens non-speculative decode would
+        emit."""
         if len(req.generated) >= req.max_new_tokens:
-            return True
-        if req.eos_id is not None and req.generated:
+            return "length"
+        if req.generated:
             last = req.generated[-1]
             if isinstance(last, list):          # multi-codebook: codebook 0
                 last = last[0] if last else None
-            if last == req.eos_id:
-                return True
-        return False
+            if req.eos_id is not None and last == req.eos_id:
+                return "eos"
+            if last is not None and last in req.sampling.stop:
+                return "stop"
+        return None
+
+    def _stream_done(self, req: Request) -> bool:
+        return self._stream_reason(req) is not None
 
     def _finished(self, req: Request) -> bool:
-        if self._stream_done(req):
-            return True
-        limit = self.pool.length_bound if self.paged else self.sc.max_len
-        if self.slot_pos[req.slot] >= limit - 1:
-            return True
-        return False
+        reason = self._stream_reason(req)
+        if reason is None:
+            limit = self.pool.length_bound if self.paged else self.sc.max_len
+            if self.slot_pos[req.slot] >= limit - 1:
+                reason = "length"       # arena/pool position bound
+        if reason is None:
+            return False
+        req.finish_reason = reason
+        return True
 
     def _retire(self, req: Request) -> None:
         req.state = RequestState.DONE
@@ -692,9 +902,10 @@ class ServingEngine:
             self._prefill_progress = True
             for req, take in chunks:
                 tokens = jnp.asarray(req.prompt[None], jnp.int32)
+                pp, all_greedy = self._pack_params([(0, req)], 1)
                 toks, self.cache = self._program(plan.prefill_group, "whole")(
                     self.params, tokens, jnp.int32(req.slot), self.cache,
-                    self._next_key())
+                    *pp, all_greedy)
                 req.prefill_pos = req.prompt_len
                 self.prefill_tokens_executed += req.prompt_len
                 self._start_decoding(req, self._to_host(toks)[0])
@@ -741,17 +952,19 @@ class ServingEngine:
             offs[i] = req.prefill_pos
             lens[i] = take
             slots[i] = req.slot
+        pp, all_greedy = self._pack_params(
+            [(i, req) for i, (req, _) in enumerate(chunks)], N)
         if self.paged:
             toks, self.cache = self._program(plan.prefill_group,
                                              "chunk_paged")(
                 self.params, jnp.asarray(tokens), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(slots), self.cache,
-                self.pool.block_tables(), self._next_key())
+                self.pool.block_tables(), *pp, all_greedy)
         else:
             toks, self.cache = self._program(plan.prefill_group, "chunk")(
                 self.params, jnp.asarray(tokens), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(slots), self.cache,
-                self._next_key())
+                *pp, all_greedy)
         self.prefill_tokens_executed += sum(take for _, take in chunks)
         sampled = None
         for i, (req, take) in enumerate(chunks):
@@ -802,10 +1015,12 @@ class ServingEngine:
             offs[i] = self.slot_pos[r.slot]
             lens[i] = kd + 1
             slots[i] = r.slot
+        pp, all_greedy = self._pack_params(
+            [(i, r) for i, (r, _) in enumerate(rows)], N)
         out, self.cache = self._program(plan.verify_group, "verify")(
             self.params, jnp.asarray(tokens), jnp.asarray(offs),
             jnp.asarray(lens), jnp.asarray(slots), self.cache,
-            self.pool.block_tables(), jnp.asarray(draft), self._next_key())
+            self.pool.block_tables(), jnp.asarray(draft), *pp, all_greedy)
         packed = self._to_host(out)                 # [N, C+1], one transfer
         for i, (r, d) in enumerate(rows):
             kd = int(d.shape[-1])
@@ -906,6 +1121,7 @@ class ServingEngine:
         # ragged decode: per-slot positions (vector pos -> per-slot rope,
         # per-slot cache write index, per-slot validity mask)
         pos = np.where(self.slot_pos >= 0, self.slot_pos, 0).astype(np.int32)
+        pp, all_greedy = self._pack_params([(r.slot, r) for r in active], B)
         if self.paged:
             # inactive slots get all-sentinel block-table rows: their
             # scatters drop — the paged analogue of the dense slot_mask
@@ -913,11 +1129,11 @@ class ServingEngine:
                                              "decode_paged")(
                 self.params, jnp.asarray(tokens), self.cache,
                 jnp.asarray(pos), self.pool.block_tables(mask),
-                self._next_key())
+                *pp, all_greedy)
         else:
             toks, self.cache = self._program(plan.decode_group, "decode")(
                 self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(pos), jnp.asarray(mask), self._next_key())
+                jnp.asarray(pos), jnp.asarray(mask), *pp, all_greedy)
         sampled = self._to_host(toks)               # one transfer per tick
         for r in active:
             self._append_token(r, sampled[r.slot])
@@ -931,13 +1147,28 @@ class ServingEngine:
                 self._retire(r)
 
     # -- tick loop ---------------------------------------------------------------
-    def step(self) -> Dict[str, int]:
-        """One engine tick: plan (scheduler) -> execute (this method)."""
+    def step(self) -> List[RequestOutput]:
+        """One engine tick: plan (scheduler) -> execute -> report.
+
+        Returns one incremental ``RequestOutput`` per request that
+        ADVANCED this tick — new tokens appended, and/or the request
+        finished — ordered by req_id.  A preempted request whose tokens
+        are unchanged emits nothing (preemption keeps its generated
+        tokens; recompute-on-resume replays no draws), but one that
+        GAINED tokens earlier in the same tick still reports them; an
+        ``abort()`` between ticks returns its terminal output directly
+        from ``abort``."""
         t0 = time.monotonic()
         self._tick_preemptions = 0
         self._tick_spec_drafted = 0
         self._tick_spec_accepted = 0
         self._prefill_progress = False
+        # snapshot for incremental outputs: every request that can gain
+        # tokens this tick is in the queue or a slot right now
+        counts0 = {r.req_id: len(r.generated) for r in self.queue}
+        counts0.update({r.req_id: len(r.generated)
+                        for r in self.slot_req if r is not None})
+        done0 = len(self.done)
         self._admit()
         # age order (FIFO): under page contention the oldest request gets
         # the prefill budget/pages first — with slot order a recycled low
@@ -992,6 +1223,30 @@ class ServingEngine:
         self._n_prefill_ticks += bool(rec.prefill_reqs)
         self._n_decode_ticks += bool(rec.decode_reqs)
         self._n_mixed_ticks += rec.mixed
+        # incremental outputs: live slot holders + requests retired this
+        # tick + requests preempted BACK TO THE QUEUE after gaining tokens
+        # earlier in the same tick (a growth victim whose prefill had just
+        # completed: its seeding token must not vanish from the stream),
+        # diffed against the entry snapshot
+        touched = [r for r in self.slot_req if r is not None]
+        touched += self.done[done0:]
+        touched += [r for r in self.queue
+                    if len(r.generated) > counts0.get(r.req_id, 0)]
+        outputs: List[RequestOutput] = []
+        for r in sorted(touched, key=lambda r: r.req_id):
+            n0 = counts0.get(r.req_id, 0)
+            finished = r.state == RequestState.DONE
+            if len(r.generated) > n0 or finished:
+                outputs.append(RequestOutput(
+                    req_id=r.req_id,
+                    new_token_ids=list(r.generated[n0:]),
+                    n_generated=len(r.generated),
+                    finished=finished,
+                    finish_reason=r.finish_reason if finished else None))
+        return outputs
+
+    def counts(self) -> Dict[str, int]:
+        """Queue/slot/done occupancy (the old ``step()`` return value)."""
         return {"queued": len(self.queue),
                 "active": sum(r is not None for r in self.slot_req),
                 "done": len(self.done)}
@@ -1002,6 +1257,35 @@ class ServingEngine:
             self.step()
             ticks += 1
         return self.done
+
+    def stream(self, max_ticks: int = 10_000) -> Iterator[RequestOutput]:
+        """Run the tick loop, yielding each ``RequestOutput`` as soon as
+        its tick produced it — tokens are observable while OTHER requests
+        are still prefilling or decoding.  ``submit()`` and ``abort()``
+        may be called from the consuming loop (an abort's terminal output
+        is returned by ``abort`` itself, not re-yielded here)."""
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and ticks < max_ticks:
+            yield from self.step()
+            ticks += 1
+
+    def generate(self, prompts: Sequence[np.ndarray],
+                 sampling: Union[SamplingParams, Sequence[SamplingParams],
+                                 None] = None,
+                 max_ticks: int = 10_000) -> List[Request]:
+        """Batch facade: submit every prompt (one shared ``SamplingParams``
+        or one per prompt), drain, and return the finished ``Request``s in
+        submission order."""
+        if sampling is None or isinstance(sampling, SamplingParams):
+            sampling = [sampling] * len(prompts)
+        if len(sampling) != len(prompts):
+            raise ValueError(f"got {len(list(sampling))} SamplingParams for "
+                             f"{len(prompts)} prompts")
+        reqs = [self.submit(p, sampling=sp)
+                for p, sp in zip(prompts, sampling)]
+        self.run_until_drained(max_ticks)
+        return reqs
 
     # -- metrics ------------------------------------------------------------------
     @property

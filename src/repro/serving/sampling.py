@@ -5,9 +5,22 @@ The seed engine pulled full logits to the host and ran one
 device->host syncs per decode step.  Sampling INSIDE the jitted phase
 program instead returns a single int32 token array ([B] or [B, K] for
 multi-codebook heads), so the engine performs exactly one host transfer
-per tick regardless of batch size.  Greedy is the default (and is what
-the token-identity tests pin down); temperature / top-k / top-p sampling
-shares the same entry point and threads a PRNG key through the tick loop.
+per tick regardless of batch size.
+
+Sampling is PER REQUEST: ``SamplingParams`` is the request-level knob
+set (temperature — 0 means greedy — top-k, top-p, seed, token budget and
+stop conditions), and the vectorized entry points
+(``sample_tokens_rows`` / ``verify_draft_rows``) take per-row ``[B]``
+parameter arrays plus per-row PRNG keys, so ONE jitted program serves a
+batch mixing greedy and stochastic requests — still one host transfer
+per tick.  A greedy row is exactly ``argmax`` (its key is never
+consumed), which is why a mixed batch's greedy rows are bit-identical to
+an all-greedy run.  Per-row keys are derived on device from (seed,
+tokens-emitted-so-far) via ``row_keys`` — a request's stochastic stream
+is a pure function of its own seed, independent of batch composition,
+slot placement, or preemption.  The scalar ``sample_tokens`` /
+``verify_draft`` entry points remain for engine-wide (single-parameter)
+use and tests.
 
 ``verify_draft`` is the speculative-decoding acceptance rule
 (serving/speculative.py): given the target model's logits at every
@@ -27,10 +40,53 @@ overall emission distribution exactly p.
 
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling and termination parameters (``submit``).
+
+    ``temperature == 0`` means GREEDY — there is no separate ``greedy``
+    flag (the old engine-wide ``greedy`` + ``max(temperature, 1e-6)``
+    duality is gone).  ``seed=None`` lets the engine derive a
+    deterministic per-request seed from ``ServeConfig.seed`` and the
+    request id; setting it makes the request's stochastic stream
+    reproducible independent of batch composition.  ``stop`` is extra
+    stop-token ids beyond ``eos_id`` (finish_reason "stop" vs "eos").
+    """
+    temperature: float = 0.0            # 0 => greedy (argmax)
+    top_k: int = 0                      # 0 => off
+    top_p: float = 0.0                  # 0 or >= 1 => off
+    seed: Optional[int] = None          # None => engine-derived
+    max_new_tokens: int = 32            # 0 is legal: prefill only
+    eos_id: Optional[int] = None
+    stop: Tuple[int, ...] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0 (0 = greedy), "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0.0 <= self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in [0, 1] (0 or 1 = off), "
+                             f"got {self.top_p}")
+        if self.max_new_tokens < 0:
+            raise ValueError(f"max_new_tokens must be >= 0, "
+                             f"got {self.max_new_tokens}")
+        object.__setattr__(self, "stop",
+                           tuple(int(t) for t in self.stop))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
 
 
 def _filter_logits(scaled, top_k: int, top_p: float):
@@ -160,4 +216,132 @@ def verify_draft(logits, draft, draft_len, *, greedy: bool = True,
     tokens = jnp.where(jj[None, :] < acc[:, None], draft_pad,
                        jnp.where(jj[None, :] == acc[:, None],
                                  extra[:, None], 0))
+    return tokens.astype(jnp.int32), (acc + 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# vectorized per-row entry points (the jitted phase programs call these)
+# ---------------------------------------------------------------------------
+
+
+def row_keys(seeds, counters):
+    """Per-row PRNG keys from [B] int32 seeds and [B] int32 counters.
+
+    ``fold_in(PRNGKey(seed), counter)`` makes a request's key chain a
+    pure function of (its seed, how many tokens it has emitted): the
+    same request draws the same randomness whatever batch it lands in,
+    whichever slot it occupies, and however often it is preempted
+    (recompute-on-resume folds generated tokens into the prompt without
+    replaying their draws).  Runs inside the jitted programs — the host
+    ships two int32 arrays, not key material."""
+    return jax.vmap(
+        lambda s, c: jax.random.fold_in(jax.random.PRNGKey(s), c)
+    )(jnp.asarray(seeds, jnp.uint32), jnp.asarray(counters, jnp.uint32))
+
+
+def _filter_logits_rows(scaled, top_k, top_p):
+    """Per-row top-k / nucleus truncation: ``scaled`` is [B, ..., V],
+    ``top_k`` / ``top_p`` broadcast over its leading dims (shape
+    [B, 1..., 1]).  One full descending sort serves both filters; the
+    kept set per row is identical to the scalar ``_filter_logits`` (the
+    rank mask IS ``lax.top_k``'s index set, ties included, and the
+    nucleus rule is the same mass-strictly-before threshold over the
+    already-top-k-filtered softmax)."""
+    V = scaled.shape[-1]
+    vals, idx = jax.lax.top_k(scaled, V)            # full descending sort
+    rank = jnp.arange(V, dtype=jnp.int32)
+    kk = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    keep = rank < kk
+    probs = jax.nn.softmax(jnp.where(keep, vals, NEG_INF), axis=-1)
+    p_on = (top_p > 0.0) & (top_p < 1.0)
+    keep &= jnp.where(p_on,
+                      (jnp.cumsum(probs, axis=-1) - probs) < top_p, True)
+    vals = jnp.where(keep, vals, NEG_INF)
+    return jnp.put_along_axis(jnp.full_like(scaled, NEG_INF), idx, vals,
+                              axis=-1, inplace=False)
+
+
+def sample_tokens_rows(logits, temperature, top_k, top_p, keys):
+    """Vectorized per-row sampling: logits [B, ..., V] -> int32 [B, ...].
+
+    ``temperature`` / ``top_k`` / ``top_p`` are [B] per-row parameter
+    arrays and ``keys`` is [B] per-row PRNG keys (``row_keys``).  A row
+    with temperature <= 0 is GREEDY — plain argmax, its key never
+    consumed — so one compiled program serves a batch mixing greedy and
+    stochastic requests and the greedy rows are bit-identical to an
+    all-greedy batch."""
+    B = logits.shape[0]
+    lead = (B,) + (1,) * (logits.ndim - 2)          # broadcast extra dims
+    t = jnp.asarray(temperature, jnp.float32).reshape(lead)
+    k = jnp.asarray(top_k, jnp.int32).reshape(lead + (1,))
+    p = jnp.asarray(top_p, jnp.float32).reshape(lead + (1,))
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(t[..., None], 1e-6)
+    filt = _filter_logits_rows(scaled, k, p)
+    sampled = jax.vmap(
+        lambda key, lp: jax.random.categorical(key, lp, axis=-1)
+    )(keys, filt).astype(jnp.int32)
+    return jnp.where(t <= 0.0, greedy_tok, sampled)
+
+
+def verify_draft_rows(logits, draft, draft_len, temperature, top_k, top_p,
+                      keys):
+    """Per-row vectorized accept/resample over a draft window.
+
+    Same contract as ``verify_draft`` (logits [N, C, V], draft [N, C-1],
+    draft_len [N] -> (tokens [N, C], n_emitted [N])), with per-row
+    ``temperature`` / ``top_k`` / ``top_p`` [N] arrays and per-row
+    ``keys``.  A row with temperature <= 0 verifies GREEDILY —
+    argmax-prefix acceptance, bit-identical to its non-speculative
+    greedy decode — so a mixed batch verifies in ONE program; stochastic
+    rows run Leviathan point-mass rejection sampling against their own
+    filtered distribution with their own key chain."""
+    N, C, _ = logits.shape
+    K = C - 1
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    draft = jnp.asarray(draft, jnp.int32)
+    t = jnp.asarray(temperature, jnp.float32)
+    j = jnp.arange(K, dtype=jnp.int32)
+    within = j[None, :] < draft_len[:, None]                     # [N, K]
+
+    # greedy lane: accept while the target argmax agrees with the draft
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)          # [N, C]
+    g_match = (tgt[:, :K] == draft) & within
+    g_acc = jnp.sum(jnp.cumprod(g_match.astype(jnp.int32), axis=-1), axis=-1)
+
+    # stochastic lane (computed for every row, selected per row below)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(t[:, None, None], 1e-6)
+    logp = jax.nn.log_softmax(
+        _filter_logits_rows(
+            scaled, jnp.asarray(top_k, jnp.int32)[:, None, None],
+            jnp.asarray(top_p, jnp.float32)[:, None, None]), axis=-1)
+    p = jnp.exp(logp)                                            # [N, C, V]
+    ks = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)      # [N, 3, ..]
+    p_d = jnp.take_along_axis(p[:, :K], draft[..., None], axis=-1)[..., 0]
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (K,)))(ks[:, 0])
+    s_match = (u < p_d) & within
+    s_acc = jnp.sum(jnp.cumprod(s_match.astype(jnp.int32), axis=-1), axis=-1)
+    res_logp = jnp.where(
+        jnp.arange(p.shape[-1])[None, None, :] == draft[..., None],
+        NEG_INF, logp[:, :K])
+    res = jax.vmap(
+        lambda kk, lp: jax.random.categorical(kk, lp, axis=-1)
+    )(ks[:, 1], res_logp).astype(jnp.int32)                      # [N, K]
+    bonus_logp = jnp.take_along_axis(
+        logp, draft_len[:, None, None], axis=1)[:, 0]            # [N, V]
+    bonus = jax.vmap(jax.random.categorical)(ks[:, 2],
+                                             bonus_logp).astype(jnp.int32)
+    res_at_acc = jnp.take_along_axis(
+        res, jnp.clip(s_acc, 0, K - 1)[:, None], axis=1)[:, 0]
+    extra = jnp.where(s_acc < draft_len, res_at_acc, bonus)      # [N]
+    jj = jnp.arange(C, dtype=jnp.int32)
+    draft_pad = jnp.concatenate(
+        [draft, jnp.zeros((N, 1), jnp.int32)], axis=1)           # [N, C]
+    s_tokens = jnp.where(jj[None, :] < s_acc[:, None], draft_pad,
+                         jnp.where(jj[None, :] == s_acc[:, None],
+                                   extra[:, None], 0))
+
+    greedy_row = t <= 0.0                                        # [N]
+    acc = jnp.where(greedy_row, g_acc, s_acc)
+    tokens = jnp.where(greedy_row[:, None], tgt, s_tokens)
     return tokens.astype(jnp.int32), (acc + 1).astype(jnp.int32)

@@ -17,12 +17,20 @@ phase split generalizes naturally to multi-token decoding:
   (``TickPlan.verify_group``), mirroring heterogeneous-PIM designs that
   place multi-token ops on the compute die (HPIM, arXiv:2509.12993).
 
-Acceptance is ``serving/sampling.py::verify_draft`` (greedy: bit-identical
-to non-speculative decode by construction; stochastic: Leviathan-style
-residual resampling).  Rejected tokens' KV is rolled back with
+Acceptance is ``serving/sampling.py::verify_draft_rows`` with PER-REQUEST
+``SamplingParams`` threaded as [N] row arrays (a greedy row — temperature
+0 — accepts the argmax prefix, bit-identical to its non-speculative
+decode by construction; a stochastic row runs Leviathan-style residual
+resampling against its own filtered distribution and per-row key chain),
+so one verify program serves a batch mixing greedy and sampled requests.
+The drafters themselves stay deterministic whatever the target's
+sampling params: the proposal distribution must be a point mass for the
+accept-with-p(d) rule to apply.  Rejected tokens' KV is rolled back with
 ``KVPool.truncate`` — pages backing only the rejected tail free, shared /
 prefix-cache-pinned pages survive (COW already moved the writer off them
-before the window was written).
+before the window was written).  ``ServingEngine.abort`` releases a
+request's draft-pool slot (``drafter.release``) at any point, including
+between verify windows.
 
 Two draft providers behind one interface (``propose_batch`` / ``observe``
 / ``release``):

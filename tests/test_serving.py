@@ -107,8 +107,8 @@ def test_continuous_batching_refills_slots():
     peak_active = 0
     ticks = 0
     while (eng.queue or any(eng.slot_req)) and ticks < 100:
-        stats = eng.step()
-        peak_active = max(peak_active, stats["active"])
+        eng.step()
+        peak_active = max(peak_active, eng.counts()["active"])
         ticks += 1
     assert len(eng.done) == 5
     assert peak_active == 2               # slots stayed saturated
