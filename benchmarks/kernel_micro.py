@@ -46,7 +46,7 @@ def bench_kernels() -> List[Row]:
     rows.append(("kernel.gemv.bf16.v5e_bound_us", t_bf16 * 1e6, "us", ""))
     rows.append(("kernel.gemv.int8.v5e_bound_us", t_int8 * 1e6, "us", ""))
     rows.append(("kernel.gemv.int8_traffic_saving", t_bf16 / t_int8, "x", ""))
-    _ = ops.gemv(x, q, s, bn=512, bk=1024)   # executes (interpret on CPU)
+    _ = ops.gemv(x, q, s, bn=256, bk=1024)   # executes (interpret on CPU)
 
     # prefill GEMM at llama2 qkv shape
     M, K2, N2 = 2048, 4096, 12288
@@ -74,8 +74,56 @@ def bench_kernels() -> List[Row]:
         a, b, c, jnp.array([2048]), bs=512), qq, kc, vc)
     rows.append(("kernel.decode_attn.cpu_interpret_us", us * 1e6, "us", ""))
 
-    # flash attention triangular saving
-    rows.append(("kernel.flash_attn.causal_skip_saving", 2.0, "x", ""))
+    # prefill flash attention: causal tiling skips the strict upper
+    # triangle of the [T, T] score grid — at nq = nk tiles the executed
+    # tile count is nk(nk+1)/2 of nk^2, -> 2x as T/bq grows
+    T2, H2, Hkv2, D2 = 256, 8, 4, 64
+    bq = 128
+    nk = T2 // bq
+    rows.append(("kernel.flash_attn.causal_skip_saving",
+                 nk * nk / (nk * (nk + 1) / 2), "x", ""))
+    flops = 4 * H2 * T2 * T2 * D2 / 2          # causal half of QK^T + PV
+    rows.append(("kernel.flash_attn.v5e_compute_us",
+                 flops / PEAK * 1e6, "us", ""))
+    qp = jax.random.normal(key, (1, H2, T2, D2), jnp.float32)
+    kp = jax.random.normal(key, (1, Hkv2, T2, D2), jnp.float32)
+    vp = jax.random.normal(key, (1, Hkv2, T2, D2), jnp.float32)
+    us = _time(lambda a, b, c: ops.flash_attention(a, b, c, bq=bq, bk=bq),
+               qp, kp, vp)
+    rows.append(("kernel.flash_attn.cpu_interpret_us", us * 1e6, "us", ""))
+
+    # packed multi-request prefill: the same T-token budget as ONE
+    # bq-aligned multi-segment stream over the paged arena (serving's
+    # packed chunk path) — vs the padded [N, C] batch the engine would
+    # otherwise launch, whose row count is N * max(take) rather than
+    # ~sum(take)
+    P, W, n_pages = 16, 8, 32
+    bp = 64                                    # packed stream tile
+    takes = [192, 64, 48, 32]                  # mixed-length tick
+    starts, cur = [], 0
+    for t in takes:
+        starts.append(cur)
+        cur += -(-t // bp) * bp                # tile-aligned segment starts
+    Tp = max(cur, bp)
+    pad_rows = len(takes) * max(takes)
+    rows.append(("kernel.packed_prefill.padded_rows_saving",
+                 pad_rows / Tp, "x", ""))
+    qs = jax.random.normal(key, (Tp, H2, D2), jnp.float32)
+    ks = jax.random.normal(key, (Tp, Hkv2, D2), jnp.float32)
+    vs2 = jax.random.normal(key, (Tp, Hkv2, D2), jnp.float32)
+    kpg = jax.random.normal(key, (n_pages, P, Hkv2, D2), jnp.float32)
+    vpg = jax.random.normal(key, (n_pages, P, Hkv2, D2), jnp.float32)
+    bt = jnp.full((len(takes), W), n_pages, jnp.int32)
+    bt = bt.at[:, :2].set(jnp.arange(2 * len(takes), dtype=jnp.int32)
+                          .reshape(len(takes), 2))
+    seg_starts = jnp.asarray(starts, jnp.int32)
+    seg_offs = jnp.full((len(takes),), 2 * P, jnp.int32)   # resumed chunks
+    seg_lens = jnp.asarray(takes, jnp.int32)
+    us = _time(lambda a, b, c: ops.packed_prefill_attention(
+        a, b, c, kpg, vpg, bt, seg_starts, seg_offs, seg_lens,
+        ring=4096, bq=bp), qs, ks, vs2)
+    rows.append(("kernel.packed_prefill.cpu_interpret_us", us * 1e6,
+                 "us", ""))
     return rows
 
 

@@ -47,9 +47,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import math
 import sys
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -78,7 +80,8 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
          prompt_len=24, requests=8, max_new=8, prefill_chunk=2048,
          max_prefill_tokens=8192, paged=False, page_size=8, n_pages=64,
          prefix_cache=False, shared_prefix=0, speculative=None,
-         repeat_suffix=0):
+         repeat_suffix=0, packed_prefill=True,
+         prompt_lens: Optional[List[int]] = None, waves=1):
     from repro.serving.engine import ServeConfig, ServingEngine
     from repro.serving.scheduler import PhaseAwareConfig
 
@@ -88,25 +91,36 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
                          prefill_chunk=prefill_chunk,
                          max_prefill_tokens=max_prefill_tokens),
                      paged=paged, page_size=page_size, n_pages=n_pages,
-                     prefix_cache=prefix_cache, speculative=speculative)
+                     prefix_cache=prefix_cache, speculative=speculative,
+                     packed_prefill=packed_prefill)
     eng = ServingEngine(cfg, params, sc)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
                           (min(shared_prefix, prompt_len),), dtype=np.int32)
+    lens = prompt_lens if prompt_lens is not None \
+        else [prompt_len] * requests
     t0 = time.monotonic()
-    for _ in range(requests):
-        tail = rng.integers(0, cfg.vocab_size,
-                            (prompt_len - len(shared),), dtype=np.int32)
-        if repeat_suffix > 0:
-            # repetitive-suffix workload (speculative decoding): the
-            # prompt ends with a short block tiled several times, the
-            # pattern prompt-lookup drafting feeds on
-            block = tail[:repeat_suffix]
-            reps = -(-len(tail) // repeat_suffix)
-            tail = np.tile(block, reps)[: len(tail)]
-        eng.submit(np.concatenate([shared, tail]), max_new_tokens=max_new)
-    done = eng.run_until_drained()
+    done = []
+    wave_compiles = []
+    for _ in range(waves):
+        for plen in lens:
+            tail = rng.integers(0, cfg.vocab_size,
+                                (plen - len(shared),), dtype=np.int32)
+            if repeat_suffix > 0:
+                # repetitive-suffix workload (speculative decoding): the
+                # prompt ends with a short block tiled several times, the
+                # pattern prompt-lookup drafting feeds on
+                block = tail[:repeat_suffix]
+                reps = -(-len(tail) // repeat_suffix)
+                tail = np.tile(block, reps)[: len(tail)]
+            eng.submit(np.concatenate([shared, tail]),
+                       max_new_tokens=max_new)
+        done = eng.run_until_drained()
+        wave_compiles.append(eng.compile_count)
     wall = time.monotonic() - t0
+    # per-wave cumulative compile counts (bench_packed_prefill's
+    # recompile-stall assert reads the last delta)
+    eng.bench_wave_compiles = wave_compiles
     return eng, done, wall
 
 
@@ -239,6 +253,73 @@ def bench_prefix_cache() -> List[Row]:
         rows.append((f"{pre}.cow_copies", ps["cow_copies"], "count", ""))
     assert outs["cache_off"] == outs["cache_on"], \
         "prefix cache changed greedy token streams"
+    return rows
+
+
+def bench_packed_prefill() -> List[Row]:
+    """Packed vs padded prefill on mixed-length traffic at two context
+    scales: the padded path rounds every tick's chunk batch up to an
+    [N, C] rectangle (C = the LONGEST take's bucket), so a tick mixing an
+    8-token tail with 16-token chunks pays N*16 rows; the packed path
+    runs the same chunks as one flat bq-aligned stream of
+    ~sum(take) rows.  Reported per mode: prefill kernel rows (the
+    launch-grid work), pad-waste fraction, distinct compiled phase-program
+    shapes, and latency.  Asserted: greedy token streams identical,
+    packed strictly cuts kernel rows and pad waste, and a SECOND wave of
+    the same mixed-length traffic adds zero new compiles (the bucket
+    ladder's recompile-stall guarantee)."""
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+    outs, stats = {}, {}
+    # two context scales, lengths chosen to straddle chunk boundaries so
+    # every tick mixes full chunks with ragged tails
+    mixes = {"short": [9, 17, 26, 33], "long": [41, 57, 70, 90]}
+    for scale, lens in mixes.items():
+        for label, packed in (("padded", False), ("packed", True)):
+            eng, done, wall = _run(cfg, params, max_batch=4, max_len=128,
+                                   prompt_lens=lens, max_new=6,
+                                   prefill_chunk=16, max_prefill_tokens=64,
+                                   paged=True, page_size=8, n_pages=128,
+                                   packed_prefill=packed, waves=2)
+            outs[(scale, label)] = [r.generated for r in
+                                    sorted(done, key=lambda r: r.req_id)]
+            wave2 = eng.bench_wave_compiles[-1] - eng.bench_wave_compiles[0]
+            stats[(scale, label)] = (eng.prefill_rows_executed,
+                                     eng.prefill_tokens_executed,
+                                     eng.compile_count, wave2)
+            kr, kt, cc, _ = stats[(scale, label)]
+            pre = f"serve.packed.{scale}.{label}"
+            rows.append((f"{pre}.ttft_p50_ms",
+                         _p50([r.ttft for r in done]) * 1e3, "ms", ""))
+            rows.append((f"{pre}.tpot_p50_ms",
+                         _p50([r.tpot for r in done]) * 1e3, "ms", ""))
+            rows.append((f"{pre}.prefill_kernel_rows", float(kr),
+                         "rows", ""))
+            rows.append((f"{pre}.pad_waste_frac", 1.0 - kt / max(kr, 1),
+                         "frac", ""))
+            rows.append((f"{pre}.compiled_shapes", float(cc), "count", ""))
+            rows.append((f"{pre}.prefill_launches",
+                         float(eng.prefill_launches), "count", ""))
+        assert outs[(scale, "padded")] == outs[(scale, "packed")], (
+            f"packed prefill changed greedy token streams ({scale})")
+        pad_r, pad_t, pad_c, _ = stats[(scale, "padded")]
+        pk_r, pk_t, pk_c, pk_w2 = stats[(scale, "packed")]
+        assert pk_t == pad_t, "packed executed different real tokens"
+        assert pk_r < pad_r, (
+            f"packed prefill did not cut kernel rows ({pk_r} vs {pad_r})")
+        # shape-count note: the packed key is 1-D ((T,) ladder, O(log T)
+        # reachable shapes) where padded's is the 2-D (N, C) grid — but a
+        # short trace can hit fewer padded combos than packed T buckets,
+        # so the bound asserted is the ladder's own (two shapes per
+        # octave), not a per-trace comparison
+        octaves = max(1, math.ceil(math.log2(max(pk_r, 2))))
+        assert pk_c <= 2 * octaves + 4, (
+            f"packed compiled shapes exceed the ladder bound ({pk_c})")
+        assert pk_w2 == 0, (
+            f"second wave of {scale} mixed traffic recompiled "
+            f"({pk_w2} new shapes)")
+        rows.append((f"serve.packed.{scale}.wave2_new_compiles",
+                     float(pk_w2), "count", "0"))
     return rows
 
 
@@ -388,8 +469,8 @@ def bench_request_api() -> List[Row]:
 
 
 ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick,
-       bench_paged_vs_dense, bench_prefix_cache, bench_speculative,
-       bench_request_api]
+       bench_paged_vs_dense, bench_prefix_cache, bench_packed_prefill,
+       bench_speculative, bench_request_api]
 
 
 def main(argv=None) -> int:
@@ -402,6 +483,9 @@ def main(argv=None) -> int:
                     help="speculative-decoding sweep only (with --quick: "
                          "the CI leg, asserting acceptance rate > 0 and "
                          "tokens/tick > 1 on top of token identity)")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output path (CI artifact); "
+                         "'' disables")
     args = ap.parse_args(argv)
 
     print("name,value,unit,paper")
@@ -409,7 +493,7 @@ def main(argv=None) -> int:
         suites = [bench_speculative]
     elif args.quick:
         suites = [bench_paged_vs_dense, bench_prefix_cache,
-                  bench_request_api]
+                  bench_packed_prefill, bench_request_api]
     else:
         suites = ALL
     rows: List[Row] = []
@@ -417,6 +501,14 @@ def main(argv=None) -> int:
         rows.extend(fn())
     for name, value, unit, paper in rows:
         print(f"{name},{value:.6g},{unit},{paper}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serving",
+                       "suites": [fn.__name__ for fn in suites],
+                       "rows": [{"name": n, "value": v, "unit": u,
+                                 "paper": p or None}
+                                for n, v, u, p in rows]}, f, indent=1)
+            f.write("\n")
     if args.speculative and args.quick:
         vals = {n: v for n, v, _, _ in rows}
         for label in ("ngram_k4", "model_k4"):
@@ -449,10 +541,19 @@ def main(argv=None) -> int:
             "no incremental RequestOutput arrived before drain"
         assert vals["serve.api.finish.abort"] == 1, \
             "the aborted request did not finish with reason 'abort'"
+        for scale in ("short", "long"):
+            pre = f"serve.packed.{scale}"
+            assert (vals[f"{pre}.packed.prefill_kernel_rows"]
+                    < vals[f"{pre}.padded.prefill_kernel_rows"]), \
+                f"packed prefill did not cut kernel rows ({scale})"
+            assert vals[f"{pre}.wave2_new_compiles"] == 0, \
+                f"mixed-length traffic recompiled on its second pass ({scale})"
         print("# quick smoke OK: paged peak-resident < dense reservation; "
-              "prefix cache hit and skipped prefill work; mixed-sampling "
-              "greedy rows identical at equal host transfers; streaming "
-              "outputs arrived pre-drain; abort freed its pages",
+              "prefix cache hit and skipped prefill work; packed prefill "
+              "cut kernel rows at identical greedy streams with zero "
+              "second-pass recompiles; mixed-sampling greedy rows "
+              "identical at equal host transfers; streaming outputs "
+              "arrived pre-drain; abort freed its pages",
               file=sys.stderr)
     return 0
 

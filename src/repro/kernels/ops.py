@@ -39,6 +39,17 @@ def flash_attention(q, k, v, **kw):
     return _fa.flash_attention(q, k, v, **kw)
 
 
+def packed_prefill_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
+                             seg_starts, seg_offsets, seg_lengths, **kw):
+    """Packed multi-request prefill attention: flat stream q/k_new/v_new
+    [T,H|Hkv,D] of bq-aligned segments, each attending over its own arena
+    history (pool [n_pages,P,Hkv,D] via per-segment block_tables [N,W])."""
+    kw.setdefault("interpret", _interpret())
+    return _fa.packed_prefill_attention(q, k_new, v_new, k_pages, v_pages,
+                                        block_tables, seg_starts,
+                                        seg_offsets, seg_lengths, **kw)
+
+
 def decode_attention(q, k_cache, v_cache, lengths, **kw):
     """Decode attention: q [B,H,D] vs cache [B,S,Hkv,D]."""
     kw.setdefault("interpret", _interpret())

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -439,6 +439,267 @@ def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     new_cache = dict(cache)
     if quant:
         k_q, k_s = quantize_token(k)                # [N,C,Hkv,Dh],[N,C,Hkv]
+        v_q, v_s = quantize_token(v)
+        new_cache["k"] = cache["k"].at[w_page, w_off].set(k_q, mode="drop")
+        new_cache["k_scale"] = cache["k_scale"].at[w_page, w_off].set(
+            k_s, mode="drop")
+        new_cache["v"] = cache["v"].at[w_page, w_off].set(v_q, mode="drop")
+        new_cache["v_scale"] = cache["v_scale"].at[w_page, w_off].set(
+            v_s, mode="drop")
+    else:
+        new_cache["k"] = cache["k"].at[w_page, w_off].set(k, mode="drop")
+        new_cache["v"] = cache["v"].at[w_page, w_off].set(v, mode="drop")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# packed chunked prefill (flat token stream, per-token segment metadata)
+# ---------------------------------------------------------------------------
+
+class PackedSegs(NamedTuple):
+    """Per-token segment metadata for a packed prefill stream of T tokens
+    holding N segments (one per request chunk; pad segments carry
+    start == T so no token maps onto them).
+
+    Per-token ([T]): seg_id, positions (absolute), valid (non-pad),
+    jj (index within segment), lens_tok (segment length broadcast),
+    tok_slot (arena slot broadcast).  Per-segment ([N]): starts, offsets,
+    lengths, slots.
+    """
+    seg_id: Any
+    positions: Any
+    valid: Any
+    jj: Any
+    lens_tok: Any
+    tok_slot: Any
+    starts: Any
+    offsets: Any
+    lengths: Any
+    slots: Any
+
+
+def make_packed_segs(starts, offsets, lengths, slots, T: int) -> PackedSegs:
+    """Expand per-segment (starts/offsets/lengths/slots, all [N]) into the
+    per-token view over a T-token stream.  ``starts`` must be non-decreasing
+    with starts[0] == 0; pad segments use start == T (stream length) so the
+    running count assigns tail tokens to the last real segment."""
+    starts = jnp.asarray(starts, jnp.int32)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    t = jnp.arange(T, dtype=jnp.int32)
+    seg_id = jnp.maximum(
+        jnp.sum(t[:, None] >= starts[None, :], axis=1) - 1, 0
+    ).astype(jnp.int32)
+    jj = t - starts[seg_id]
+    lens_tok = lengths[seg_id]
+    valid = jj < lens_tok
+    positions = offsets[seg_id] + jj
+    tok_slot = slots[seg_id]
+    return PackedSegs(seg_id, positions, valid, jj, lens_tok, tok_slot,
+                      starts, offsets, lengths, slots)
+
+
+def _use_packed_kernel(pack_align: int, T: int, softcap, window) -> bool:
+    """Pallas packed-prefill kernel dispatch: TPU backend, no softcap, a
+    tile-aligned stream (segment starts aligned to pack_align >= 128 so a
+    bq-tile never straddles two segments), and a trace-time window."""
+    import jax as _jax
+    if _jax.default_backend() != "tpu":
+        return False
+    if softcap and softcap > 0.0:
+        return False
+    if pack_align < 128 or T % pack_align != 0:
+        return False
+    try:
+        int(window)
+    except Exception:
+        return False
+    return True
+
+
+def _packed_attention_jax(q, k, v, prev_k, prev_v, prev_pos, seg, *,
+                          n_heads, n_kv_heads, d_head, window, softcap):
+    """Pure-JAX segment-masked attention over a packed stream.
+
+    q: [T, H, D]; k/v: [T, Hkv, D] (the stream's own projected keys/values);
+    prev_k/prev_v: [N, S, Hkv, D] per-SEGMENT arena history with logical
+    positions prev_pos [N, S] (-1 = invalid).  Token t attends over its
+    segment's history plus the causally-visible same-segment stream tokens.
+    Returns ctx [T, H*D] float-accumulated then cast to q.dtype.
+
+    The history and self halves run as separate einsums (summing the two
+    softmax partials) so the [T, T] self block never broadcasts to
+    [T, S+T, ...] — same online-softmax algebra as a concat, and the
+    masked entries contribute exact zeros either way.
+    """
+    T = q.shape[0]
+    S = prev_k.shape[1]
+    Hkv = n_kv_heads
+    G = n_heads // Hkv
+    qg = q.reshape(T, Hkv, G, d_head)
+    # per-token history view (gather by segment id)
+    ph_k = prev_k[seg.seg_id]                                    # [T, S, ...]
+    ph_v = prev_v[seg.seg_id]
+    pk_h = prev_pos[seg.seg_id]                                  # [T, S]
+    s_hist = jnp.einsum("thgd,tshd->thgs", qg, ph_k,
+                        preferred_element_type=jnp.float32)
+    s_self = jnp.einsum("thgd,uhd->thgu", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.concatenate([s_hist, s_self], axis=-1) / math.sqrt(d_head)
+    scores = _maybe_softcap(scores, softcap)
+    pq = seg.positions[:, None]                                  # [T, 1]
+    kv_pos_self = jnp.where(seg.valid, seg.positions, -1)        # [T]
+    pk = jnp.concatenate(
+        [pk_h, jnp.broadcast_to(kv_pos_self[None, :], (T, T))], axis=1)
+    w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    ok = (pk >= 0) & (pk <= pq) & ((pq - pk) < w)
+    same = jnp.concatenate(
+        [jnp.ones((T, S), jnp.bool_),
+         seg.seg_id[None, :] == seg.seg_id[:, None]], axis=1)
+    scores = jnp.where((ok & same)[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("thgs,tshd->thgd", probs[..., :S].astype(ph_v.dtype),
+                     ph_v, preferred_element_type=jnp.float32)
+    ctx = ctx + jnp.einsum("thgu,uhd->thgd", probs[..., S:].astype(v.dtype),
+                           v, preferred_element_type=jnp.float32)
+    return ctx.reshape(T, n_heads * d_head)
+
+
+def attn_chunk_packed(params, x, seg: PackedSegs, cache_k, cache_v, *,
+                      n_heads, n_kv_heads, d_head, theta, window,
+                      softcap=0.0, qk_norm=False, pack_align: int = 0):
+    """Packed-stream chunked prefill against the dense decode arena.
+
+    x: [1, T, d] — one flat stream of N segments described by ``seg``
+    (see ``PackedSegs``); cache_k/v: [B, R, Hkv, Dh].  Same arena-direct
+    contract as ``attn_chunk`` but without padded rows: each token attends
+    over its OWN segment's ring history plus the causally-visible tokens of
+    the same segment inside the stream.  On TPU with a tile-aligned stream
+    the attention sweep runs in the Pallas ``packed_prefill_attention``
+    kernel (the dense arena is presented as a 1-page-per-segment pool view).
+
+    Returns (out [1, T, d_model], new_cache_k, new_cache_v).
+    """
+    _, T, _ = x.shape
+    B, R = cache_k.shape[0], cache_k.shape[1]
+    positions = seg.positions[None]                              # [1, T]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, theta, qk_norm)
+    q, k, v = q[0], k[0], v[0]                                   # [T, ...]
+
+    if _use_packed_kernel(pack_align, T, softcap, window):
+        from repro.kernels import ops as _kops
+        # dense arena as a page view: one R-sized page per slot, block
+        # table = the segment's slot (sentinel B for pad segments drops
+        # to a clamped page whose entries prev_pos-mask out anyway)
+        ctx = _kops.packed_prefill_attention(
+            q, k, v, cache_k, cache_v, seg.slots[:, None],
+            seg.starts, seg.offsets, seg.lengths,
+            ring=R, window=int(window), bq=pack_align)
+        ctx = ctx.reshape(T, n_heads * d_head)
+    else:
+        row = jnp.clip(seg.slots, 0, B - 1)
+        prev_k = cache_k[row]                                    # [N, R, ...]
+        prev_v = cache_v[row]
+        s_idx = jnp.arange(R, dtype=jnp.int32)
+        offs = seg.offsets
+        prev_pos = (offs[:, None] - 1
+                    - ((offs[:, None] - 1 - s_idx[None, :]) % R))
+        ctx = _packed_attention_jax(
+            q, k, v, prev_k, prev_v, prev_pos, seg,
+            n_heads=n_heads, n_kv_heads=n_kv_heads, d_head=d_head,
+            window=window, softcap=softcap)
+    out = matmul(ctx[None].astype(x.dtype), params["wo"])
+
+    # arena write: identical ring discipline to attn_chunk, per token
+    keep = seg.valid & (seg.jj >= seg.lens_tok - R)
+    w_slot = jnp.where(keep, seg.tok_slot, B)
+    w_idx = jnp.where(keep, seg.positions % R, R)
+    new_k = cache_k.at[w_slot, w_idx].set(k, mode="drop")
+    new_v = cache_v.at[w_slot, w_idx].set(v, mode="drop")
+    return out, new_k, new_v
+
+
+def attn_chunk_packed_paged(params, x, seg: PackedSegs, cache, block_table,
+                            *, n_heads, n_kv_heads, d_head, theta, window,
+                            softcap=0.0, qk_norm=False, pack_align: int = 0):
+    """Packed-stream chunked prefill writing K/V into the paged block pool.
+
+    Same stream contract as ``attn_chunk_packed``; the arena is the pool
+    ``cache`` ([n_pages, P, ...]) addressed via ``block_table`` [B, W]
+    exactly as in ``attn_chunk_paged`` (ring span R, sentinel pages drop,
+    int8 pools dequantize history / quantize writes).  On TPU the float
+    pool path runs the Pallas kernel with the segments' block-table rows
+    scalar-prefetched.
+
+    Returns (out [1, T, d_model], new_cache dict).
+    """
+    from repro.serving.quantized_cache import dequantize, quantize_token
+
+    _, T, _ = x.shape
+    n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
+    B, W = block_table.shape[0], block_table.shape[1]
+    capacity = n_pages * P
+    try:
+        w_static = int(window)
+    except Exception as e:          # pragma: no cover - window is per-run static
+        raise ValueError("paged attention needs a trace-time window") from e
+    R = min(w_static, capacity) if w_static > 0 else capacity
+    S = W * P
+    quant = "k_scale" in cache
+
+    positions = seg.positions[None]                              # [1, T]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, theta, qk_norm)
+    q, k, v = q[0], k[0], v[0]                                   # [T, ...]
+    bt_rows = jnp.asarray(block_table, jnp.int32)[
+        jnp.clip(seg.slots, 0, B - 1)]                           # [N, W]
+
+    if not quant and _use_packed_kernel(pack_align, T, softcap, window):
+        from repro.kernels import ops as _kops
+        ctx = _kops.packed_prefill_attention(
+            q, k, v, cache["k"], cache["v"], bt_rows,
+            seg.starts, seg.offsets, seg.lengths,
+            ring=R, window=w_static, bq=pack_align)
+        ctx = ctx.reshape(T, n_heads * d_head)
+    else:
+        pages = jnp.clip(bt_rows, 0, n_pages - 1)
+        if quant:
+            prev_k = dequantize(cache["k"][pages], cache["k_scale"][pages])
+            prev_v = dequantize(cache["v"][pages], cache["v_scale"][pages])
+            prev_k = prev_k.astype(x.dtype)
+            prev_v = prev_v.astype(x.dtype)
+        else:
+            prev_k = cache["k"][pages]            # [N, W, P, Hkv, Dh]
+            prev_v = cache["v"][pages]
+        N = bt_rows.shape[0]
+        prev_k = prev_k.reshape(N, S, n_kv_heads, d_head)
+        prev_v = prev_v.reshape(N, S, n_kv_heads, d_head)
+        s_idx = jnp.arange(S, dtype=jnp.int32)
+        offs = seg.offsets
+        prev_pos = (offs[:, None] - 1
+                    - ((offs[:, None] - 1 - s_idx[None, :]) % R))
+        prev_pos = jnp.where(s_idx[None, :] < R, prev_pos, -1)
+        unalloc = jnp.repeat(bt_rows >= n_pages, P, axis=1)      # [N, S]
+        prev_pos = jnp.where(unalloc, -1, prev_pos)
+        ctx = _packed_attention_jax(
+            q, k, v, prev_k, prev_v, prev_pos, seg,
+            n_heads=n_heads, n_kv_heads=n_kv_heads, d_head=d_head,
+            window=window, softcap=softcap)
+    out = matmul(ctx[None].astype(x.dtype), params["wo"])
+
+    # pool write: ring discipline through the block table, per token
+    keep = seg.valid & (seg.jj >= seg.lens_tok - R)
+    valid_row = (seg.tok_slot >= 0) & (seg.tok_slot < B)
+    ridx = seg.positions % R
+    bt_tok = bt_rows[seg.seg_id]                                 # [T, W]
+    w_page = jnp.take_along_axis(bt_tok, (ridx // P)[:, None], axis=1)[:, 0]
+    w_page = jnp.where(keep & valid_row, w_page, n_pages)
+    w_off = jnp.where(keep, ridx % P, P)
+    new_cache = dict(cache)
+    if quant:
+        k_q, k_s = quantize_token(k)              # [T,Hkv,Dh],[T,Hkv]
         v_q, v_s = quantize_token(v)
         new_cache["k"] = cache["k"].at[w_page, w_off].set(k_q, mode="drop")
         new_cache["k_scale"] = cache["k_scale"].at[w_page, w_off].set(

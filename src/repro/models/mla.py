@@ -228,6 +228,103 @@ def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     return out, cache
 
 
+def mla_chunk_packed(params, x, seg, cache, *, n_heads, m: MLAConfig):
+    """Packed-stream chunked prefill against the latent decode arena.
+
+    x: [1, T, d] — one flat stream of N segments described by ``seg`` (a
+    ``models.attention.PackedSegs``); cache: [B, S, r+dr].  Same
+    scatter-first absorbed formulation as ``mla_chunk``: the stream's
+    latents land in the arena (invalid tokens drop out of bounds), then
+    every token runs the absorbed sweep over its OWN slot's arena with
+    entries above its position masked — the softmax axis is the arena
+    axis S exactly as in the padded path, so the math is order-identical.
+    Returns (out [1, T, d], new_cache).
+    """
+    _, T, _ = x.shape
+    B, S = cache.shape[0], cache.shape[1]
+    positions = seg.positions[None]                             # [1, T]
+    q_nope, q_rope = _queries(params, x, n_heads, m, positions)
+    c_new, kr_new = _latent(params, x, m, positions)
+    q_nope, q_rope = q_nope[0], q_rope[0]                       # [T, H, .]
+    entry = jnp.concatenate([c_new, kr_new], axis=-1)[0]        # [T, r+dr]
+    w_slot = jnp.where(seg.valid, seg.tok_slot, B)
+    w_idx = jnp.where(seg.valid, seg.positions, S)
+    cache = cache.at[w_slot, w_idx].set(entry, mode="drop")
+    lat = cache[jnp.clip(seg.tok_slot, 0, B - 1)]               # [T, S, r+dr]
+    c_kv = lat[..., : m.kv_lora_rank]
+    k_rope = lat[..., m.kv_lora_rank:]
+    q_lat = jnp.einsum("thd,hrd->thr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("thr,tsr->ths", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("thd,tsd->ths", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, :]
+             <= seg.positions[:, None])                         # [T, S]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("ths,tsr->thr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = jnp.einsum("thr,hrv->thv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(1, T, n_heads * m.v_head_dim), params["wo"])
+    return out, cache
+
+
+def mla_chunk_packed_paged(params, x, seg, cache, block_table, *,
+                           n_heads, m: MLAConfig):
+    """Packed-stream chunked prefill against the PAGED latent pool.
+
+    Same stream contract as ``mla_chunk_packed``; the arena is the pool
+    ``cache`` [n_pages, P, r+dr] addressed via ``block_table`` [B, W]
+    exactly as in ``mla_chunk_paged`` (position-indexed, sentinel pages
+    drop / mask).  Returns (out [1, T, d], new_cache).
+    """
+    _, T, _ = x.shape
+    n_pages, P = cache.shape[0], cache.shape[1]
+    B, W = block_table.shape[0], block_table.shape[1]
+    S = W * P
+    positions = seg.positions[None]                             # [1, T]
+    q_nope, q_rope = _queries(params, x, n_heads, m, positions)
+    c_new, kr_new = _latent(params, x, m, positions)
+    q_nope, q_rope = q_nope[0], q_rope[0]                       # [T, H, .]
+    entry = jnp.concatenate([c_new, kr_new], axis=-1)[0]        # [T, r+dr]
+    bt = jnp.asarray(block_table, jnp.int32)
+    bt_rows = bt[jnp.clip(seg.slots, 0, B - 1)]                 # [N, W]
+    bt_tok = bt_rows[seg.seg_id]                                # [T, W]
+    valid_row = (seg.tok_slot >= 0) & (seg.tok_slot < B)
+    w_page = jnp.take_along_axis(
+        bt_tok, (seg.positions // P)[:, None], axis=1)[:, 0]
+    w_page = jnp.where(seg.valid & valid_row, w_page, n_pages)
+    w_off = jnp.where(seg.valid, seg.positions % P, P)
+    cache = cache.at[w_page, w_off].set(entry, mode="drop")
+    lat = cache[jnp.clip(bt_tok, 0, n_pages - 1)]               # [T, W, P, w]
+    lat = lat.reshape(T, S, lat.shape[-1])
+    c_kv = lat[..., : m.kv_lora_rank]
+    k_rope = lat[..., m.kv_lora_rank:]
+    q_lat = jnp.einsum("thd,hrd->thr", q_nope, params["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.einsum("thr,tsr->ths", q_lat, c_kv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("thd,tsd->ths", q_rope, k_rope,
+                    preferred_element_type=jnp.float32)
+    s *= scale
+    valid = (jnp.arange(S, dtype=jnp.int32)[None, :]
+             <= seg.positions[:, None])                         # [T, S]
+    valid &= ~jnp.repeat(bt_tok >= n_pages, P, axis=1)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("ths,tsr->thr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    ctx = jnp.einsum("thr,hrv->thv", ctx_lat, params["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(ctx.reshape(1, T, n_heads * m.v_head_dim), params["wo"])
+    return out, cache
+
+
 def mla_decode_paged(params, x, cache, block_table, pos, *, n_heads,
                      m: MLAConfig):
     """Absorbed paged decode: GEMV sweep over the gathered latent pages.

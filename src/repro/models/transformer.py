@@ -437,6 +437,60 @@ def _attn_layer_chunk_paged(cfg, run, lp, x, offsets, lengths, slots, cache,
     return x, new_cache
 
 
+def _attn_layer_chunk_packed(cfg, run, lp, x, seg, cache, pack_align):
+    """One attention layer of a PACKED prefill stream (arena-direct)."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla.enabled:
+        a, latent = mla_mod.mla_chunk_packed(lp["attn"], h, seg,
+                                             cache["latent"],
+                                             n_heads=cfg.n_heads, m=cfg.mla)
+        new_cache = {"latent": latent}
+    else:
+        a, ck, cv = attn_mod.attn_chunk_packed(
+            lp["attn"], h, seg, cache["k"], cache["v"],
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=run.window,
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm,
+            pack_align=pack_align)
+        new_cache = {"k": ck, "v": cv}
+    x = x + a
+    if run.ffn_kind == "moe":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg.moe, cfg.act)
+        x = x + f
+    elif run.ffn_kind == "dense":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, cfg.act)
+    return x, new_cache
+
+
+def _attn_layer_chunk_packed_paged(cfg, run, lp, x, seg, cache, bt,
+                                   pack_align):
+    """One attention layer of a PACKED prefill stream against the page pool."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.mla.enabled:
+        a, latent = mla_mod.mla_chunk_packed_paged(
+            lp["attn"], h, seg, cache["latent"], bt,
+            n_heads=cfg.n_heads, m=cfg.mla)
+        new_cache = {"latent": latent}
+    else:
+        a, new_cache = attn_mod.attn_chunk_packed_paged(
+            lp["attn"], h, seg, cache, bt,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            theta=run.theta, window=run.window,
+            softcap=cfg.attn.logit_softcap, qk_norm=cfg.attn.qk_norm,
+            pack_align=pack_align)
+    x = x + a
+    if run.ffn_kind == "moe":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        f, _ = moe_mod.moe_apply(lp["moe"], h, cfg.moe, cfg.act)
+        x = x + f
+    elif run.ffn_kind == "dense":
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, cfg.act)
+    return x, new_cache
+
+
 def _ssm_layer_prefill(cfg, run, lp, x, want_cache: bool):
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     o, (conv_state, state) = ssm_mod.ssm_prefill(lp["ssm"], h, cfg.d_model, cfg.ssm)
@@ -699,6 +753,64 @@ def forward_chunk(params: Params, cfg: ModelConfig, tokens, offsets,
         return lm_logits(params, cfg, x), new_caches             # [N, C, ...]
     last = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
     h_last = x[jnp.arange(N), last][:, None, :]                  # [N, 1, d]
+    return lm_logits(params, cfg, h_last), new_caches
+
+
+def forward_chunk_packed(params: Params, cfg: ModelConfig, tokens, starts,
+                         offsets, lengths, slots, cache: List[Any],
+                         block_tables: Optional[List[Any]] = None,
+                         pack_align: int = 8):
+    """PACKED chunked prefill: one flat token stream instead of [N, C] rows.
+
+    tokens: [T] — N segments (one per request chunk) laid out back to back
+    at ``starts`` [N] (non-decreasing, aligned to ``pack_align``; pad
+    segments carry start == T).  Segment ``n`` holds prompt tokens
+    [offsets[n], offsets[n]+lengths[n]) of the request in arena slot
+    ``slots[n]``.  Only inter-segment alignment slack plus the final
+    pow2-bucket tail is padding — mixed-length chunk batches no longer pay
+    max-length padding on every row (the packing-prefetch scheduler shape;
+    HALO keeps CiM prefill utilization high the same way).
+
+    Returns (last_logits [N, 1, V], new_cache): logits of each segment's
+    last valid position — meaningful only for segments completing their
+    prompt, like ``forward_chunk``.  Requires supports_chunked_prefill()
+    and a single codebook (packed streams are [T], not [K, T]).
+    """
+    if cfg.n_codebooks > 1:
+        raise NotImplementedError("packed prefill is single-codebook only")
+    plan = build_plan(cfg)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    T = tokens.shape[-1]
+    x = embed_tokens(params, cfg, tokens[None])                  # [1, T, d]
+    x = constrain(x, "act_btd")
+    seg = attn_mod.make_packed_segs(starts, offsets, lengths, slots, T)
+    new_caches: List[Any] = []
+    for r, run in enumerate(plan):
+        if run.kind != "attn":
+            raise NotImplementedError(
+                f"packed prefill over {run.kind!r} runs; gate on "
+                "supports_chunked_prefill()")
+        rp = params["runs"][r]
+        bt = block_tables[r] if block_tables is not None else None
+
+        def body(carry, xs, run=run, bt=bt):
+            xx, _ = carry
+            lp, lc = xs
+            if bt is None:
+                xx, nc = _attn_layer_chunk_packed(cfg, run, lp, xx, seg,
+                                                  lc, pack_align)
+            else:
+                xx, nc = _attn_layer_chunk_packed_paged(cfg, run, lp, xx,
+                                                        seg, lc, bt,
+                                                        pack_align)
+            return (xx, None), nc
+
+        (x, _), ys = jax.lax.scan(body, (x, None), (rp, cache[r]))
+        new_caches.append(ys)
+        x = constrain(x, "act_btd")
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.clip(seg.starts + seg.lengths - 1, 0, T - 1)      # [N]
+    h_last = x[0, last][:, None, :]                              # [N, 1, d]
     return lm_logits(params, cfg, h_last), new_caches
 
 

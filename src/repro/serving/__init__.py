@@ -26,10 +26,17 @@ from repro.serving.sampling import (
     verify_draft,
     verify_draft_rows,
 )
-from repro.serving.scheduler import PhaseAwareConfig, PhaseScheduler, TickPlan
+from repro.serving.scheduler import (
+    PackedPrefill,
+    PhaseAwareConfig,
+    PhaseScheduler,
+    TickPlan,
+    pack_chunks,
+)
 from repro.serving.speculative import SpecConfig
 
 __all__ = [
+    "PackedPrefill",
     "PhaseAwareConfig",
     "PhaseScheduler",
     "PrefixCache",
@@ -42,6 +49,7 @@ __all__ = [
     "SpecConfig",
     "TickPlan",
     "TickRecord",
+    "pack_chunks",
     "sample_tokens",
     "sample_tokens_rows",
     "verify_draft",

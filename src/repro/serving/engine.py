@@ -111,6 +111,7 @@ from repro.configs.base import ModelConfig
 from repro.models.transformer import (
     forward,
     forward_chunk,
+    forward_chunk_packed,
     init_cache,
     prefill_into_arena,
     supports_chunked_prefill,
@@ -130,6 +131,7 @@ from repro.serving.scheduler import (
     PhaseScheduler,
     TickPlan,
     bucket_pow2 as _bucket,
+    pack_chunks,
 )
 from repro.serving.speculative import SpecConfig, build_drafter
 
@@ -220,6 +222,7 @@ class TickRecord:
     kv_resident_bytes: int = 0          # allocated KV bytes after the tick
     spec_drafted: int = 0               # draft tokens verified this tick
     spec_accepted: int = 0              # draft tokens accepted this tick
+    new_compiles: int = 0               # phase-program shapes first seen here
 
     @property
     def mixed(self) -> bool:
@@ -255,6 +258,15 @@ class ServeConfig:
     # radix prefix cache over the page pool (requires paged): shared-prompt
     # KV pages are reused copy-on-write instead of recomputed
     prefix_cache: bool = False
+    # packed prefill: the tick's chunks run as ONE flat token stream with
+    # per-segment metadata (models/transformer.forward_chunk_packed)
+    # instead of a padded [N, C] batch — pad work drops from
+    # N*C - sum(take) to the pack-alignment remainder, and the compiled
+    # shape is keyed by ONE bucketed length instead of an (N, C) grid.
+    # Applies to chunked attention-only single-codebook plans; everything
+    # else falls back to the padded path.  Greedy streams are
+    # bit-identical either way.
+    packed_prefill: bool = True
 
     _LEGACY_SAMPLING_DEFAULTS = (True, 1.0, 0, 0.0)
 
@@ -371,6 +383,19 @@ class ServingEngine:
         self._next_id = 0
         self.chunked = (supports_chunked_prefill(cfg)
                         and sc.phase.prefill_chunk > 0)
+        # packed prefill needs the chunked attention path (arena-direct
+        # writes at (slot, offset)) and a flat single-codebook stream
+        self._packed = (sc.packed_prefill and self.chunked
+                        and cfg.n_codebooks <= 1)
+        # compile accounting: every phase call notes its (group, kind,
+        # bucketed shape, all_greedy) key; a first sighting counts as a
+        # compile.  Buckets make this an upper bound that converges — the
+        # second pass of any traffic mix adds zero
+        self._compile_keys: set = set()
+        self.compile_count = 0           # distinct phase-program shapes
+        self._tick_new_compiles = 0
+        self.prefill_launches = 0        # prefill phase-program calls
+        self.prefill_rows_executed = 0   # token rows computed (incl. pad)
         # (group, kind) -> jitted program; built lazily so each strategy
         # only compiles the programs its groups actually execute
         self._programs: Dict[Tuple[str, str], Callable] = {}
@@ -403,10 +428,28 @@ class ServingEngine:
                 "decode": (self._decode_impl, 2, 10),
                 "chunk_paged": (self._prefill_chunk_paged_impl, 5, 12),
                 "decode_paged": (self._decode_paged_impl, 2, 10),
+                "packed": (self._prefill_packed_impl, 6, 12),
+                "packed_paged": (self._prefill_packed_paged_impl, 6, 13),
                 "verify": (self._verify_impl, 5, 13)}[kind]
             self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,),
                                           static_argnums=(static_arg,))
         return self._programs[key]
+
+    def _note_compile(self, group: str, kind: str, shape: Tuple[int, ...],
+                      all_greedy: bool) -> None:
+        """Record one phase-program call's compilation key.
+
+        jit retraces on every new input-shape signature; with the pow2
+        buckets each phase has a small closed key set, so after warmup
+        every key is a cache hit.  The counter is what serving_bench and
+        the tier-2 smoke assert on: a second pass of the same traffic mix
+        must add ZERO new compiles — the recompile-stall guarantee the
+        bucket ladder exists to provide."""
+        key = (group, kind, shape, bool(all_greedy))
+        if key not in self._compile_keys:
+            self._compile_keys.add(key)
+            self.compile_count += 1
+            self._tick_new_compiles += 1
 
     # -- jitted bodies ---------------------------------------------------------
     def _sample(self, logits, temps, top_ks, top_ps, seeds, counters,
@@ -446,6 +489,30 @@ class ServingEngine:
         logits, new_cache = forward_chunk(params, self.cfg, tokens, offsets,
                                           lengths, slots, cache,
                                           block_tables=block_tables)
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
+
+    def _prefill_packed_impl(self, params, tokens, starts, offsets, lengths,
+                             slots, cache, temps, top_ks, top_ps, seeds,
+                             counters, all_greedy):
+        """Packed-stream chunk prefill (dense arena): the tick's chunks as
+        one flat [T] token stream of bq-aligned segments — one launch,
+        one compiled shape per bucketed T."""
+        logits, new_cache = forward_chunk_packed(
+            params, self.cfg, tokens, starts, offsets, lengths, slots,
+            cache, pack_align=self.sc.phase.pack_align)
+        return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
+                            all_greedy), new_cache
+
+    def _prefill_packed_paged_impl(self, params, tokens, starts, offsets,
+                                   lengths, slots, cache, block_tables,
+                                   temps, top_ks, top_ps, seeds, counters,
+                                   all_greedy):
+        """Packed-stream chunk prefill into the page pool."""
+        logits, new_cache = forward_chunk_packed(
+            params, self.cfg, tokens, starts, offsets, lengths, slots,
+            cache, block_tables=block_tables,
+            pack_align=self.sc.phase.pack_align)
         return self._sample(logits, temps, top_ks, top_ps, seeds, counters,
                             all_greedy), new_cache
 
@@ -894,7 +961,7 @@ class ServingEngine:
         """Execute the plan's prefill chunks on the planned worker group."""
         reqs = self._by_id()
         chunks = [(reqs[rid], take) for rid, take in plan.prefill_chunks
-                  if rid in reqs]
+                  if rid in reqs and take > 0]
         if not chunks:
             return
         if not self.chunked:
@@ -903,11 +970,15 @@ class ServingEngine:
             for req, take in chunks:
                 tokens = jnp.asarray(req.prompt[None], jnp.int32)
                 pp, all_greedy = self._pack_params([(0, req)], 1)
+                self._note_compile(plan.prefill_group, "whole",
+                                   (req.prompt_len,), all_greedy)
                 toks, self.cache = self._program(plan.prefill_group, "whole")(
                     self.params, tokens, jnp.int32(req.slot), self.cache,
                     *pp, all_greedy)
                 req.prefill_pos = req.prompt_len
                 self.prefill_tokens_executed += req.prompt_len
+                self.prefill_launches += 1
+                self.prefill_rows_executed += req.prompt_len
                 self._start_decoding(req, self._to_host(toks)[0])
             return
 
@@ -935,8 +1006,23 @@ class ServingEngine:
                 return
         self._prefill_progress = True
 
-        # pack the tick's chunks into one padded batch (pow2 buckets bound
-        # the number of compiled shapes)
+        if self._packed:
+            toks = self._launch_packed_prefill(plan, chunks)
+        else:
+            toks = self._launch_padded_prefill(plan, chunks)
+        self.prefill_tokens_executed += sum(take for _, take in chunks)
+        self.prefill_launches += 1
+        sampled = None
+        for i, (req, take) in enumerate(chunks):
+            req.prefill_pos += take
+            if req.prefill_pos >= self._effective_len(req):
+                if sampled is None:
+                    sampled = self._to_host(toks)   # one transfer per tick
+                self._start_decoding(req, sampled[i])
+
+    def _launch_padded_prefill(self, plan: TickPlan, chunks) -> Any:
+        """The tick's chunks as one padded [N, C] batch (pow2 buckets bound
+        the number of compiled shapes).  Row i samples chunk i."""
         N = _bucket(len(chunks), self.sc.max_batch)
         C = _bucket(max(take for _, take in chunks), self.sc.phase.prefill_chunk)
         if self.cfg.n_codebooks > 1:
@@ -954,25 +1040,71 @@ class ServingEngine:
             slots[i] = req.slot
         pp, all_greedy = self._pack_params(
             [(i, req) for i, (req, _) in enumerate(chunks)], N)
+        self.prefill_rows_executed += N * C
         if self.paged:
+            self._note_compile(plan.prefill_group, "chunk_paged", (N, C),
+                               all_greedy)
             toks, self.cache = self._program(plan.prefill_group,
                                              "chunk_paged")(
                 self.params, jnp.asarray(tokens), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(slots), self.cache,
                 self.pool.block_tables(), *pp, all_greedy)
         else:
+            self._note_compile(plan.prefill_group, "chunk", (N, C),
+                               all_greedy)
             toks, self.cache = self._program(plan.prefill_group, "chunk")(
                 self.params, jnp.asarray(tokens), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(slots), self.cache,
                 *pp, all_greedy)
-        self.prefill_tokens_executed += sum(take for _, take in chunks)
-        sampled = None
+        return toks
+
+    def _launch_packed_prefill(self, plan: TickPlan, chunks) -> Any:
+        """The tick's chunks as ONE flat [T] token stream: chunk i occupies
+        ``[starts[i], starts[i] + take)``, T is the pow2-bucketed packed
+        length, and pad gaps carry no request (start sentinel T, slot
+        sentinel max_batch).  Pad work is the alignment remainder instead
+        of the padded batch's ``N*C - sum(take)``, and the compiled-shape
+        key is (T,) alone — one ladder, not an (N, C) grid: the segment
+        metadata is always max_batch wide (tiny arrays; pad segments are
+        sentinel-masked), so only the stream length retraces.  Row i of
+        the returned tokens samples chunk i, exactly like the padded
+        batch."""
+        packed = pack_chunks([(req.req_id, take) for req, take in chunks],
+                             align=self.sc.phase.pack_align)
+        T = packed.length
+        Nb = self.sc.max_batch
+        tokens = np.zeros((T,), np.int32)
+        starts = np.full((Nb,), T, np.int32)    # pad segments: empty tail
+        offs = np.zeros((Nb,), np.int32)
+        lens = np.zeros((Nb,), np.int32)
+        slots = np.full((Nb,), self.sc.max_batch, np.int32)  # OOB rows: drop
         for i, (req, take) in enumerate(chunks):
-            req.prefill_pos += take
-            if req.prefill_pos >= self._effective_len(req):
-                if sampled is None:
-                    sampled = self._to_host(toks)   # one transfer per tick
-                self._start_decoding(req, sampled[i])
+            s = packed.starts[i]
+            sl = slice(req.prefill_pos, req.prefill_pos + take)
+            tokens[s:s + take] = self._effective_tokens(req)[sl]
+            starts[i] = s
+            offs[i] = req.prefill_pos
+            lens[i] = take
+            slots[i] = req.slot
+        pp, all_greedy = self._pack_params(
+            [(i, req) for i, (req, _) in enumerate(chunks)], Nb)
+        self.prefill_rows_executed += T
+        if self.paged:
+            self._note_compile(plan.prefill_group, "packed_paged", (T, Nb),
+                               all_greedy)
+            toks, self.cache = self._program(plan.prefill_group,
+                                             "packed_paged")(
+                self.params, jnp.asarray(tokens), jnp.asarray(starts),
+                jnp.asarray(offs), jnp.asarray(lens), jnp.asarray(slots),
+                self.cache, self.pool.block_tables(), *pp, all_greedy)
+        else:
+            self._note_compile(plan.prefill_group, "packed", (T, Nb),
+                               all_greedy)
+            toks, self.cache = self._program(plan.prefill_group, "packed")(
+                self.params, jnp.asarray(tokens), jnp.asarray(starts),
+                jnp.asarray(offs), jnp.asarray(lens), jnp.asarray(slots),
+                self.cache, *pp, all_greedy)
+        return toks
 
     # -- speculative draft/verify ------------------------------------------------
     def _spec_budget(self, r: Request) -> int:
@@ -1017,6 +1149,7 @@ class ServingEngine:
             slots[i] = r.slot
         pp, all_greedy = self._pack_params(
             [(i, r) for i, (r, _) in enumerate(rows)], N)
+        self._note_compile(plan.verify_group, "verify", (N, C), all_greedy)
         out, self.cache = self._program(plan.verify_group, "verify")(
             self.params, jnp.asarray(tokens), jnp.asarray(offs),
             jnp.asarray(lens), jnp.asarray(slots), self.cache,
@@ -1110,33 +1243,59 @@ class ServingEngine:
         if not active:
             return
         B = self.sc.max_batch
-        if self.cfg.n_codebooks > 1:
-            tokens = np.zeros((B, self.cfg.n_codebooks, 1), np.int32)
-        else:
-            tokens = np.zeros((B, 1), np.int32)
-        mask = np.zeros((B,), bool)
-        for r in active:
-            tokens[r.slot, ..., 0] = r.generated[-1]
-            mask[r.slot] = True
-        # ragged decode: per-slot positions (vector pos -> per-slot rope,
-        # per-slot cache write index, per-slot validity mask)
-        pos = np.where(self.slot_pos >= 0, self.slot_pos, 0).astype(np.int32)
-        pp, all_greedy = self._pack_params([(r.slot, r) for r in active], B)
         if self.paged:
-            # inactive slots get all-sentinel block-table rows: their
-            # scatters drop — the paged analogue of the dense slot_mask
+            # the page pool addresses KV through the CALL's block tables,
+            # not the batch row, so the decode batch compacts: active
+            # slots map to rows 0..len(active) and the row count rounds
+            # up the pow2 bucket ladder — a lone straggler decodes at
+            # batch 1, not max_batch, with at most log2(B)+1 shapes
+            nb = _bucket(len(active), B)
+            if self.cfg.n_codebooks > 1:
+                tokens = np.zeros((nb, self.cfg.n_codebooks, 1), np.int32)
+            else:
+                tokens = np.zeros((nb, 1), np.int32)
+            pos = np.zeros((nb,), np.int32)
+            for i, r in enumerate(active):
+                tokens[i, ..., 0] = r.generated[-1]
+                pos[i] = self.slot_pos[r.slot]
+            pp, all_greedy = self._pack_params(
+                [(i, r) for i, r in enumerate(active)], nb)
+            self._note_compile(plan.decode_group, "decode_paged", (nb,),
+                               all_greedy)
+            # pad rows carry all-sentinel block-table rows: their scatters
+            # drop — the paged analogue of the dense slot_mask
             toks, self.cache = self._program(plan.decode_group,
                                              "decode_paged")(
                 self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(pos), self.pool.block_tables(mask),
+                jnp.asarray(pos),
+                self.pool.block_tables(rows=[r.slot for r in active], n=nb),
                 *pp, all_greedy)
+            sampled = self._to_host(toks)           # one transfer per tick
+            emitted = [(i, r) for i, r in enumerate(active)]
         else:
+            # the dense arena is slot-indexed, so the batch stays [B]
+            if self.cfg.n_codebooks > 1:
+                tokens = np.zeros((B, self.cfg.n_codebooks, 1), np.int32)
+            else:
+                tokens = np.zeros((B, 1), np.int32)
+            mask = np.zeros((B,), bool)
+            for r in active:
+                tokens[r.slot, ..., 0] = r.generated[-1]
+                mask[r.slot] = True
+            # ragged decode: per-slot positions (vector pos -> per-slot
+            # rope, per-slot cache write index, per-slot validity mask)
+            pos = np.where(self.slot_pos >= 0,
+                           self.slot_pos, 0).astype(np.int32)
+            pp, all_greedy = self._pack_params(
+                [(r.slot, r) for r in active], B)
+            self._note_compile(plan.decode_group, "decode", (B,), all_greedy)
             toks, self.cache = self._program(plan.decode_group, "decode")(
                 self.params, jnp.asarray(tokens), self.cache,
                 jnp.asarray(pos), jnp.asarray(mask), *pp, all_greedy)
-        sampled = self._to_host(toks)               # one transfer per tick
-        for r in active:
-            self._append_token(r, sampled[r.slot])
+            sampled = self._to_host(toks)           # one transfer per tick
+            emitted = [(r.slot, r) for r in active]
+        for row, r in emitted:
+            self._append_token(r, sampled[row])
             # occupancy is counted at emission, not at planning: a request
             # preempted by its own growth failure emitted nothing and must
             # not drag tokens_per_tick below the non-speculative 1.0 floor
@@ -1162,6 +1321,7 @@ class ServingEngine:
         self._tick_preemptions = 0
         self._tick_spec_drafted = 0
         self._tick_spec_accepted = 0
+        self._tick_new_compiles = 0
         self._prefill_progress = False
         # snapshot for incremental outputs: every request that can gain
         # tokens this tick is in the queue or a slot right now
@@ -1217,7 +1377,8 @@ class ServingEngine:
             preemptions=self._tick_preemptions,
             kv_resident_bytes=resident,
             spec_drafted=self._tick_spec_drafted,
-            spec_accepted=self._tick_spec_accepted)
+            spec_accepted=self._tick_spec_accepted,
+            new_compiles=self._tick_new_compiles)
         self.tick_log.append(rec)
         self._n_ticks += 1
         self._n_prefill_ticks += bool(rec.prefill_reqs)

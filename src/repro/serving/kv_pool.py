@@ -483,16 +483,30 @@ class KVPool:
         self.pools[run].release_ref(page)
 
     # -- device-facing views --------------------------------------------------------
-    def block_tables(self, active: Optional[np.ndarray] = None) -> List[Any]:
+    def block_tables(self, active: Optional[np.ndarray] = None, *,
+                     rows: Optional[Sequence[int]] = None,
+                     n: int = 0) -> List[Any]:
         """Per-run ``[n_slots, W_r]`` int32 block tables for a jitted call.
         Rows of slots not in ``active`` (bool [n_slots]) are forced to the
-        sentinel so their scatters drop and their gathers mask out."""
+        sentinel so their scatters drop and their gathers mask out.
+
+        ``rows`` selects a COMPACTED view instead: row i of the returned
+        tables is slot ``rows[i]``'s table, padded with all-sentinel rows
+        up to ``max(n, len(rows))`` — the engine's bucketed decode batch,
+        where batch rows no longer coincide with slots."""
         out = []
         for p in self.pools:
-            t = p.table
-            if active is not None:
-                t = t.copy()
-                t[~active] = p.n_pages
+            if rows is not None:
+                nb = max(n, len(rows))
+                t = np.full((nb, p.table.shape[1]), p.n_pages,
+                            p.table.dtype)
+                if rows:
+                    t[:len(rows)] = p.table[list(rows)]
+            else:
+                t = p.table
+                if active is not None:
+                    t = t.copy()
+                    t[~active] = p.n_pages
             out.append(jnp.asarray(t))
         return out
 

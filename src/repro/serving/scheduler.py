@@ -58,12 +58,85 @@ def bucket_pow2(n: int, cap: int = 0) -> int:
     return max(1, min(b, cap)) if cap else b
 
 
+def align_up(n: int, align: int) -> int:
+    return -(-max(n, 0) // max(align, 1)) * max(align, 1)
+
+
+def bucket_tokens(n: int, align: int = 1) -> int:
+    """``bucket_pow2`` with a half-octave step: round ``n`` up to the
+    nearest of ``..., 16, 24, 32, 48, 64, 96, 128, ...`` whose value is a
+    multiple of ``align``.  The packed prefill stream buckets its length
+    through this — two compiled shapes per octave instead of one keeps
+    the pow2 ladder's bounded-shape-count guarantee while halving the
+    worst-case bucket tail (a 40-token pack runs 48 rows, not 64)."""
+    b = bucket_pow2(n)
+    mid = (3 * b) // 4
+    if 0 < n <= mid and mid % max(align, 1) == 0:
+        return mid
+    return b
+
+
+@dataclass(frozen=True)
+class PackedPrefill:
+    """One tick's prefill chunks laid out as a single flat token stream.
+
+    Segment ``i`` (the chunk of request ``req_ids[i]``) occupies stream
+    positions ``[starts[i], starts[i] + takes[i])``; segment starts are
+    aligned to ``align`` (a pow2 tile size, so a Pallas q-tile never
+    straddles two segments) and the stream length is rounded up the pow2
+    bucket ladder — mixed chunk lengths hit a bounded set of compiled
+    shapes instead of one shape per length mix.
+    """
+    req_ids: Tuple[int, ...]
+    takes: Tuple[int, ...]
+    starts: Tuple[int, ...]
+    align: int
+    length: int                        # bucketed flat stream length
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(self.takes)
+
+    @property
+    def padded_tokens(self) -> int:
+        """Stream positions carrying no real token (alignment gaps +
+        the pow2 bucket tail) — the packed path's waste metric; the
+        padded-batch layout wastes ``N*C - total`` instead."""
+        return self.length - self.total_tokens
+
+
+def pack_chunks(chunks: Sequence[Tuple[int, int]], *,
+                align: int = 8) -> "PackedPrefill":
+    """Pack (req_id, n_tokens) prefill chunks into one flat stream.
+
+    Every chunk keeps its tokens contiguous; each segment start is
+    aligned up to ``align`` and the total stream length is bucketed to
+    the pow2 ladder.  Token conservation (no drop, no duplicate, no
+    overlap) is the invariant tests/test_packed_prefill.py fuzzes.
+    """
+    if align < 1 or (align & (align - 1)) != 0:
+        raise ValueError(f"pack align must be a power of two, got {align}")
+    req_ids, takes, starts = [], [], []
+    cur = 0
+    for rid, take in chunks:
+        if take <= 0:
+            continue
+        req_ids.append(rid)
+        takes.append(int(take))
+        starts.append(cur)
+        cur = align_up(cur + int(take), align)
+    length = max(bucket_tokens(cur, align), align) if cur else align
+    return PackedPrefill(req_ids=tuple(req_ids), takes=tuple(takes),
+                         starts=tuple(starts), align=align, length=length)
+
+
 @dataclass(frozen=True)
 class PhaseAwareConfig:
     strategy: str = "halo"             # halo | cent | attacc
     max_decode_batch: int = 8          # decode slots (continuous batching)
     max_prefill_tokens: int = 8192     # per prefill tick (chunked prefill)
     prefill_chunk: int = 2048          # <= 0: whole-prompt (unchunked)
+    pack_align: int = 8                # packed-prefill segment alignment (pow2)
 
     def __post_init__(self):
         if self.max_prefill_tokens < 1:
@@ -75,6 +148,10 @@ class PhaseAwareConfig:
         if self.max_decode_batch < 1:
             raise ValueError(
                 f"max_decode_batch must be >= 1, got {self.max_decode_batch}")
+        if self.pack_align < 1 or (self.pack_align & (self.pack_align - 1)):
+            raise ValueError(
+                f"pack_align must be a power of two >= 1, got "
+                f"{self.pack_align}")
 
 
 @dataclass
@@ -92,6 +169,9 @@ class TickPlan:
     # itself stays a memory-bound decode op on the CiD group
     spec_k: int = 0
     verify_group: str = "prefill"
+    # flat-stream layout of prefill_chunks (packed prefill path); None
+    # when the tick plans no prefill work
+    packed: Optional[PackedPrefill] = None
 
     @property
     def prefill_tokens(self) -> int:
@@ -211,4 +291,10 @@ class PhaseScheduler:
                                - pages_for(cur_len, page_size, cap))
             if take >= remaining:
                 free_slots -= 1        # request becomes a decode occupant
+        if plan.prefill_chunks:
+            # flat-stream layout for the packed prefill path: differing
+            # chunk lengths share ONE kernel launch instead of padding
+            # to a common [N, C] rectangle
+            plan.packed = pack_chunks(plan.prefill_chunks,
+                                      align=self.cfg.pack_align)
         return plan

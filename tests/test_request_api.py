@@ -512,6 +512,7 @@ class HostOnlyEngine(ServingEngine):
     under hypothesis."""
 
     _CACHE_ARG = {"chunk": 5, "chunk_paged": 5, "whole": 3,
+                  "packed": 6, "packed_paged": 6,
                   "decode": 2, "decode_paged": 2, "verify": 5}
 
     def _program(self, group, kind):
@@ -525,7 +526,10 @@ class HostOnlyEngine(ServingEngine):
                                np.int32)
                 out[:, -1] = 1            # accept nothing, emit one token
                 return jnp.asarray(out), cache
-            n = 1 if kind == "whole" else np.asarray(args[1]).shape[0]
+            if kind in ("packed", "packed_paged"):
+                n = np.asarray(args[2]).shape[0]  # one row per segment
+            else:
+                n = 1 if kind == "whole" else np.asarray(args[1]).shape[0]
             return jnp.zeros((n,), jnp.int32), cache
 
         return run
