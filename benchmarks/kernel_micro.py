@@ -36,7 +36,10 @@ def bench_kernels() -> List[Row]:
     rows: List[Row] = []
     key = jax.random.PRNGKey(0)
 
-    # decode GEMV at llama2-7b FFN shape, bf16 vs int8
+    # decode GEMV at llama2-7b FFN shape, bf16 vs int8.  The analytical
+    # rows are the v5e HBM bound (weight bytes / BW); the timed rows run
+    # both dtypes through the kernel (interpret mode on CPU) so the int8
+    # path's in-kernel dequant is exercised at a production shape
     K, N, B = 4096, 11008, 1
     x = jax.random.normal(key, (B, K), jnp.float32)
     w = jax.random.normal(key, (K, N), jnp.float32).astype(jnp.bfloat16)
@@ -46,7 +49,11 @@ def bench_kernels() -> List[Row]:
     rows.append(("kernel.gemv.bf16.v5e_bound_us", t_bf16 * 1e6, "us", ""))
     rows.append(("kernel.gemv.int8.v5e_bound_us", t_int8 * 1e6, "us", ""))
     rows.append(("kernel.gemv.int8_traffic_saving", t_bf16 / t_int8, "x", ""))
-    _ = ops.gemv(x, q, s, bn=256, bk=1024)   # executes (interpret on CPU)
+    wf = w.astype(jnp.float32)
+    us = _time(lambda a, b: ops.gemv(a, b), x, wf)
+    rows.append(("kernel.gemv.f32.cpu_interpret_us", us * 1e6, "us", ""))
+    us = _time(lambda a, b, c: ops.gemv(a, b, c), x, q, s)
+    rows.append(("kernel.gemv.int8.cpu_interpret_us", us * 1e6, "us", ""))
 
     # prefill GEMM at llama2 qkv shape
     M, K2, N2 = 2048, 4096, 12288

@@ -22,6 +22,12 @@ engine rather than the analytical model:
     acceptance rate, tokens per decode tick, TPOT, with greedy token
     identity asserted across all configurations (``--speculative``;
     the multi-token decode path of docs/serving.md §Speculative);
+  * quantized serving — the weights-dtype x KV-dtype grid (int8 weights
+    through the fused dequantizing GEMV; int8 / packed-int4 KV pages)
+    over paged / prefix / packed / speculative layouts: resident KV
+    bytes, agreement vs the f32 reference, and the gemv route counter
+    (``--quantized`` writes BENCH_quantized.json; with ``--quick`` it
+    asserts the int4 >= 4x KV reduction and bounded greedy divergence);
   * the request-centric API — a mixed greedy/stochastic batch (per-
     request SamplingParams in one program per tick; greedy rows must
     match the all-greedy reference bit-exactly and the host-transfer
@@ -81,7 +87,8 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
          max_prefill_tokens=8192, paged=False, page_size=8, n_pages=64,
          prefix_cache=False, shared_prefix=0, speculative=None,
          repeat_suffix=0, packed_prefill=True,
-         prompt_lens: Optional[List[int]] = None, waves=1):
+         prompt_lens: Optional[List[int]] = None, waves=1,
+         kv_dtype="f32", weights_dtype="f32"):
     from repro.serving.engine import ServeConfig, ServingEngine
     from repro.serving.scheduler import PhaseAwareConfig
 
@@ -92,7 +99,8 @@ def _run(cfg, params, *, strategy="halo", max_batch=4, max_len=96,
                          max_prefill_tokens=max_prefill_tokens),
                      paged=paged, page_size=page_size, n_pages=n_pages,
                      prefix_cache=prefix_cache, speculative=speculative,
-                     packed_prefill=packed_prefill)
+                     packed_prefill=packed_prefill,
+                     kv_dtype=kv_dtype, weights_dtype=weights_dtype)
     eng = ServingEngine(cfg, params, sc)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
@@ -367,6 +375,84 @@ def bench_speculative() -> List[Row]:
     return rows
 
 
+def bench_quantized() -> List[Row]:
+    """Quantized serving grid (HALO IV-A: int8 end to end on the decode
+    datapath): weights dtype x KV dtype over the serving layouts.  Per
+    combo the same request stream runs paged (reference), prefix-cache,
+    packed-prefill, and speculative; paged/prefix/packed must stay
+    bit-identical WITHIN the combo (same-program-layout contract), the
+    speculative stream is scored by agreement (its verify program is
+    chunk-shaped, so fp summation order differs at ~1e-6 and random-init
+    near-ties may flip — see docs/serving.md §Quantized).  Against the
+    f32 reference each quantized combo reports first-token match +
+    stream agreement (quantization tolerance, NOT identity), resident KV
+    bytes (int8 pages ~4x under f32, int4 packed ~7x incl. scale pages),
+    and the gemv-route counter proving decode ticks hit the fused
+    dequantizing GEMV when weights are int8."""
+    from repro.models.layers import gemv_route_count, reset_gemv_route_count
+    from repro.serving.speculative import SpecConfig
+
+    cfg, params = _cfg_params()
+    rows: List[Row] = []
+    wk = dict(max_batch=4, max_len=96, prompt_len=24, requests=6,
+              max_new=8, prefill_chunk=16, max_prefill_tokens=32,
+              paged=True, page_size=8, n_pages=64)
+    combos = [("f32", "f32"), ("int8", "f32"), ("f32", "int8"),
+              ("f32", "int4"), ("int8", "int4")]
+    f32_streams = None
+    for wdt, kdt in combos:
+        pre = f"serve.q.w_{wdt}.kv_{kdt}"
+        q = dict(weights_dtype=wdt, kv_dtype=kdt)
+        reset_gemv_route_count()
+        eng, done, wall = _run(cfg, params, packed_prefill=False, **q, **wk)
+        routes = gemv_route_count()
+        base = [r.generated for r in sorted(done, key=lambda r: r.req_id)]
+        kv = eng.kv_bytes()
+        toks = sum(len(o) for o in base)
+        # the shared-prefix workload rewrites the prompts, so the prefix
+        # cache is scored against its own cache-off twin
+        _, dpfx, _ = _run(cfg, params, packed_prefill=False,
+                          prefix_cache=True, shared_prefix=16, **q, **wk)
+        _, dpfx0, _ = _run(cfg, params, packed_prefill=False,
+                           shared_prefix=16, **q, **wk)
+        _, dpak, _ = _run(cfg, params, packed_prefill=True, **q, **wk)
+        _, dspec, _ = _run(cfg, params, packed_prefill=False,
+                           speculative=SpecConfig(k=3), repeat_suffix=6,
+                           **q, **wk)
+        pfx = [r.generated for r in sorted(dpfx, key=lambda r: r.req_id)]
+        pfx0 = [r.generated for r in sorted(dpfx0, key=lambda r: r.req_id)]
+        pak = [r.generated for r in sorted(dpak, key=lambda r: r.req_id)]
+        spc = [r.generated for r in sorted(dspec, key=lambda r: r.req_id)]
+        assert pfx == pfx0, f"{pre}: prefix-cache changed greedy streams"
+        assert pak == base, f"{pre}: packed-prefill stream != paged stream"
+        # the spec workload re-rolls prompts (repeat_suffix), so score it
+        # against ITS OWN non-speculative twin for a clean comparison
+        _, dtwin, _ = _run(cfg, params, packed_prefill=False,
+                           repeat_suffix=6, **q, **wk)
+        twn = [r.generated for r in sorted(dtwin, key=lambda r: r.req_id)]
+        s_hits = sum(a == b for o, p in zip(spc, twn) for a, b in zip(o, p))
+        s_tot = sum(len(o) for o in twn)
+        if wdt == "f32" and kdt == "f32":
+            f32_streams, agree, first = base, 1.0, 1.0
+        else:
+            hits = sum(a == b for o, p in zip(base, f32_streams)
+                       for a, b in zip(o, p))
+            agree = hits / sum(len(o) for o in f32_streams)
+            first = float(all(o[0] == p[0]
+                              for o, p in zip(base, f32_streams)))
+        rows.append((f"{pre}.kv_peak_resident_mb",
+                     kv["peak_resident"] / 1e6, "MB", ""))
+        rows.append((f"{pre}.agreement_vs_f32", agree, "frac", ""))
+        rows.append((f"{pre}.first_token_match", first, "frac", ""))
+        rows.append((f"{pre}.spec_agreement", s_hits / max(s_tot, 1),
+                     "frac", ""))
+        rows.append((f"{pre}.gemv_routes", float(routes), "count", ""))
+        rows.append((f"{pre}.tpot_p50_ms",
+                     _p50([r.tpot for r in done]) * 1e3, "ms", ""))
+        rows.append((f"{pre}.throughput", toks / wall, "tok/s", ""))
+    return rows
+
+
 def bench_request_api() -> List[Row]:
     """Request-centric API smoke: mixed per-request sampling, streaming,
     and abort — asserting its correctness invariants inline (this is the
@@ -470,7 +556,42 @@ def bench_request_api() -> List[Row]:
 
 ALL = [bench_serving, bench_chunked_prefill, bench_decode_tick,
        bench_paged_vs_dense, bench_prefix_cache, bench_packed_prefill,
-       bench_speculative, bench_request_api]
+       bench_speculative, bench_quantized, bench_request_api]
+
+
+def _assert_quantized(vals) -> None:
+    """--quick invariants for the quantized grid (see bench_quantized)."""
+    f32_kv = vals["serve.q.w_f32.kv_f32.kv_peak_resident_mb"]
+    int8_kv = vals["serve.q.w_f32.kv_int8.kv_peak_resident_mb"]
+    int4_kv = vals["serve.q.w_f32.kv_int4.kv_peak_resident_mb"]
+    assert int8_kv < f32_kv / 2, (
+        f"int8 pages did not halve resident KV ({int8_kv} vs {f32_kv} MB)")
+    assert int4_kv < f32_kv / 4, (
+        f"packed int4 pages did not cut resident KV >= 4x "
+        f"({int4_kv} vs {f32_kv} MB)")
+    # stated divergence tolerances per dtype (random-init reduced model:
+    # logit margins ~1e-4, so deeper quantization wanders earlier; chance
+    # agreement on the 256-token vocab is ~0.004)
+    floors = {"w_int8.kv_f32": 0.5, "w_f32.kv_int8": 0.6,
+              "w_f32.kv_int4": 0.2, "w_int8.kv_int4": 0.2}
+    for combo, floor in floors.items():
+        pre = f"serve.q.{combo}"
+        assert vals[f"{pre}.agreement_vs_f32"] >= floor, (
+            f"{combo}: stream agreement vs f32 below {floor} "
+            f"({vals[f'{pre}.agreement_vs_f32']})")
+        assert vals[f"{pre}.spec_agreement"] >= 0.5, (
+            f"{combo}: speculative stream agreement below 0.5")
+    for combo, wants_gemv in (("w_f32.kv_f32", False),
+                              ("w_int8.kv_f32", True),
+                              ("w_int8.kv_int4", True)):
+        routes = vals[f"serve.q.{combo}.gemv_routes"]
+        if wants_gemv:
+            assert routes > 0, (
+                f"{combo}: decode ticks never routed through the fused "
+                "int8 GEMV")
+        else:
+            assert routes == 0, (
+                f"{combo}: f32 weights took the quantized GEMV route")
 
 
 def main(argv=None) -> int:
@@ -483,6 +604,12 @@ def main(argv=None) -> int:
                     help="speculative-decoding sweep only (with --quick: "
                          "the CI leg, asserting acceptance rate > 0 and "
                          "tokens/tick > 1 on top of token identity)")
+    ap.add_argument("--quantized", action="store_true",
+                    help="quantized weights x KV grid only, written to "
+                         "BENCH_quantized.json (with --quick: the CI leg, "
+                         "asserting the int4 resident-KV reduction, "
+                         "bounded greedy divergence vs f32, and gemv "
+                         "routing under int8 weights)")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path (CI artifact); "
                          "'' disables")
@@ -491,9 +618,14 @@ def main(argv=None) -> int:
     print("name,value,unit,paper")
     if args.speculative:
         suites = [bench_speculative]
+    elif args.quantized:
+        suites = [bench_quantized]
+        if args.json == "BENCH_serving.json":
+            args.json = "BENCH_quantized.json"
     elif args.quick:
         suites = [bench_paged_vs_dense, bench_prefix_cache,
-                  bench_packed_prefill, bench_request_api]
+                  bench_packed_prefill, bench_quantized,
+                  bench_request_api]
     else:
         suites = ALL
     rows: List[Row] = []
@@ -524,8 +656,16 @@ def main(argv=None) -> int:
               "acceptance > 0 and tokens/tick > 1 for ngram and model "
               "drafters", file=sys.stderr)
         return 0
+    if args.quantized and args.quick:
+        _assert_quantized({n: v for n, v, _, _ in rows})
+        print("# quick smoke OK: quantized grid — int4 resident KV >= 4x "
+              "under f32, quantized greedy streams within per-dtype "
+              "agreement floors, decode ticks routed through the fused "
+              "int8 GEMV", file=sys.stderr)
+        return 0
     if args.quick:
         vals = {n: v for n, v, _, _ in rows}
+        _assert_quantized(vals)
         for plen in (48, 96):
             dense = vals[f"serve.dense.ctx{plen}.kv_reserved_mb"]
             paged = vals[f"serve.paged.ctx{plen}.kv_peak_resident_mb"]

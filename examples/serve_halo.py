@@ -9,7 +9,10 @@ chunking, decode ticks interleave between the chunks of a long prefill
 Later tables show the paged-vs-dense KV arena, the radix prefix cache on
 a shared-system-prompt stream, and speculative decoding (n-gram and
 small-model drafters) — every variant must reproduce the reference token
-streams exactly.
+streams exactly.  A quantized-serving table sweeps weight/KV dtype
+combinations (int8 weights through the fused GEMV, int8/int4 KV pages):
+those track the f32 reference within tolerance rather than exactly, and
+report the per-page KV bytes they save.
 
 Run:  PYTHONPATH=src python examples/serve_halo.py [--requests 24]
 """
@@ -30,7 +33,8 @@ from repro.serving.scheduler import PhaseAwareConfig
 def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_batch=4, max_len=128, prefill_chunk=2048,
                max_prefill_tokens=8192, paged=False, page_size=16,
-               n_pages=64, prefix_cache=False, speculative=None):
+               n_pages=64, prefix_cache=False, speculative=None,
+               kv_dtype="f32", weights_dtype="f32"):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
@@ -38,7 +42,8 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                                prefill_chunk=prefill_chunk,
                                max_prefill_tokens=max_prefill_tokens),
         paged=paged, page_size=page_size, n_pages=n_pages,
-        prefix_cache=prefix_cache, speculative=speculative))
+        prefix_cache=prefix_cache, speculative=speculative,
+        kv_dtype=kv_dtype, weights_dtype=weights_dtype))
     t0 = time.monotonic()
     for p in prompts:
         engine.submit(p.copy(), max_new_tokens=max_new)
@@ -176,6 +181,40 @@ def main():
               f"{np.median([r.tpot for r in done])*1e3:9.1f}ms "
               f"{ss['acceptance_rate']:7.2f} "
               f"{ss['tokens_per_tick']:9.2f} {eng.n_ticks:6d}  {same}")
+
+    # quantized serving (HALO IV-A: int8 end to end in CiD): int8 weights
+    # route decode-shaped matmuls through the fused dequantizing GEMV,
+    # int8/int4 KV pages shrink the decode-phase HBM bytes that bound
+    # TPOT.  Quantized streams track the f32 reference within tolerance
+    # (first tokens agree; later near-ties may flip), and KV bytes drop
+    # 4x/8x vs f32 pages
+    from repro.models.layers import gemv_route_count, reset_gemv_route_count
+    print(f"\n{'quantized':18s} {'kv page':>9s} {'gemv':>5s} "
+          f"{'agree':>6s}  first tokens match?")
+    q_stream = [rng.integers(0, cfg.vocab_size, (24,), dtype=np.int32)
+                for _ in range(6)]
+    q_base = None
+    for wdt, kdt in (("f32", "f32"), ("int8", "f32"),
+                     ("f32", "int8"), ("int8", "int4")):
+        reset_gemv_route_count()
+        eng, done, _ = run_stream(cfg, params, q_stream,
+                                  max_new=args.max_new,
+                                  prefill_chunk=16, max_prefill_tokens=32,
+                                  paged=True, page_size=8, n_pages=64,
+                                  kv_dtype=kdt, weights_dtype=wdt)
+        outs = [r.generated for r in done]
+        if q_base is None:
+            q_base, agree, first = outs, "(ref)", "(reference)"
+        else:
+            hits = sum(a == b for o, p in zip(outs, q_base)
+                       for a, b in zip(o, p))
+            agree = f"{hits / sum(len(o) for o in q_base):.2f}"
+            first = "yes" if all(o[0] == p[0]
+                                 for o, p in zip(outs, q_base)) else "NO"
+        cache = next(c for c in eng.pool.caches if isinstance(c, dict))
+        page_bytes = sum(v.nbytes for v in cache.values()) // 64
+        print(f"w={wdt:4s} kv={kdt:4s}  {page_bytes:8d}B "
+              f"{gemv_route_count():5d} {agree:>6s}  {first}")
 
     # request-centric API: per-request SamplingParams (temperature=0 is
     # greedy) run in ONE program per tick, tokens stream incrementally

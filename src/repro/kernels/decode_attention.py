@@ -21,6 +21,12 @@ The decode GEMV sweep HALO maps to CiD.  Two layouts:
   path).  Same online-softmax scratch as the dense kernel; pages past
   ``length`` or mapped to the unallocated sentinel are skipped whole.
 
+* ``paged_decode_attention_q4`` — same grid/indirection over PACKED INT4
+  pages (uint8 nibble pairs [n_pages, P, Hkv, D//2] + per-token f32 scale
+  pages): nibbles are sign-extended and dequantized in-register, so the
+  HBM bytes per decode step are ~4x below f32 — the HALO low-precision
+  CiD argument applied to the KV side.
+
 Per-tile working set (bs=1024, Hkv=8, D=128, bf16): k/v 2x1024x8x128x2 = 4 MB.
 """
 
@@ -225,4 +231,134 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
     )(bt, lengths.astype(jnp.int32), q, k_pages, v_pages)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# packed-int4 paged variant (two nibbles per byte, per-token scales)
+# ---------------------------------------------------------------------------
+
+
+def _unpack_q4(b, scale_tok):
+    """In-register nibble unpack + dequant: b uint8 [ps, Hkv, D//2] with
+    per-(token, kv-head) f32 scales [ps, Hkv] -> f32 [ps, Hkv, D].  Element
+    2i rides the low nibble, 2i+1 the high nibble (quantized_cache.pack_int4);
+    nibbles >= 8 are negative (explicit sign extension — uint8->int8 casts
+    of high values are not portable across backends)."""
+    lo = (b & 0xF).astype(jnp.int32)
+    hi = (b >> 4).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
+    hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
+    x = jnp.stack([lo, hi], axis=-1).reshape(b.shape[:-1] + (2 * b.shape[-1],))
+    return x * scale_tok[..., None].astype(jnp.float32)
+
+
+def _paged_decode_q4_kernel(bt_ref, len_ref, q_ref, k_ref, ks_ref, v_ref,
+                            vs_ref, o_ref, m_ref, l_ref, acc_ref,
+                            *, nw: int, ps: int, n_pages: int, scale: float,
+                            Hkv: int, G: int, D: int):
+    """``_paged_decode_kernel`` for packed-int4 pages: K/V arrive as uint8
+    nibble pairs at HALF the head width plus per-token scale pages riding
+    the same block table — the HBM bytes per step are ~quarter of f32 —
+    and are unpacked + dequantized in-register before the identical
+    online-softmax sweep."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    s_start = i * ps
+    allocated = bt_ref[b, i] < n_pages
+
+    @pl.when((s_start < length) & allocated)
+    def _compute():
+        q = q_ref[0].reshape(Hkv, G, D)                      # [Hkv,G,D]
+        k = _unpack_q4(k_ref[0], ks_ref[0])                  # [ps,Hkv,D] f32
+        v = _unpack_q4(v_ref[0], vs_ref[0])
+        row = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1, 1), 0)
+        v = jnp.where(row < length, v, 0.0)
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,ps]
+        s = s * scale
+        idx = s_start + jax.lax.broadcasted_iota(jnp.int32, (Hkv, G, ps), 2)
+        s = jnp.where(idx < length, s, NEG_INF)
+
+        m_prev = m_ref[...].reshape(Hkv, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)                               # [Hkv,G,ps]
+        corr = jnp.exp(m_prev - m_new)                       # [Hkv,G,1]
+        l_new = l_ref[...].reshape(Hkv, G, 1) * corr + jnp.sum(
+            p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)              # [Hkv,G,D]
+        acc = acc_ref[...].reshape(Hkv, G, D) * corr + pv
+        acc_ref[...] = acc.reshape(Hkv * G, D)
+        m_ref[...] = m_new.reshape(Hkv * G, 1)
+        l_ref[...] = l_new.reshape(Hkv * G, 1)
+
+    @pl.when(i == nw - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)                   # [Hkv*G,1]
+        o_ref[0] = (acc_ref[...].reshape(Hkv * G, D) / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_q4(q, k_pages, k_scales, v_pages, v_scales,
+                              block_tables, lengths, *,
+                              interpret: bool = False):
+    """Flash-decode over a packed-int4 paged KV pool.
+
+    q: [B, H, D]; k_pages/v_pages: uint8 [n_pages, ps, Hkv, D//2] (nibble
+    pairs, see quantized_cache.pack_int4); k_scales/v_scales: f32
+    [n_pages, ps, Hkv] per-token scales riding the SAME block table;
+    block_tables: [B, W] int32; lengths: [B].  Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    n_pages, ps, Hkv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    assert k_pages.shape[3] * 2 == D, \
+        f"packed page width {k_pages.shape[3]} != D/2 = {D // 2}"
+    W = block_tables.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    bt = block_tables.astype(jnp.int32)
+    D2 = D // 2
+
+    def page_map(b, i, bt_ref, len_ref):
+        return (jnp.minimum(bt_ref[b, i], n_pages - 1), 0, 0, 0)
+
+    def scale_map(b, i, bt_ref, len_ref):
+        return (jnp.minimum(bt_ref[b, i], n_pages - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, W),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, i, bt_ref, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, D2), page_map),
+            pl.BlockSpec((1, ps, Hkv), scale_map),
+            pl.BlockSpec((1, ps, Hkv, D2), page_map),
+            pl.BlockSpec((1, ps, Hkv), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, D),
+                               lambda b, i, bt_ref, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, 1), jnp.float32),
+            pltpu.VMEM((Hkv * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_q4_kernel, nw=W, ps=ps,
+                          n_pages=n_pages, scale=scale, Hkv=Hkv, G=G, D=D),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(bt, lengths.astype(jnp.int32), q, k_pages, k_scales, v_pages, v_scales)
     return out

@@ -24,28 +24,44 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gemv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+def _masked_tile(x_ref, w_ref, *, bk: int, K: int):
+    """Read the (x, w) tile pair at grid step k, zeroing the K-tail of a
+    ragged final tile.  Pallas pads out-of-bounds block reads with
+    unspecified values; 0 * non-finite would poison the accumulator, so
+    both sides of the contraction are masked (same treatment as the dense
+    decode-attention kernel's ragged final tile)."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    if K % bk:
+        k0 = pl.program_id(1) * bk
+        col = k0 + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(col < K, x, 0.0)
+        row = k0 + jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+        w = jnp.where(row < K, w, 0.0)
+    return x, w
+
+
+def _gemv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, bk: int, K: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = w_ref[...].astype(jnp.float32)
-    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
-                            preferred_element_type=jnp.float32)
+    x, w = _masked_tile(x_ref, w_ref, bk=bk, K=K)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(1) == nk - 1)
     def _done():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _gemv_q_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
+def _gemv_q_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int, bk: int,
+                   K: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = w_ref[...].astype(jnp.float32)
-    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
-                            preferred_element_type=jnp.float32)
+    x, w = _masked_tile(x_ref, w_ref, bk=bk, K=K)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(1) == nk - 1)
     def _done():
@@ -59,20 +75,21 @@ def gemv(x, w, scale=None, *, bn: int = 512, bk: int = 1024,
          interpret: bool = False):
     """x: [B, K] @ w: [K, N] (+ optional int8 w with per-col f32 ``scale``).
 
-    B is the (small) decode batch; the grid is (N/bn, K/bk) so each weight
-    tile is read exactly once.
+    B is the (small) decode batch; the grid is (ceil(N/bn), ceil(K/bk)) so
+    each weight tile is read exactly once.  N and K need not divide the
+    tile sizes: ragged final tiles are masked in-kernel (K tail) or
+    dropped on the write (N tail).
     """
     B, K = x.shape
     K2, N = w.shape
     assert K == K2
     bn, bk = min(bn, N), min(bk, K)
-    assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
-    nk = K // bk
-    grid = (N // bn, nk)
+    nk = pl.cdiv(K, bk)
+    grid = (pl.cdiv(N, bn), nk)
     out_shape = jax.ShapeDtypeStruct((B, N), x.dtype)
     if scale is None:
         return pl.pallas_call(
-            functools.partial(_gemv_kernel, nk=nk),
+            functools.partial(_gemv_kernel, nk=nk, bk=bk, K=K),
             grid=grid,
             in_specs=[
                 pl.BlockSpec((B, bk), lambda j, k: (0, k)),
@@ -85,7 +102,7 @@ def gemv(x, w, scale=None, *, bn: int = 512, bk: int = 1024,
         )(x, w)
     assert scale.shape == (N,)
     return pl.pallas_call(
-        functools.partial(_gemv_q_kernel, nk=nk),
+        functools.partial(_gemv_q_kernel, nk=nk, bk=bk, K=K),
         grid=grid,
         in_specs=[
             pl.BlockSpec((B, bk), lambda j, k: (0, k)),

@@ -64,6 +64,17 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, **kw):
                                       lengths, **kw)
 
 
+def paged_decode_attention_q4(q, k_pages, k_scales, v_pages, v_scales,
+                              block_tables, lengths, **kw):
+    """Paged decode attention over packed-int4 pages: uint8 nibble pairs
+    [n_pages,ps,Hkv,D//2] + per-token f32 scales [n_pages,ps,Hkv], unpacked
+    and dequantized in-register (see kernels/decode_attention.py)."""
+    kw.setdefault("interpret", _interpret())
+    return _da.paged_decode_attention_q4(q, k_pages, k_scales, v_pages,
+                                         v_scales, block_tables, lengths,
+                                         **kw)
+
+
 def ssd_chunk(x, dt, A, Bm, Cm, **kw):
     """Mamba-2 intra-chunk SSD: see kernels/ssd_scan.py."""
     kw.setdefault("interpret", _interpret())

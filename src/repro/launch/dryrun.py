@@ -141,7 +141,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if save_hlo:
         with open(save_hlo, "w") as f:
             f.write(hlo)
-    roof = analyze(compiled, n_chips=n_chips, model_flops=mf, hlo_text=hlo)
+    # with int8 weights the decode matmuls route through the Pallas GEMV
+    # (in-kernel dequant, models/layers.matmul); on this CPU dry-run host
+    # the kernel traces in interpret mode as jit(gemv) while-loops whose
+    # internal slices would be mis-charged as HBM traffic.  Deployed, the
+    # kernel region is VMEM-resident — same modeling step as the flash
+    # regions in reanalyze.py; the s8 banks themselves stay charged once
+    # via the entry parameters.
+    regions = ("jit(gemv)",) if int8_weights and shape.kind == "decode" else ()
+    roof = analyze(compiled, n_chips=n_chips, model_flops=mf, hlo_text=hlo,
+                   kernel_regions=regions)
     mem = memory_summary(compiled)
     cid = _cell_id(arch, shape_name, multi_pod)
     if variant:

@@ -344,9 +344,17 @@ def analyze_hlo(text: str, kernel_regions: Tuple[str, ...] = ()) -> HloStats:
             return _source_dtype(first, depth + 1)
         return shapes_by_name[name][0]
 
-    def _float_bytes(shapes):
+    # DATA dtypes stream from HBM at their stored width: floats, plus the
+    # narrow integer formats quantized serving stores (s8 weight banks, s8
+    # KV pages, u8 packed-int4 pages, s4/u4, f8).  Wide integers (s32/u32)
+    # and pred stay excluded — those are index/bookkeeping buffers, and
+    # charging them was the original reason _float_bytes dropped ints.
+    _DATA_INT = ("s8", "u8", "s4", "u4")
+
+    def _data_bytes(shapes):
         return _bytes_of([(dt, dims) for dt, dims in shapes
-                          if dt.startswith(("f", "bf", "c"))])
+                          if dt.startswith(("f", "bf", "c"))
+                          or dt in _DATA_INT])
 
     def _in_kernel_region(line: str) -> bool:
         """Substring match against (a) the stack-frame function-name chain
@@ -389,7 +397,7 @@ def analyze_hlo(text: str, kernel_regions: Tuple[str, ...] = ()) -> HloStats:
             # --- HBM traffic (anchor-based fusion model, see module doc)
             if op.endswith("-done") or _in_kernel_region(line):
                 continue
-            res_bytes = _float_bytes(_shape_list(type_region))
+            res_bytes = _data_bytes(_shape_list(type_region))
             _, _, post = line.partition(f" {op}(")
             arg_region = post.split(")")[0] if post else ""
             opnds = _OPERANDS.findall(arg_region)
@@ -542,7 +550,7 @@ def analyze_hlo(text: str, kernel_regions: Tuple[str, ...] = ()) -> HloStats:
     for line in comps.get(entry, []):
         m = _OP_LINE.match(line)
         if m and m.group(3) == "parameter":
-            out.hbm_bytes += _float_bytes(_shape_list(m.group(2)))
+            out.hbm_bytes += _data_bytes(_shape_list(m.group(2)))
     out.n_while_known = known_whiles
     out.n_while_unknown = unknown_whiles
     return out

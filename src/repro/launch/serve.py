@@ -11,7 +11,12 @@ decode together — HALO's interleaved CiM/CiD utilization at serving level).
 (serving/kv_pool.py): capacity becomes pool-bounded (``--n-pages`` x
 ``--page-size`` tokens, so prompts may exceed --max-len), exhaustion
 preempts the youngest request, and the report adds resident KV bytes +
-preemption counts.  ``--kv-dtype int8`` stores GQA pages quantized.
+preemption counts.  ``--kv-dtype int8`` stores KV pages quantized (GQA
+k/v or MLA latents, per-token scale pages); ``--kv-dtype int4`` packs
+GQA pages two nibbles per byte for ~4x KV-byte reduction.
+``--weights-dtype int8`` quantizes matmul weights per output channel at
+engine build and routes decode-shaped matmuls through the fused
+dequantizing GEMV kernel — the TPU analogue of HALO's int8 CiD banks.
 ``--prefix-cache`` (with ``--paged``) reuses shared-prompt KV pages
 copy-on-write through a radix prefix cache; ``--shared-prefix N`` gives
 every request the same N-token prompt head so the cache has something to
@@ -86,8 +91,16 @@ def main(argv=None) -> int:
                     help="tokens per KV page (paged)")
     ap.add_argument("--n-pages", type=int, default=64,
                     help="pages per run pool (paged)")
-    ap.add_argument("--kv-dtype", default="f32", choices=["f32", "int8"],
-                    help="int8: quantized GQA pages (paged only)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=["f32", "int8", "int4"],
+                    help="int8: quantized KV pages (GQA k/v or MLA latents) "
+                         "with per-token scale pages; int4: packed GQA "
+                         "pages, two nibbles per byte (paged only)")
+    ap.add_argument("--weights-dtype", default="f32",
+                    choices=["f32", "int8"],
+                    help="int8: per-channel weight quantization at engine "
+                         "build; decode-shaped matmuls run the fused "
+                         "dequant GEMV (HALO's int8 CiD datapath)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix cache: shared-prompt KV pages are "
                          "reused copy-on-write (paged only)")
@@ -103,6 +116,9 @@ def main(argv=None) -> int:
     if args.mixed_sampling and args.temperature <= 0.0:
         ap.error("--mixed-sampling needs --temperature > 0 (the stochastic "
                  "half samples at that temperature)")
+    if args.kv_dtype != "f32" and not args.paged:
+        ap.error("--kv-dtype int8/int4 requires --paged (quantized pages "
+                 "live in the block-pool arena)")
     if args.spec_k is None:
         args.spec_k = 4
 
@@ -134,7 +150,8 @@ def main(argv=None) -> int:
                                max_prefill_tokens=args.max_prefill_tokens),
         seed=args.seed,
         paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
-        kv_dtype=args.kv_dtype, prefix_cache=args.prefix_cache,
+        kv_dtype=args.kv_dtype, weights_dtype=args.weights_dtype,
+        prefix_cache=args.prefix_cache,
         speculative=spec)
     engine = ServingEngine(cfg, params, sc)
 
@@ -200,7 +217,8 @@ def main(argv=None) -> int:
     kv = engine.kv_bytes()
     mode = (f"paged[{args.n_pages}x{args.page_size},{args.kv_dtype}]"
             if args.paged else f"dense[max_len={args.max_len}]")
-    print(f"kv={mode} reserved={kv['reserved']/1e6:.2f}MB "
+    print(f"kv={mode} weights={args.weights_dtype} "
+          f"reserved={kv['reserved']/1e6:.2f}MB "
           f"peak-resident={kv['peak_resident']/1e6:.2f}MB "
           f"preemptions={engine.preemptions}")
     if args.prefix_cache:

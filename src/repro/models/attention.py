@@ -356,12 +356,15 @@ def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     (min(window, W*P-ish) — derived from the pool the same way the engine's
     KVPool derives it).  History is gathered through the block table BEFORE
     the chunk's own K/V are scattered (ring overwrite discipline), and
-    int8 pools ("k_scale" present) dequantize history / quantize writes —
+    quantized pools ("k_scale" present; int8 pages, or packed-int4 uint8
+    pages at half the head width) dequantize history / quantize writes —
     the attention math itself stays full precision (CiM prefill).
 
     Returns (out [N, C, d_model], new_cache dict).
     """
-    from repro.serving.quantized_cache import dequantize, quantize_token
+    from repro.serving.quantized_cache import (
+        dequantize, pack_int4, quantize_token, quantize_token_int4,
+        unpack_int4)
 
     n_rows, C, _ = x.shape
     n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
@@ -374,6 +377,7 @@ def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     R = min(w_static, capacity) if w_static > 0 else capacity
     S = W * P                                     # gathered logical span
     quant = "k_scale" in cache
+    q4 = quant and cache["k"].dtype == jnp.uint8  # packed nibble pages
 
     offs = jnp.asarray(offsets, jnp.int32)
     lens = jnp.asarray(lengths, jnp.int32)
@@ -389,8 +393,11 @@ def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     bt_rows = jnp.asarray(block_table, jnp.int32)[row]           # [N, W]
     pages = jnp.clip(bt_rows, 0, n_pages - 1)
     if quant:
-        prev_k = dequantize(cache["k"][pages], cache["k_scale"][pages])
-        prev_v = dequantize(cache["v"][pages], cache["v_scale"][pages])
+        raw_k, raw_v = cache["k"][pages], cache["v"][pages]
+        if q4:
+            raw_k, raw_v = unpack_int4(raw_k), unpack_int4(raw_v)
+        prev_k = dequantize(raw_k, cache["k_scale"][pages])
+        prev_v = dequantize(raw_v, cache["v_scale"][pages])
         prev_k = prev_k.astype(x.dtype)
         prev_v = prev_v.astype(x.dtype)
     else:
@@ -438,8 +445,13 @@ def attn_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     w_off = jnp.where(keep, ridx % P, P)
     new_cache = dict(cache)
     if quant:
-        k_q, k_s = quantize_token(k)                # [N,C,Hkv,Dh],[N,C,Hkv]
-        v_q, v_s = quantize_token(v)
+        if q4:
+            k_q, k_s = quantize_token_int4(k)       # [N,C,Hkv,Dh],[N,C,Hkv]
+            v_q, v_s = quantize_token_int4(v)
+            k_q, v_q = pack_int4(k_q), pack_int4(v_q)
+        else:
+            k_q, k_s = quantize_token(k)
+            v_q, v_s = quantize_token(v)
         new_cache["k"] = cache["k"].at[w_page, w_off].set(k_q, mode="drop")
         new_cache["k_scale"] = cache["k_scale"].at[w_page, w_off].set(
             k_s, mode="drop")
@@ -629,13 +641,15 @@ def attn_chunk_packed_paged(params, x, seg: PackedSegs, cache, block_table,
     Same stream contract as ``attn_chunk_packed``; the arena is the pool
     ``cache`` ([n_pages, P, ...]) addressed via ``block_table`` [B, W]
     exactly as in ``attn_chunk_paged`` (ring span R, sentinel pages drop,
-    int8 pools dequantize history / quantize writes).  On TPU the float
-    pool path runs the Pallas kernel with the segments' block-table rows
-    scalar-prefetched.
+    quantized — int8 or packed-int4 — pools dequantize history / quantize
+    writes).  On TPU the float pool path runs the Pallas kernel with the
+    segments' block-table rows scalar-prefetched.
 
     Returns (out [1, T, d_model], new_cache dict).
     """
-    from repro.serving.quantized_cache import dequantize, quantize_token
+    from repro.serving.quantized_cache import (
+        dequantize, pack_int4, quantize_token, quantize_token_int4,
+        unpack_int4)
 
     _, T, _ = x.shape
     n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
@@ -648,6 +662,7 @@ def attn_chunk_packed_paged(params, x, seg: PackedSegs, cache, block_table,
     R = min(w_static, capacity) if w_static > 0 else capacity
     S = W * P
     quant = "k_scale" in cache
+    q4 = quant and cache["k"].dtype == jnp.uint8  # packed nibble pages
 
     positions = seg.positions[None]                              # [1, T]
     q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
@@ -666,8 +681,11 @@ def attn_chunk_packed_paged(params, x, seg: PackedSegs, cache, block_table,
     else:
         pages = jnp.clip(bt_rows, 0, n_pages - 1)
         if quant:
-            prev_k = dequantize(cache["k"][pages], cache["k_scale"][pages])
-            prev_v = dequantize(cache["v"][pages], cache["v_scale"][pages])
+            raw_k, raw_v = cache["k"][pages], cache["v"][pages]
+            if q4:
+                raw_k, raw_v = unpack_int4(raw_k), unpack_int4(raw_v)
+            prev_k = dequantize(raw_k, cache["k_scale"][pages])
+            prev_v = dequantize(raw_v, cache["v_scale"][pages])
             prev_k = prev_k.astype(x.dtype)
             prev_v = prev_v.astype(x.dtype)
         else:
@@ -699,8 +717,13 @@ def attn_chunk_packed_paged(params, x, seg: PackedSegs, cache, block_table,
     w_off = jnp.where(keep, ridx % P, P)
     new_cache = dict(cache)
     if quant:
-        k_q, k_s = quantize_token(k)              # [T,Hkv,Dh],[T,Hkv]
-        v_q, v_s = quantize_token(v)
+        if q4:
+            k_q, k_s = quantize_token_int4(k)     # [T,Hkv,Dh],[T,Hkv]
+            v_q, v_s = quantize_token_int4(v)
+            k_q, v_q = pack_int4(k_q), pack_int4(v_q)
+        else:
+            k_q, k_s = quantize_token(k)
+            v_q, v_s = quantize_token(v)
         new_cache["k"] = cache["k"].at[w_page, w_off].set(k_q, mode="drop")
         new_cache["k_scale"] = cache["k_scale"].at[w_page, w_off].set(
             k_s, mode="drop")
@@ -984,6 +1007,69 @@ def attn_decode_q8_paged(params, x, cache, block_table, pos, *, n_heads,
         & ~jnp.repeat(bt >= n_pages, P, axis=1)
     ctx = _q8_sweep(q, gk, gks, gv, gvs, valid, n_heads=n_heads,
                     n_kv_heads=n_kv_heads, d_head=d_head, softcap=softcap)
+    ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    out = matmul(ctx, params["wo"])
+    return out, {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+
+
+def attn_decode_q4_paged(params, x, cache, block_table, pos, *, n_heads,
+                         n_kv_heads, d_head, theta, window, softcap=0.0,
+                         qk_norm=False):
+    """Packed-int4 paged decode: quarter-width KV bytes on the block pool.
+
+    cache: {"k": uint8 [n_pages,P,Hkv,Dh//2] (nibble pairs), "k_scale": f32
+    [n_pages,P,Hkv], "v", "v_scale"}.  The new token is quantized to int4
+    per kv-head, packed, and scattered through the block table exactly like
+    the q8 path; the sweep runs in the Pallas ``paged_decode_attention_q4``
+    kernel, which unpacks and dequantizes in-register so the HBM bytes per
+    step stay at the packed width (softcap falls back to a gathered dense
+    reference view, mirroring ``attn_decode_paged``)."""
+    from repro.kernels import ops as _kops
+    from repro.serving.quantized_cache import (
+        dequantize, pack_int4, quantize_token_int4, unpack_int4)
+
+    B = x.shape[0]
+    n_pages, P = cache["k"].shape[0], cache["k"].shape[1]
+    Hkv = n_kv_heads
+    R = _paged_ring(window, n_pages, P)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           pos[:, None], theta, qk_norm)
+    k_q, k_s = quantize_token_int4(k)              # [B,1,Hkv,Dh],[B,1,Hkv]
+    v_q, v_s = quantize_token_int4(v)
+    k_q, v_q = pack_int4(k_q), pack_int4(v_q)      # [B,1,Hkv,Dh//2] uint8
+    bt = jnp.asarray(block_table, jnp.int32)
+    bidx = jnp.arange(B)
+    ridx = pos % R
+    w_page = bt[bidx, ridx // P]
+    off = ridx % P
+    ck = cache["k"].at[w_page, off].set(k_q[:, 0], mode="drop")
+    cks = cache["k_scale"].at[w_page, off].set(k_s[:, 0], mode="drop")
+    cv = cache["v"].at[w_page, off].set(v_q[:, 0], mode="drop")
+    cvs = cache["v_scale"].at[w_page, off].set(v_s[:, 0], mode="drop")
+
+    lengths = jnp.minimum(pos + 1, R)
+    if softcap and softcap > 0.0:
+        rows = jnp.clip(bt, 0, n_pages - 1)
+        S = bt.shape[1] * P
+        gk = dequantize(unpack_int4(ck[rows]), cks[rows]).reshape(
+            B, S, Hkv, d_head)
+        gv = dequantize(unpack_int4(cv[rows]), cvs[rows]).reshape(
+            B, S, Hkv, d_head)
+        G = n_heads // Hkv
+        qg = q.reshape(B, Hkv, G, d_head)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, gk.astype(q.dtype),
+                       preferred_element_type=jnp.float32) / math.sqrt(d_head)
+        s = _maybe_softcap(s, softcap)
+        ok = (jnp.arange(S, dtype=jnp.int32)[None, :] < lengths[:, None]) \
+            & ~jnp.repeat(bt >= n_pages, P, axis=1)
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhgs,bshd->bhgd", p, gv,
+                         preferred_element_type=jnp.float32)
+    else:
+        ctx = _kops.paged_decode_attention_q4(
+            q.reshape(B, n_heads, d_head), ck, cks, cv, cvs, bt, lengths)
     ctx = ctx.reshape(B, 1, n_heads * d_head).astype(x.dtype)
     out = matmul(ctx, params["wo"])
     return out, {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}

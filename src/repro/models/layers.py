@@ -130,18 +130,53 @@ def ffn(params, x, act: str = "silu"):
 # matmul with f32 accumulation
 # ---------------------------------------------------------------------------
 
+# Decode-shaped quantized matmuls (token dim <= this) route through the
+# fused int8 Pallas GEMV (kernels/gemv_cid._gemv_q_kernel) so the weight
+# bytes cross HBM at int8 width with in-kernel dequant — HALO's CiD decode
+# mapping.  The threshold catches decode (T=1) and speculative verify
+# windows (T = bucketed k+1) but not prefill chunks, which stay on the
+# GEMM path (CiM).
+GEMV_TOKEN_DIM_MAX = 8
+
+# trace-time route counter: incremented each time a jitted program traces
+# the fused-GEMV path.  Tests/benches assert decode programs actually
+# contain the kernel (a program counter, not a timing claim).
+_gemv_routes = 0
+
+
+def gemv_route_count() -> int:
+    return _gemv_routes
+
+
+def reset_gemv_route_count() -> None:
+    global _gemv_routes
+    _gemv_routes = 0
+
+
 def matmul(x, w):
     """x @ w with f32 accumulation, result cast back to x.dtype.
 
     ``w`` may be an int8 weight-only-quantized dict {"q","scale"}
     (serving/quantized_weights.py); the dequant fuses into the operand read
-    on TPU, so HBM/all-gather traffic is the int8 width.
+    on TPU, so HBM/all-gather traffic is the int8 width.  Decode-shaped
+    calls (token dim <= GEMV_TOKEN_DIM_MAX, unsharded) route through the
+    quantized Pallas GEMV so the int8 bytes are read directly with
+    in-kernel dequant instead of materializing a full-width copy.
     """
     from repro.distributed.policy import get_policy, replicate
+    global _gemv_routes
     pol = get_policy()
     sp = pol is not None and pol.sp_enabled
     if isinstance(w, dict) and "q" in w:
         q, scale = w["q"], w["scale"]
+        if (not sp and q.ndim == 2 and x.ndim >= 2
+                and x.shape[-2] <= GEMV_TOKEN_DIM_MAX):
+            from repro.kernels import ops as _kops
+            _gemv_routes += 1
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            out = _kops.gemv(x2, q, scale.astype(jnp.float32))
+            return out.reshape(lead + (q.shape[-1],)).astype(x.dtype)
         if sp:
             # gather the INT8 bytes, dequantize per chip (not vice versa)
             q, scale = replicate(q), replicate(scale)

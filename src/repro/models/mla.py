@@ -173,7 +173,7 @@ def mla_chunk(params, x, offsets, lengths, slots, cache, *,
 
 
 def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
-                    *, n_heads, m: MLAConfig):
+                    *, n_heads, m: MLAConfig, scales=None):
     """Chunked prefill against the PAGED latent pool.
 
     cache: [n_pages, P, r+dr]; block_table: [B, W] int32 (sentinel >=
@@ -181,7 +181,11 @@ def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     offset ``pos % P`` (the MLA arena is position-indexed — no ring).  As
     in ``mla_chunk`` the chunk's latents are scattered in FIRST, then the C
     queries run the absorbed decode formulation over the row's gathered
-    pages.  Returns (out [N, C, d], new_cache).
+    pages.  Returns (out [N, C, d], new_cache) — or, with ``scales`` (f32
+    [n_pages, P] per-token scale pages riding the same block table; the
+    latent pool is then int8, HALO's end-to-end-int8 memory format),
+    (out, new_cache, new_scales): writes quantize per token, gathers
+    dequantize before the absorbed sweep.
     """
     n_rows, C, _ = x.shape
     n_pages, P = cache.shape[0], cache.shape[1]
@@ -202,8 +206,16 @@ def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     w_page = jnp.take_along_axis(bt_rows, positions // P, axis=1)
     w_page = jnp.where(keep & valid_row[:, None], w_page, n_pages)
     w_off = jnp.where(keep, positions % P, P)
-    cache = cache.at[w_page, w_off].set(entry, mode="drop")
-    lat = cache[jnp.clip(bt_rows, 0, n_pages - 1)]              # [N, W, P, w]
+    pages = jnp.clip(bt_rows, 0, n_pages - 1)
+    if scales is not None:
+        from repro.serving.quantized_cache import dequantize, quantize_token
+        e_q, e_s = quantize_token(entry)            # [N,C,w] int8, [N,C]
+        cache = cache.at[w_page, w_off].set(e_q, mode="drop")
+        scales = scales.at[w_page, w_off].set(e_s, mode="drop")
+        lat = dequantize(cache[pages], scales[pages]).astype(x.dtype)
+    else:
+        cache = cache.at[w_page, w_off].set(entry, mode="drop")
+        lat = cache[pages]                                      # [N, W, P, w]
     lat = lat.reshape(n_rows, S, lat.shape[-1])
     c_kv = lat[..., : m.kv_lora_rank]
     k_rope = lat[..., m.kv_lora_rank:]
@@ -225,6 +237,8 @@ def mla_chunk_paged(params, x, offsets, lengths, slots, cache, block_table,
     ctx = jnp.einsum("nqhr,hrv->nqhv", ctx_lat, params["w_uv"],
                      preferred_element_type=jnp.float32).astype(x.dtype)
     out = matmul(ctx.reshape(n_rows, C, n_heads * m.v_head_dim), params["wo"])
+    if scales is not None:
+        return out, cache, scales
     return out, cache
 
 
@@ -274,13 +288,14 @@ def mla_chunk_packed(params, x, seg, cache, *, n_heads, m: MLAConfig):
 
 
 def mla_chunk_packed_paged(params, x, seg, cache, block_table, *,
-                           n_heads, m: MLAConfig):
+                           n_heads, m: MLAConfig, scales=None):
     """Packed-stream chunked prefill against the PAGED latent pool.
 
     Same stream contract as ``mla_chunk_packed``; the arena is the pool
     ``cache`` [n_pages, P, r+dr] addressed via ``block_table`` [B, W]
     exactly as in ``mla_chunk_paged`` (position-indexed, sentinel pages
-    drop / mask).  Returns (out [1, T, d], new_cache).
+    drop / mask; with ``scales`` the pool is int8 + per-token scale pages).
+    Returns (out [1, T, d], new_cache[, new_scales]).
     """
     _, T, _ = x.shape
     n_pages, P = cache.shape[0], cache.shape[1]
@@ -299,8 +314,16 @@ def mla_chunk_packed_paged(params, x, seg, cache, block_table, *,
         bt_tok, (seg.positions // P)[:, None], axis=1)[:, 0]
     w_page = jnp.where(seg.valid & valid_row, w_page, n_pages)
     w_off = jnp.where(seg.valid, seg.positions % P, P)
-    cache = cache.at[w_page, w_off].set(entry, mode="drop")
-    lat = cache[jnp.clip(bt_tok, 0, n_pages - 1)]               # [T, W, P, w]
+    pages = jnp.clip(bt_tok, 0, n_pages - 1)
+    if scales is not None:
+        from repro.serving.quantized_cache import dequantize, quantize_token
+        e_q, e_s = quantize_token(entry)            # [T,w] int8, [T]
+        cache = cache.at[w_page, w_off].set(e_q, mode="drop")
+        scales = scales.at[w_page, w_off].set(e_s, mode="drop")
+        lat = dequantize(cache[pages], scales[pages]).astype(x.dtype)
+    else:
+        cache = cache.at[w_page, w_off].set(entry, mode="drop")
+        lat = cache[pages]                                      # [T, W, P, w]
     lat = lat.reshape(T, S, lat.shape[-1])
     c_kv = lat[..., : m.kv_lora_rank]
     k_rope = lat[..., m.kv_lora_rank:]
@@ -322,15 +345,21 @@ def mla_chunk_packed_paged(params, x, seg, cache, block_table, *,
     ctx = jnp.einsum("thr,hrv->thv", ctx_lat, params["w_uv"],
                      preferred_element_type=jnp.float32).astype(x.dtype)
     out = matmul(ctx.reshape(1, T, n_heads * m.v_head_dim), params["wo"])
+    if scales is not None:
+        return out, cache, scales
     return out, cache
 
 
 def mla_decode_paged(params, x, cache, block_table, pos, *, n_heads,
-                     m: MLAConfig):
+                     m: MLAConfig, scales=None):
     """Absorbed paged decode: GEMV sweep over the gathered latent pages.
 
     cache: [n_pages, P, r+dr]; block_table: [B, W]; pos: [B].  The engine
-    hands inactive slots all-sentinel rows so their writes drop.
+    hands inactive slots all-sentinel rows so their writes drop.  With
+    ``scales`` (f32 [n_pages, P]) the pool is int8 latents + per-token
+    scale pages — the GEMV sweep then streams r+dr+4 bytes per cached
+    token instead of 4*(r+dr) (HALO's int8 CiD memory format) — and the
+    return is (out, new_cache, new_scales).
     """
     B = x.shape[0]
     n_pages, P = cache.shape[0], cache.shape[1]
@@ -343,8 +372,16 @@ def mla_decode_paged(params, x, cache, block_table, pos, *, n_heads,
     bt = jnp.asarray(block_table, jnp.int32)
     bidx = jnp.arange(B)
     w_page = bt[bidx, pos // P]
-    cache = cache.at[w_page, pos % P].set(new_entry[:, 0], mode="drop")
-    lat = cache[jnp.clip(bt, 0, n_pages - 1)]                   # [B, W, P, w]
+    pages = jnp.clip(bt, 0, n_pages - 1)
+    if scales is not None:
+        from repro.serving.quantized_cache import dequantize, quantize_token
+        e_q, e_s = quantize_token(new_entry)        # [B,1,w] int8, [B,1]
+        cache = cache.at[w_page, pos % P].set(e_q[:, 0], mode="drop")
+        scales = scales.at[w_page, pos % P].set(e_s[:, 0], mode="drop")
+        lat = dequantize(cache[pages], scales[pages]).astype(x.dtype)
+    else:
+        cache = cache.at[w_page, pos % P].set(new_entry[:, 0], mode="drop")
+        lat = cache[pages]                                      # [B, W, P, w]
     lat = lat.reshape(B, S, lat.shape[-1])
     c_kv = lat[..., : m.kv_lora_rank]                           # [B,S,r]
     k_rope = lat[..., m.kv_lora_rank:]                          # [B,S,dr]
@@ -365,6 +402,8 @@ def mla_decode_paged(params, x, cache, block_table, pos, *, n_heads,
     ctx = jnp.einsum("bhr,hrv->bhv", ctx_lat, params["w_uv"],
                      preferred_element_type=jnp.float32).astype(x.dtype)
     out = matmul(ctx.reshape(B, 1, n_heads * m.v_head_dim), params["wo"])
+    if scales is not None:
+        return out, cache, scales
     return out, cache
 
 

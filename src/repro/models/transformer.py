@@ -358,12 +358,23 @@ def _attn_layer_decode_paged(cfg, run, lp, x, cache, bt, pos):
     """
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if cfg.mla.enabled:
-        a, latent = mla_mod.mla_decode_paged(lp["attn"], h, cache["latent"],
-                                             bt, pos,
-                                             n_heads=cfg.n_heads, m=cfg.mla)
-        new_cache = {"latent": latent}
+        if "latent_scale" in cache:
+            a, latent, lscale = mla_mod.mla_decode_paged(
+                lp["attn"], h, cache["latent"], bt, pos,
+                n_heads=cfg.n_heads, m=cfg.mla,
+                scales=cache["latent_scale"])
+            new_cache = {"latent": latent, "latent_scale": lscale}
+        else:
+            a, latent = mla_mod.mla_decode_paged(
+                lp["attn"], h, cache["latent"], bt, pos,
+                n_heads=cfg.n_heads, m=cfg.mla)
+            new_cache = {"latent": latent}
     elif "k_scale" in cache:
-        a, new_cache = attn_mod.attn_decode_q8_paged(
+        # quantized pools: int8 pages, or packed-int4 (uint8 nibble pairs)
+        q_decode = (attn_mod.attn_decode_q4_paged
+                    if cache["k"].dtype == jnp.uint8
+                    else attn_mod.attn_decode_q8_paged)
+        a, new_cache = q_decode(
             lp["attn"], h, cache, bt, pos,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
             theta=run.theta, window=run.window,
@@ -416,10 +427,17 @@ def _attn_layer_chunk_paged(cfg, run, lp, x, offsets, lengths, slots, cache,
     """One attention layer of a packed prefill chunk against the page pool."""
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if cfg.mla.enabled:
-        a, latent = mla_mod.mla_chunk_paged(lp["attn"], h, offsets, lengths,
-                                            slots, cache["latent"], bt,
-                                            n_heads=cfg.n_heads, m=cfg.mla)
-        new_cache = {"latent": latent}
+        if "latent_scale" in cache:
+            a, latent, lscale = mla_mod.mla_chunk_paged(
+                lp["attn"], h, offsets, lengths, slots, cache["latent"], bt,
+                n_heads=cfg.n_heads, m=cfg.mla,
+                scales=cache["latent_scale"])
+            new_cache = {"latent": latent, "latent_scale": lscale}
+        else:
+            a, latent = mla_mod.mla_chunk_paged(
+                lp["attn"], h, offsets, lengths, slots, cache["latent"], bt,
+                n_heads=cfg.n_heads, m=cfg.mla)
+            new_cache = {"latent": latent}
     else:
         a, new_cache = attn_mod.attn_chunk_paged(
             lp["attn"], h, offsets, lengths, slots, cache, bt,
@@ -469,10 +487,17 @@ def _attn_layer_chunk_packed_paged(cfg, run, lp, x, seg, cache, bt,
     """One attention layer of a PACKED prefill stream against the page pool."""
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if cfg.mla.enabled:
-        a, latent = mla_mod.mla_chunk_packed_paged(
-            lp["attn"], h, seg, cache["latent"], bt,
-            n_heads=cfg.n_heads, m=cfg.mla)
-        new_cache = {"latent": latent}
+        if "latent_scale" in cache:
+            a, latent, lscale = mla_mod.mla_chunk_packed_paged(
+                lp["attn"], h, seg, cache["latent"], bt,
+                n_heads=cfg.n_heads, m=cfg.mla,
+                scales=cache["latent_scale"])
+            new_cache = {"latent": latent, "latent_scale": lscale}
+        else:
+            a, latent = mla_mod.mla_chunk_packed_paged(
+                lp["attn"], h, seg, cache["latent"], bt,
+                n_heads=cfg.n_heads, m=cfg.mla)
+            new_cache = {"latent": latent}
     else:
         a, new_cache = attn_mod.attn_chunk_packed_paged(
             lp["attn"], h, seg, cache, bt,

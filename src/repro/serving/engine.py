@@ -42,7 +42,9 @@ its pages return to the pool and it re-queues as WAITING with its
 generated tokens folded into the prompt (recompute-on-resume), so the
 oldest request always finishes.  Decode attention routes through the
 Pallas paged flash-decode kernel; ``kv_dtype="int8"`` stores GQA pages
-int8 with f32 scales in a parallel page array (MLA latents stay f32).
+AND MLA latent pages int8 with per-token f32 scales in parallel page
+arrays; ``kv_dtype="int4"`` packs GQA pages two nibbles per byte
+(~4x resident-KV reduction; MLA latents stay int8 — see kv_pool.py).
 
 PREFIX CACHE (``ServeConfig(prefix_cache=True)``, requires paged): a
 radix index over page-aligned token-block hashes
@@ -254,7 +256,14 @@ class ServeConfig:
     paged: bool = False
     page_size: int = 16
     n_pages: int = 64
-    kv_dtype: str = "f32"               # "int8": quantized GQA pages (paged)
+    # KV page dtype (paged only): "int8" stores GQA K/V pages and MLA
+    # latent pages quantized per token; "int4" packs GQA K/V two nibbles
+    # per byte (MLA latents stay int8 — see serving/kv_pool.py)
+    kv_dtype: str = "f32"
+    # weight dtype: "int8" runs quantize_params at engine build and serves
+    # from {"q","scale"} leaves — decode-shaped matmuls then route through
+    # the fused quantized Pallas GEMV (models/layers.matmul)
+    weights_dtype: str = "f32"
     # radix prefix cache over the page pool (requires paged): shared-prompt
     # KV pages are reused copy-on-write instead of recomputed
     prefix_cache: bool = False
@@ -289,6 +298,15 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
                  *, mesh=None):
         self.cfg = cfg
+        if sc.weights_dtype not in ("f32", "int8"):
+            raise ValueError(f"weights_dtype={sc.weights_dtype!r} "
+                             "(expected 'f32' or 'int8')")
+        if sc.weights_dtype == "int8":
+            # serving quantizes EVERY matmul leaf (min_size=0): HALO's CiD
+            # computes int8 end to end, and the decode GEMV kernel reads
+            # the int8 bytes directly (models/layers.matmul routing)
+            from repro.serving.quantized_weights import quantize_params
+            params = quantize_params(params, min_size=0)
         self.params = params
         self.sc = sc
         self.mesh = mesh

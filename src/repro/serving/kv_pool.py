@@ -28,9 +28,14 @@ Two layers:
   the model plan, ring/MLA-aware via ``cache_len``: a sliding-window run
   pools only its ring of ``min(window, capacity)`` logical entries, an MLA
   run pools latent rows ``[L, n_pages, page_size, r+dr]``.  With
-  ``kv_dtype="int8"`` GQA runs store int8 pages with f32 scales riding in
-  a parallel page array (same block table); MLA latents stay f32 (they are
-  rmsnorm-sensitive and already 4-9x smaller — see quantized_cache.py).
+  ``kv_dtype="int8"`` GQA runs store int8 pages with per-token f32 scales
+  riding in a parallel page array (same block table), and MLA runs store
+  int8 latent pages with a per-token ``latent_scale`` page array.  With
+  ``kv_dtype="int4"`` GQA pages pack two nibbles per byte (uint8
+  ``[..., Dh//2]``, see quantized_cache.pack_int4) for a 4x resident-KV
+  reduction vs f32; MLA latents are already rank-compressed, so int4
+  falls back to the int8 latent layout there (halving is the floor the
+  rmsnorm-sensitive latents tolerate).
 """
 
 from __future__ import annotations
@@ -252,9 +257,13 @@ class KVPool:
                 "paged KV arena requires an all-attention plan (GQA / "
                 "sliding-window / MLA); SSM and shared-attention runs carry "
                 f"recurrent state — got kinds {[r.kind for r in plan]}")
-        if kv_dtype not in ("f32", "int8"):
-            raise ValueError(f"kv_dtype must be 'f32' or 'int8', got "
-                             f"{kv_dtype!r}")
+        if kv_dtype not in ("f32", "int8", "int4"):
+            raise ValueError(f"kv_dtype must be 'f32', 'int8' or 'int4', "
+                             f"got {kv_dtype!r}")
+        if (kv_dtype == "int4" and not cfg.mla.enabled
+                and cfg.d_head % 2):
+            raise ValueError(f"kv_dtype='int4' packs head-dim pairs; "
+                             f"d_head={cfg.d_head} is odd")
         self.cfg = cfg
         self.n_slots = n_slots
         self.n_pages = n_pages
@@ -281,8 +290,28 @@ class KVPool:
             L, P = run.n_layers, page_size
             if cfg.mla.enabled:
                 w = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-                self.caches.append(
-                    {"latent": jnp.zeros((L, n_pages, P, w), dtype)})
+                if kv_dtype != "f32":
+                    # int8 latent pages + one f32 scale per (layer, token);
+                    # int4 deliberately maps here too (see module docstring)
+                    self.caches.append({
+                        "latent": jnp.zeros((L, n_pages, P, w), jnp.int8),
+                        "latent_scale": jnp.zeros((L, n_pages, P),
+                                                  jnp.float32),
+                    })
+                else:
+                    self.caches.append(
+                        {"latent": jnp.zeros((L, n_pages, P, w), dtype)})
+            elif kv_dtype == "int4":
+                # packed nibble pairs: uint8 pages at half the head width
+                # (uint8 vs int8 is also the runtime marker q4-vs-q8)
+                shape = (L, n_pages, P, cfg.n_kv_heads, cfg.d_head // 2)
+                sshape = (L, n_pages, P, cfg.n_kv_heads)
+                self.caches.append({
+                    "k": jnp.zeros(shape, jnp.uint8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v": jnp.zeros(shape, jnp.uint8),
+                    "v_scale": jnp.zeros(sshape, jnp.float32),
+                })
             elif kv_dtype == "int8":
                 shape = (L, n_pages, P, cfg.n_kv_heads, cfg.d_head)
                 sshape = (L, n_pages, P, cfg.n_kv_heads)

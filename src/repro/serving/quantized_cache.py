@@ -41,14 +41,52 @@ def dequantize(q, scale, axis: int = -1):
         scale.astype(jnp.float32), axis)
 
 
+# ---------------------------------------------------------------------------
+# packed int4 (two nibbles per byte) — the GQA paged-KV quarter-width format
+# ---------------------------------------------------------------------------
+
+def quantize_token_int4(x, axis: int = -1):
+    """Symmetric int4 per-vector quantization along ``axis``.
+    Returns (q int8 in [-7, 7], scale f32 with ``axis`` removed) — pack the
+    q values with ``pack_int4`` for storage."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(xf / jnp.expand_dims(scale, axis)),
+                 -7, 7).astype(jnp.int8)
+    return q, scale
+
+
+def pack_int4(q):
+    """Pack int4 values (int8 in [-8, 7]) pairwise along the last dim:
+    [..., D] -> uint8 [..., D//2], element 2i in the low nibble and 2i+1 in
+    the high nibble.  D must be even."""
+    assert q.shape[-1] % 2 == 0, f"odd last dim {q.shape[-1]} cannot pack"
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = q[..., 1::2].astype(jnp.uint8) & 0xF
+    return lo | (hi << 4)
+
+
+def unpack_int4(b):
+    """Inverse of ``pack_int4``: uint8 [..., D//2] -> int8 [..., D] with
+    explicit sign extension (nibbles >= 8 are negative)."""
+    lo = (b & 0xF).astype(jnp.int8)
+    hi = (b >> 4).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(b.shape[:-1] + (2 * b.shape[-1],))
+
+
 def init_quantized_cache(cfg: ModelConfig, batch: int, seq_len: int
                          ) -> List[Any]:
     """int8 arena mirroring init_cache (zeros)."""
     caches: List[Any] = []
     for run in build_plan(cfg):
         if run.kind == "attn" and cfg.mla.enabled:
-            # MLA latents are already 4-9x smaller than GQA KV (the paper's
-            # DeepSeek-V2 cell) and rmsnorm-sensitive: kept full precision.
+            # the DENSE quantized arena keeps MLA latents full precision
+            # (dryrun-only layout); the serving engine's paged pool stores
+            # int8 latents + per-token scale pages — see kv_pool.KVPool.
             from repro.models.transformer import init_cache as _ic
             caches.append(_ic(cfg, batch, seq_len)[len(caches)])
         elif run.kind == "attn":

@@ -53,8 +53,11 @@ def quantize_params(params: Pytree, min_size: int = 1 << 14) -> Pytree:
 
     def maybe_q(path, leaf):
         name = _path_leaf_name(path)
+        # MoE expert banks reuse the ffn leaf names but are consumed by
+        # moe_apply's expert einsums, not layers.matmul — keep them dense
+        in_moe = any(str(getattr(p, "key", "")) == "moe" for p in path)
         if (hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.size >= min_size
-                and name in MATMUL_LEAVES
+                and name in MATMUL_LEAVES and not in_moe
                 and jnp.issubdtype(leaf.dtype, jnp.floating)):
             return quantize_weight(leaf)
         return leaf

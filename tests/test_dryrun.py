@@ -71,8 +71,15 @@ from repro.launch import dryrun
 
 base = dryrun.run_cell("llama2-7b", "decode_32k")
 q8 = dryrun.run_cell("llama2-7b", "decode_32k", q8_kv=True)
-# the HALO-faithful int8 arena must cut the decode memory term >= 2x
-assert q8["t_memory_s"] < base["t_memory_s"] / 2, (
+# the int8 arena shrinks the decode memory term, but NOT by the naive 4x:
+# at 32k llama2-7b the f32 KV (~125 MB/chip) only slightly outweighs the
+# f32 weights (~110 MB/chip), so correct 1 B/elem costing of the s8 pages
+# bounds the whole-step reduction near 1.6x.  The old >= 2x threshold was
+# an artifact of _float_bytes dropping integer buffers entirely (s8 reads
+# charged at ZERO bytes) — both bounds below pin the honest costing.
+assert q8["t_memory_s"] < base["t_memory_s"] * 0.75, (
+    base["t_memory_s"], q8["t_memory_s"])
+assert q8["t_memory_s"] > base["t_memory_s"] / 4, (
     base["t_memory_s"], q8["t_memory_s"])
 print("Q8-DRYRUN-OK")
 """
@@ -81,3 +88,27 @@ print("Q8-DRYRUN-OK")
 def test_dryrun_q8_decode_memory_reduction():
     out = run_cells(Q8_CODE)
     assert "Q8-DRYRUN-OK" in out
+
+
+W8_CODE = r"""
+from repro.launch import dryrun
+
+base = dryrun.run_cell("llama2-7b", "decode_32k", q8_kv=True)
+w8 = dryrun.run_cell("llama2-7b", "decode_32k", q8_kv=True,
+                     int8_weights=True)
+# int8 weights shrink the decode memory term (4 B -> 1 B per weight) ...
+assert w8["t_memory_s"] < base["t_memory_s"], (
+    base["t_memory_s"], w8["t_memory_s"])
+# ... but the s8 banks must still be CHARGED: the analyzer used to drop
+# integer entry parameters entirely (_float_bytes), which made quantized
+# weights look free.  With KV already int8, weights dominate the remaining
+# traffic, so a proper 1-byte costing keeps >= 25% of the baseline term.
+assert w8["t_memory_s"] > base["t_memory_s"] / 4, (
+    base["t_memory_s"], w8["t_memory_s"])
+print("W8-DRYRUN-OK")
+"""
+
+
+def test_dryrun_int8_weight_bytes_costed():
+    out = run_cells(W8_CODE)
+    assert "W8-DRYRUN-OK" in out

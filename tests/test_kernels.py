@@ -85,6 +85,29 @@ def test_gemv_int8_fused_dequant(B, K, N):
     assert err.max() / (np.abs(np.asarray(exact)).max() + 1e-9) < 0.05
 
 
+@pytest.mark.parametrize("B,K,N,bn,bk", [
+    (1, 1000, 500, 256, 512),     # K and N both ragged vs the tile grid
+    (2, 768, 896, 512, 1024),     # K < bk entirely (single masked tile)
+    (1, 1536, 300, 256, 512),     # N smaller than two tiles
+])
+def test_gemv_ragged_tiles(B, K, N, bn, bk):
+    """Shapes that don't divide the tile grid: the masked edge tiles must
+    not leak padding garbage into the accumulator (serving models' d_model
+    / d_ff are not multiples of the default 512x1024 tiling)."""
+    k1, k2 = jax.random.split(KEY)
+    x = rand(k1, (B, K))
+    w = rand(k2, (K, N))
+    got = ops.gemv(x, w, bn=bn, bk=bk)
+    want = ref.gemv_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    q, scale = quantize_int8(w)
+    got_q = ops.gemv(x, q, scale, bn=bn, bk=bk)
+    want_q = ref.gemv_ref(x, q, scale)
+    np.testing.assert_allclose(np.asarray(got_q), np.asarray(want_q),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention (prefill)
 # ---------------------------------------------------------------------------
@@ -250,6 +273,45 @@ def test_paged_decode_attention_unallocated_pages_inert():
     got = ops.paged_decode_attention(q, poison_k, poison_v, bt, lengths)
     np.testing.assert_allclose(np.asarray(base), np.asarray(got),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,ps", [
+    (2, 8, 8, 64, 16),
+    (3, 8, 2, 64, 32),       # GQA
+    (2, 4, 1, 128, 8),       # MQA
+])
+def test_paged_decode_attention_q4_matches_dequant_ref(B, H, Hkv, D, ps):
+    """Packed-int4 paged decode: the in-register nibble unpack + dequant
+    must reproduce attention over the explicitly dequantized dense view."""
+    from repro.serving.quantized_cache import (
+        dequantize, pack_int4, quantize_token_int4)
+
+    n_pages, W = 24, 6
+    ks = jax.random.split(KEY, 2)
+    lengths = jax.random.randint(ks[0], (B,), 1, W * ps + 1)
+    q = rand(ks[1], (B, H, D), scale=0.5)
+    k_pages, v_pages, bt, _, _ = _paged_setup(
+        jax.random.fold_in(KEY, 9), B, Hkv, D, n_pages, ps, W, lengths)
+    kq, k_sc = quantize_token_int4(k_pages)
+    vq, v_sc = quantize_token_int4(v_pages)
+    kp, vp = pack_int4(kq), pack_int4(vq)
+    got = ops.paged_decode_attention_q4(q, kp, k_sc, vp, v_sc, bt, lengths)
+    # dense view of the QUANTIZED pool (so only the kernel arithmetic is
+    # under test, not the quantization error)
+    kd = np.zeros((B, W * ps, Hkv, D), np.float32)
+    vd = np.zeros((B, W * ps, Hkv, D), np.float32)
+    kdq = np.asarray(dequantize(kq, k_sc))
+    vdq = np.asarray(dequantize(vq, v_sc))
+    btn = np.asarray(bt)
+    for b in range(B):
+        for i in range(W):
+            if btn[b, i] < n_pages:
+                kd[b, i * ps:(i + 1) * ps] = kdq[btn[b, i]]
+                vd[b, i * ps:(i + 1) * ps] = vdq[btn[b, i]]
+    want = ref.decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd),
+                                    lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
 
 
 # ---------------------------------------------------------------------------

@@ -20,8 +20,12 @@ from repro.models.transformer import (
 from repro.serving.quantized_cache import (
     dequantize,
     init_quantized_cache,
+    pack_int4,
     quantize_token,
+    quantize_token_int4,
+    unpack_int4,
 )
+from repro.serving.quantized_weights import quantize_weight
 
 
 @settings(max_examples=20, deadline=None)
@@ -35,6 +39,32 @@ def test_quantize_token_roundtrip_bound(scale, d):
     bound = np.asarray(s)[..., None] * 0.5 + 1e-9
     assert (err <= bound * 1.01).all()
     assert q.dtype == jnp.int8
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), k=st.sampled_from([17, 64, 128]))
+def test_quantize_weight_roundtrip_bound(scale, k):
+    """Per-output-channel int8 weights: |w - dq(w)| <= scale_n / 2."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, 33)) * scale
+    q = quantize_weight(w)
+    assert q["q"].dtype == jnp.int8 and q["scale"].shape == (33,)
+    back = np.asarray(q["q"], np.float32) * np.asarray(q["scale"])[None, :]
+    err = np.abs(np.asarray(w) - back)
+    bound = np.asarray(q["scale"])[None, :] * 0.5 + 1e-9
+    assert (err <= bound * 1.01).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), d=st.sampled_from([16, 64, 128]))
+def test_quantize_token_int4_roundtrip_bound(scale, d):
+    """Packed int4 KV round trip: |x - dq(unpack(pack(q)))| <= s / 2."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, d)) * scale
+    q, s = quantize_token_int4(x)
+    assert int(jnp.max(jnp.abs(q))) <= 7
+    y = dequantize(unpack_int4(pack_int4(q)), s)
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-9
+    assert (err <= bound * 1.01).all()
 
 
 def _quantize_f32_cache(cfg, cache, B, S):
