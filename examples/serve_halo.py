@@ -34,7 +34,8 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_batch=4, max_len=128, prefill_chunk=2048,
                max_prefill_tokens=8192, paged=False, page_size=16,
                n_pages=64, prefix_cache=False, speculative=None,
-               kv_dtype="f32", weights_dtype="f32"):
+               kv_dtype="f32", weights_dtype="f32",
+               executor="colocated", host_spill_pages=0):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
@@ -43,7 +44,8 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                                max_prefill_tokens=max_prefill_tokens),
         paged=paged, page_size=page_size, n_pages=n_pages,
         prefix_cache=prefix_cache, speculative=speculative,
-        kv_dtype=kv_dtype, weights_dtype=weights_dtype))
+        kv_dtype=kv_dtype, weights_dtype=weights_dtype,
+        executor=executor, host_spill_pages=host_spill_pages))
     t0 = time.monotonic()
     for p in prompts:
         engine.submit(p.copy(), max_new_tokens=max_new)
@@ -215,6 +217,39 @@ def main():
         page_bytes = sum(v.nbytes for v in cache.values()) // 64
         print(f"w={wdt:4s} kv={kdt:4s}  {page_bytes:8d}B "
               f"{gemv_route_count():5d} {agree:>6s}  {first}")
+
+    # disaggregated serving & tiered KV (HALO's 2.5D split, serving-level):
+    # the disaggregated executor pins prefill and decode programs to
+    # separate device groups, so each prefill -> decode handoff moves the
+    # request's fresh KV pages across the interposer-link analogue; a host
+    # spill tier lets a tight pool's preemptions SWAP pages out and resume
+    # with zero recomputation instead of re-prefilling.  Streams must stay
+    # bit-identical across all four rows
+    print(f"\n{'executor / kv tier':24s} {'migrated':>9s} {'handoffs':>9s} "
+          f"{'swap-res':>9s} {'recompute':>10s}  outputs identical?")
+    d_stream = [rng.integers(0, cfg.vocab_size, (40,), dtype=np.int32)
+                for _ in range(8)]
+    d_base = None
+    for label, ex, spill, npg in (
+            ("colocated", "colocated", 0, 64),
+            ("disaggregated", "disaggregated", 0, 64),
+            ("tight pool, recompute", "disaggregated", 0, 26),
+            ("tight pool, host tier", "disaggregated", 64, 26)):
+        eng, done, _ = run_stream(cfg, params, d_stream,
+                                  max_new=args.max_new,
+                                  prefill_chunk=16, max_prefill_tokens=32,
+                                  paged=True, page_size=8, n_pages=npg,
+                                  executor=ex, host_spill_pages=spill)
+        outs = [r.generated for r in done]
+        same = "(reference)" if d_base is None else (
+            "yes" if outs == d_base else "NO")
+        if d_base is None:
+            d_base = outs
+        c = eng.counts()
+        xs = eng.executor.stats()
+        print(f"{label:24s} {c['migrated_bytes']/1e6:8.2f}M "
+              f"{xs['migration_batches']:9d} {c['swap_resumes']:9d} "
+              f"{c['recompute_preemptions']:10d}  {same}")
 
     # request-centric API: per-request SamplingParams (temperature=0 is
     # greedy) run in ONE program per tick, tokens stream incrementally

@@ -1,11 +1,18 @@
-"""Lint check: ``repro.serving.__all__`` must exactly match the names the
-package publicly re-exports.
+"""Lint check: serving ``__all__`` literals must exactly match the public
+surface of their module.
 
-Pure AST — no imports of the package (the CI lint job has no jax), so it
-parses ``src/repro/serving/__init__.py`` and compares the ``__all__``
-literal against every public name bound at module top level (imports and
-assignments).  A name imported but not listed, or listed but never
-bound, fails the job; so does an unsorted or duplicated ``__all__``.
+Pure AST — no imports of the package (the CI lint job has no jax).  Two
+module shapes are checked:
+
+  * ``src/repro/serving/__init__.py`` — the package facade: public names
+    bound by top-level imports and assignments must match ``__all__``.
+  * ``src/repro/serving/types.py`` — the host-only dataclass module split
+    out of engine.py: public names DEFINED here (classes, functions,
+    assignments — imports are implementation detail, not surface) must
+    match ``__all__``.
+
+A name bound but not listed, or listed but never bound, fails the job;
+so does an unsorted or duplicated ``__all__``.
 
   python scripts/check_serving_all.py
 """
@@ -16,19 +23,27 @@ import ast
 import sys
 from pathlib import Path
 
-INIT = Path(__file__).resolve().parent.parent / "src/repro/serving/__init__.py"
+SERVING = Path(__file__).resolve().parent.parent / "src/repro/serving"
+# path -> do imports count as public surface (True only for the facade)
+TARGETS = [(SERVING / "__init__.py", True), (SERVING / "types.py", False)]
 
 
-def main() -> int:
-    tree = ast.parse(INIT.read_text())
+def check(path: Path, imports_are_surface: bool) -> list[str]:
+    tree = ast.parse(path.read_text())
     declared: list[str] = []
     bound: set[str] = set()
     for node in tree.body:
         if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if not imports_are_surface:
+                continue
             for alias in node.names:
                 name = alias.asname or alias.name.split(".")[0]
                 if not name.startswith("_"):
                     bound.add(name)
+        elif isinstance(node, (ast.ClassDef, ast.FunctionDef,
+                               ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                bound.add(node.name)
         elif isinstance(node, ast.Assign):
             for tgt in node.targets:
                 if isinstance(tgt, ast.Name):
@@ -50,12 +65,19 @@ def main() -> int:
         errors.append("__all__ has duplicates")
     if declared != sorted(declared):
         errors.append("__all__ is not sorted")
-    if errors:
-        for e in errors:
-            print(f"check_serving_all: {INIT}: {e}", file=sys.stderr)
-        return 1
-    print(f"check_serving_all: OK ({len(declared)} exported names)")
-    return 0
+    if not errors:
+        print(f"check_serving_all: {path.name} OK "
+              f"({len(declared)} exported names)")
+    return [f"check_serving_all: {path}: {e}" for e in errors]
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path, imports_are_surface in TARGETS:
+        errors += check(path, imports_are_surface)
+    for e in errors:
+        print(e, file=sys.stderr)
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

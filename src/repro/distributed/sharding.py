@@ -172,6 +172,28 @@ def param_pspecs(cfg: ModelConfig, *, fsdp_axis: Optional[str] = "data",
     return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
 
 
+def phase_fsdp_axis(phase: str) -> Optional[str]:
+    """FSDP axis for a disaggregated phase worker group's parameters.
+
+    Prefill workers (CiM analogue) shard parameters over ``data`` too —
+    their batched GEMMs amortize the just-in-time all-gather.  Decode
+    workers (CiD analogue) keep weights TP-only/replicated on ``data``:
+    the GEMV phase is latency-bound and re-gathering weights every
+    one-token step would dominate it (the same convention the serving
+    path has always used — see ``param_pspecs``)."""
+    if phase not in ("prefill", "decode"):
+        raise ValueError(f"phase={phase!r} (expected 'prefill' or 'decode')")
+    return "data" if phase == "prefill" else None
+
+
+def phase_param_pspecs(cfg: ModelConfig, phase: str, *,
+                       params_tree: Optional[Pytree] = None) -> Pytree:
+    """Parameter specs for one phase worker group of a disaggregated
+    deployment (serving/executor.DisaggregatedExecutor)."""
+    return param_pspecs(cfg, fsdp_axis=phase_fsdp_axis(phase),
+                        params_tree=params_tree)
+
+
 # ---------------------------------------------------------------------------
 # batch / activation rules
 # ---------------------------------------------------------------------------

@@ -16,7 +16,7 @@ compression targets — see optim/grad_utils.py).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -53,6 +53,25 @@ def make_host_mesh(data: Optional[int] = None, model: Optional[int] = None):
     model = model or n // data
     assert data * model == n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def phase_device_groups(devices: Optional[List] = None
+                        ) -> Tuple[List, List]:
+    """Split the visible devices into (prefill_group, decode_group) for
+    disaggregated serving (serving/executor.DisaggregatedExecutor).
+
+    HALO dedicates DIFFERENT hardware to each phase (CiM prefill, CiD
+    decode); here the analogue is disjoint halves of the device list —
+    prefill takes the first half, decode the second.  A single-device
+    host cannot split, so both groups share that one device: program
+    pinning becomes a no-op while the handoff/migration accounting (the
+    2.5D-link analogue) still runs for real, which is what keeps greedy
+    streams bit-identical colocated vs disaggregated in tests."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) < 2:
+        return devs, devs
+    half = len(devs) // 2
+    return devs[:half], devs[half:]
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:

@@ -107,6 +107,16 @@ def main(argv=None) -> int:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
+    ap.add_argument("--executor", default="colocated",
+                    choices=["colocated", "disaggregated"],
+                    help="disaggregated: prefill/decode programs pinned to "
+                         "separate device groups, KV migrates at the "
+                         "prefill->decode handoff (HALO's 2.5D link)")
+    ap.add_argument("--host-spill-pages", type=int, default=0,
+                    help="host-memory KV tier size in pages per run: "
+                         "preemption swaps pages out instead of "
+                         "recomputing, prefix evictions demote to host "
+                         "(paged only; 0 = off)")
     args = ap.parse_args(argv)
     if (args.draft or args.spec_k is not None) and not args.speculative:
         ap.error("--draft/--spec-k require --speculative")
@@ -119,6 +129,9 @@ def main(argv=None) -> int:
     if args.kv_dtype != "f32" and not args.paged:
         ap.error("--kv-dtype int8/int4 requires --paged (quantized pages "
                  "live in the block-pool arena)")
+    if args.host_spill_pages and not args.paged:
+        ap.error("--host-spill-pages requires --paged (the spill tier "
+                 "stores device pool pages)")
     if args.spec_k is None:
         args.spec_k = 4
 
@@ -152,7 +165,8 @@ def main(argv=None) -> int:
         paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
         kv_dtype=args.kv_dtype, weights_dtype=args.weights_dtype,
         prefix_cache=args.prefix_cache,
-        speculative=spec)
+        speculative=spec,
+        executor=args.executor, host_spill_pages=args.host_spill_pages)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
@@ -235,6 +249,21 @@ def main(argv=None) -> int:
               f"windows={ss['windows']:.0f} "
               f"acceptance={ss['acceptance_rate']:.2f} "
               f"tokens/tick={ss['tokens_per_tick']:.2f}")
+    if args.executor == "disaggregated":
+        xs = engine.executor.stats()
+        print(f"disaggregated prefill-devices={xs['prefill_devices']} "
+              f"decode-devices={xs['decode_devices']} "
+              f"migrated-pages={xs['migrated_pages']} "
+              f"migrated={xs['migrated_bytes']/1e6:.2f}MB "
+              f"handoff-batches={xs['migration_batches']}")
+    if args.host_spill_pages:
+        c = engine.counts()
+        print(f"host-tier pages={args.host_spill_pages} "
+              f"swap-out={c['swap_out_bytes']/1e6:.2f}MB "
+              f"swap-in={c['swap_in_bytes']/1e6:.2f}MB "
+              f"swap-resumes={c['swap_resumes']} "
+              f"recompute-resumes={c['recompute_preemptions']} "
+              f"resident-pages={c['host_resident_pages']}")
     return 0
 
 

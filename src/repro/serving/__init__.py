@@ -10,14 +10,14 @@ SamplingParams(...))`` takes per-request sampling/termination parameters
 facades, and ``abort(req_id)`` cancels a request at any lifecycle stage.
 See docs/serving.md for the tick loop and its mapping onto the paper."""
 
-from repro.serving.engine import (
-    Request,
-    RequestOutput,
-    RequestState,
-    ServeConfig,
-    ServingEngine,
-    TickRecord,
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import (
+    ColocatedExecutor,
+    DisaggregatedExecutor,
+    Executor,
+    make_executor,
 )
+from repro.serving.kv_pool import HostTier, KVPool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (
     SamplingParams,
@@ -34,8 +34,20 @@ from repro.serving.scheduler import (
     pack_chunks,
 )
 from repro.serving.speculative import SpecConfig
+from repro.serving.types import (
+    Request,
+    RequestOutput,
+    RequestState,
+    ServeConfig,
+    TickRecord,
+)
 
 __all__ = [
+    "ColocatedExecutor",
+    "DisaggregatedExecutor",
+    "Executor",
+    "HostTier",
+    "KVPool",
     "PackedPrefill",
     "PhaseAwareConfig",
     "PhaseScheduler",
@@ -49,6 +61,7 @@ __all__ = [
     "SpecConfig",
     "TickPlan",
     "TickRecord",
+    "make_executor",
     "pack_chunks",
     "sample_tokens",
     "sample_tokens_rows",

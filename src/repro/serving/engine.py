@@ -88,6 +88,22 @@ request at ANY lifecycle stage — WAITING, PREFILLING, or DECODING
 attachments, and draft-pool state.  The old engine-wide ``ServeConfig``
 sampling fields survive as deprecated per-request defaults.
 
+THREE LAYERS (PR 8): this module is the host-only ENGINE CORE — request
+lifecycle, tick planning, batch packing, and page/tier accounting.  The
+jitted program table, compile counting, and device placement live in the
+EXECUTOR layer (``serving/executor.py``: ``ColocatedExecutor`` is
+today's single-group behavior, ``DisaggregatedExecutor`` pins prefill
+and decode programs to separate device groups and accounts KV-page
+migration at the prefill -> decode handoff — the 2.5D-link analogue).
+The KV TIERS live in ``serving/kv_pool.py``: the device ``PagePool``
+plus an optional host-memory spill tier (``ServeConfig(host_spill_pages
+> 0)``) that turns preemption into page SWAP instead of
+recompute-on-resume and lets evicted prefix-cache blocks demote to host
+and promote on re-hit.  The ``Request``/``RequestOutput``/``TickRecord``
+/``ServeConfig`` dataclasses moved to ``serving/types.py``; they are
+re-exported here so existing ``from repro.serving.engine import ...``
+callers keep working.
+
 This is a single-host engine; launch/serve.py instantiates it either on
 the host CPU (examples, tests) or under the production mesh with the
 decode shardings from distributed/sharding.py.
@@ -98,8 +114,7 @@ from __future__ import annotations
 import time
 import warnings
 from collections import deque
-from dataclasses import dataclass, field, replace
-from enum import Enum
+from dataclasses import dataclass, replace
 from typing import (
     Any, Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple,
     Union,
@@ -119,7 +134,8 @@ from repro.models.transformer import (
     supports_chunked_prefill,
     supports_paged,
 )
-from repro.serving.kv_pool import KVPool
+from repro.serving.executor import make_executor
+from repro.serving.kv_pool import HostTier, KVPool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (
     SamplingParams,
@@ -129,169 +145,39 @@ from repro.serving.sampling import (
     verify_draft_rows,
 )
 from repro.serving.scheduler import (
-    PhaseAwareConfig,
     PhaseScheduler,
     TickPlan,
     bucket_pow2 as _bucket,
     pack_chunks,
 )
-from repro.serving.speculative import SpecConfig, build_drafter
+from repro.serving.speculative import build_drafter
+from repro.serving.types import (                             # noqa: F401
+    Request,
+    RequestOutput,
+    RequestState,
+    ServeConfig,
+    TickRecord,
+)
 
-
-class RequestState(Enum):
-    WAITING = "waiting"
-    PREFILLING = "prefilling"
-    DECODING = "decoding"
-    DONE = "done"
-
-
-@dataclass
-class Request:
-    req_id: int
-    prompt: np.ndarray                  # [T] int32 (or [K, T])
-    sampling: SamplingParams = field(default_factory=SamplingParams)
-    # filled by the engine
-    state: RequestState = RequestState.WAITING
-    generated: List[Any] = field(default_factory=list)
-    finish_reason: Optional[str] = None  # "length"|"eos"|"stop"|"abort"
-    seed: int = 0                       # effective per-request PRNG seed
-    slot: int = -1
-    prompt_len: int = 0
-    prefill_pos: int = 0                # prompt tokens already in the arena
-    n_preempted: int = 0                # pool-exhaustion evictions survived
-    cached_tokens: int = 0              # tokens served from the prefix cache
-    t_submit: float = 0.0
-    t_first_token: float = 0.0
-    t_done: float = 0.0
-
-    @property
-    def max_new_tokens(self) -> int:
-        return self.sampling.max_new_tokens
-
-    @property
-    def eos_id(self) -> Optional[int]:
-        return self.sampling.eos_id
-
-    @property
-    def ttft(self) -> float:
-        """Time to first token; NaN for a request that never emitted one
-        (max_new_tokens=0, aborted pre-first-token) — the old sentinel
-        arithmetic returned a large negative number instead."""
-        if self.t_first_token <= 0.0:
-            return float("nan")
-        return self.t_first_token - self.t_submit
-
-    @property
-    def tpot(self) -> float:
-        """Time per output token after the first; NaN when undefined
-        (no token ever emitted, or not yet finished)."""
-        if self.t_first_token <= 0.0 or self.t_done <= 0.0:
-            return float("nan")
-        n = max(len(self.generated) - 1, 1)
-        return (self.t_done - self.t_first_token) / n
-
-
-@dataclass(frozen=True)
-class RequestOutput:
-    """One incremental slice of a request's token stream.
-
-    ``step()`` returns one per request that advanced this tick (new
-    tokens appended and/or the request finished); ``stream()`` yields
-    them as they are produced.  ``new_token_ids`` holds only THIS
-    step's tokens (ints, or per-codebook lists for multi-codebook
-    heads); ``n_generated`` is the cumulative count.  ``finish_reason``
-    is set on the final output: "length" (max_new_tokens or arena/pool
-    length bound), "eos", "stop" (a ``SamplingParams.stop`` token), or
-    "abort"."""
-    req_id: int
-    new_token_ids: List[Any]
-    n_generated: int
-    finished: bool
-    finish_reason: Optional[str] = None
+# back-compat: these names were defined here before serving/types.py split
+# them out, and external code imports them from this module
+__all__ = [
+    "Request", "RequestOutput", "RequestState", "ServeConfig",
+    "ServingEngine", "TickRecord",
+]
 
 
 @dataclass
-class TickRecord:
-    """One engine tick as executed (mirrors the TickPlan it consumed)."""
-    index: int
-    prefill_reqs: List[int]
-    prefill_tokens: int
-    decode_reqs: List[int]
-    prefill_group: str
-    decode_group: str
-    wall_s: float
-    preemptions: int = 0                # pool evictions this tick (paged)
-    kv_resident_bytes: int = 0          # allocated KV bytes after the tick
-    spec_drafted: int = 0               # draft tokens verified this tick
-    spec_accepted: int = 0              # draft tokens accepted this tick
-    new_compiles: int = 0               # phase-program shapes first seen here
-
-    @property
-    def mixed(self) -> bool:
-        """Both phases ran this tick (prefill/decode interleaving)."""
-        return bool(self.prefill_reqs) and bool(self.decode_reqs)
-
-
-@dataclass(frozen=True)
-class ServeConfig:
-    max_batch: int = 8
-    max_len: int = 512                  # dense arena length (unused if paged)
-    phase: PhaseAwareConfig = field(default_factory=PhaseAwareConfig)
-    # DEPRECATED engine-wide sampling fields: sampling is per-request now
-    # (``submit(..., sampling=SamplingParams(...))``).  These survive as
-    # the default SamplingParams for submits that pass none — setting any
-    # of them off-default warns at engine construction.
-    greedy: bool = True
-    temperature: float = 1.0
-    top_k: int = 0
-    top_p: float = 0.0                  # nucleus sampling (0 = off)
-    seed: int = 0                       # base seed for derived request seeds
-    # speculative decoding (serving/speculative.py, requires paged): a
-    # drafter proposes up to k tokens per decode tick and one verify
-    # window of the target model accepts/rejects them all at once
-    speculative: Optional[SpecConfig] = None
-    # paged KV arena (serving/kv_pool.py): capacity = n_pages * page_size
-    # tokens PER POOL, not per slot — prompts/generations are bounded by
-    # pool capacity rather than max_len
-    paged: bool = False
-    page_size: int = 16
-    n_pages: int = 64
-    # KV page dtype (paged only): "int8" stores GQA K/V pages and MLA
-    # latent pages quantized per token; "int4" packs GQA K/V two nibbles
-    # per byte (MLA latents stay int8 — see serving/kv_pool.py)
-    kv_dtype: str = "f32"
-    # weight dtype: "int8" runs quantize_params at engine build and serves
-    # from {"q","scale"} leaves — decode-shaped matmuls then route through
-    # the fused quantized Pallas GEMV (models/layers.matmul)
-    weights_dtype: str = "f32"
-    # radix prefix cache over the page pool (requires paged): shared-prompt
-    # KV pages are reused copy-on-write instead of recomputed
-    prefix_cache: bool = False
-    # packed prefill: the tick's chunks run as ONE flat token stream with
-    # per-segment metadata (models/transformer.forward_chunk_packed)
-    # instead of a padded [N, C] batch — pad work drops from
-    # N*C - sum(take) to the pack-alignment remainder, and the compiled
-    # shape is keyed by ONE bucketed length instead of an (N, C) grid.
-    # Applies to chunked attention-only single-codebook plans; everything
-    # else falls back to the padded path.  Greedy streams are
-    # bit-identical either way.
-    packed_prefill: bool = True
-
-    _LEGACY_SAMPLING_DEFAULTS = (True, 1.0, 0, 0.0)
-
-    def legacy_sampling_overridden(self) -> bool:
-        return ((self.greedy, self.temperature, self.top_k, self.top_p)
-                != self._LEGACY_SAMPLING_DEFAULTS)
-
-    def default_sampling(self) -> SamplingParams:
-        """The deprecated engine-wide sampling fields as a per-request
-        default.  ``greedy=True`` maps to temperature 0 (the new API's
-        greedy); the legacy ``max(temperature, 1e-6)`` floor applies only
-        inside this shim — ``SamplingParams(temperature=0)`` itself IS
-        greedy, with no epsilon rewriting."""
-        return SamplingParams(
-            temperature=0.0 if self.greedy else max(self.temperature, 1e-6),
-            top_k=self.top_k, top_p=self.top_p)
+class _SwapHandle:
+    """Where a swapped-out request's KV lives while it waits in the queue
+    (``Request.swap``): per-run host-tier page lists in block-table row
+    order, plus the slot state a swap-in must restore verbatim."""
+    length: int                       # logical tokens the pages back
+    pages: List[List[int]]            # per run: host page ids, row order
+    prefill_pos: int
+    cached_tokens: int
+    pos: int                          # slot_pos at swap-out (-1 mid-prefill)
+    state: RequestState               # PREFILLING or DECODING
 
 
 class ServingEngine:
@@ -344,10 +230,24 @@ class ServingEngine:
                                  "through the block tables)")
             self.pool = None
             self.cache = init_cache(cfg, B, S)
+        # host-memory spill tier (tiered KV): preemption swaps pages out
+        # instead of recomputing, prefix-cache evictions demote to host
+        if sc.host_spill_pages < 0:
+            raise ValueError(f"host_spill_pages={sc.host_spill_pages} < 0")
+        if sc.host_spill_pages and not sc.paged:
+            raise ValueError("host_spill_pages > 0 requires paged=True "
+                             "(the spill tier stores device pool pages)")
+        self.host_tier: Optional[HostTier] = (
+            HostTier(self.pool, sc.host_spill_pages)
+            if sc.paged and sc.host_spill_pages > 0 else None)
         self.prefix: Optional[PrefixCache] = None
         if sc.paged and sc.prefix_cache:
-            self.prefix = PrefixCache(sc.page_size,
-                                      self.pool.shareable_capacity())
+            tiered = self.host_tier is not None
+            self.prefix = PrefixCache(
+                sc.page_size, self.pool.shareable_capacity(),
+                demote=self._demote_pages if tiered else None,
+                promote=self._promote_pages if tiered else None,
+                discard=self._discard_host_pages if tiered else None)
         self.spec = sc.speculative
         self.drafter = None
         if self.spec is not None:
@@ -383,6 +283,10 @@ class ServingEngine:
         self.preemptions = 0             # lifetime pool evictions (paged)
         self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
         self._tick_preemptions = 0
+        # tiered-KV counters: how preemptions resumed (swap vs recompute)
+        self.swap_outs = 0               # victims whose pages went to host
+        self.swap_resumes = 0            # swapped requests resumed from host
+        self.recompute_preemptions = 0   # fell back to recompute-on-resume
         self.prefill_tokens_executed = 0  # chunk tokens actually computed
         self.cow_copies = 0              # device page copies (COW)
         self.cache_evicted_pages = 0     # pages reclaimed from the cache
@@ -395,9 +299,23 @@ class ServingEngine:
         self._tick_spec_drafted = 0
         self._tick_spec_accepted = 0
         # the dense arena pins its full footprint up front; computed here
-        # because the cache arrays are donated (buffers move every call)
-        self._dense_kv_bytes = (0 if sc.paged else sum(
-            leaf.nbytes for c in self.cache for leaf in c.values()))
+        # because the cache arrays are donated (buffers move every call).
+        # The per-token/per-slot split prices the dense prefill->decode
+        # handoff for the disaggregated executor: seq-axis leaves
+        # ([L, B, S, ...]) move length x token-bytes, recurrent-state
+        # leaves move their whole per-slot footprint once
+        self._dense_kv_bytes = 0
+        self._dense_token_bytes = 0
+        self._dense_state_bytes = 0
+        if not sc.paged:
+            for c in self.cache:
+                for leaf in c.values():
+                    self._dense_kv_bytes += leaf.nbytes
+                    if (leaf.ndim >= 3 and leaf.shape[1] == B
+                            and leaf.shape[2] == S):
+                        self._dense_token_bytes += leaf.nbytes // (B * S)
+                    else:
+                        self._dense_state_bytes += leaf.nbytes // B
         self._next_id = 0
         self.chunked = (supports_chunked_prefill(cfg)
                         and sc.phase.prefill_chunk > 0)
@@ -405,69 +323,44 @@ class ServingEngine:
         # writes at (slot, offset)) and a flat single-codebook stream
         self._packed = (sc.packed_prefill and self.chunked
                         and cfg.n_codebooks <= 1)
-        # compile accounting: every phase call notes its (group, kind,
-        # bucketed shape, all_greedy) key; a first sighting counts as a
-        # compile.  Buckets make this an upper bound that converges — the
-        # second pass of any traffic mix adds zero
-        self._compile_keys: set = set()
-        self.compile_count = 0           # distinct phase-program shapes
-        self._tick_new_compiles = 0
         self.prefill_launches = 0        # prefill phase-program calls
         self.prefill_rows_executed = 0   # token rows computed (incl. pad)
-        # (group, kind) -> jitted program; built lazily so each strategy
-        # only compiles the programs its groups actually execute
-        self._programs: Dict[Tuple[str, str], Callable] = {}
+        # the EXECUTOR owns the jitted program table, compile accounting
+        # and device placement (serving/executor.py); the engine stays
+        # host-only and reaches it through _program/_note_compile below
+        self.executor = make_executor(sc.executor, {
+            "chunk": self._prefill_chunk_impl,
+            "whole": self._prefill_whole_impl,
+            "decode": self._decode_impl,
+            "chunk_paged": self._prefill_chunk_paged_impl,
+            "decode_paged": self._decode_paged_impl,
+            "packed": self._prefill_packed_impl,
+            "packed_paged": self._prefill_packed_paged_impl,
+            "verify": self._verify_impl,
+        }, mesh=mesh)
         # run -> jitted COW page copy (donated in-place, one per run shape)
         self._copy_programs: Dict[int, Callable] = {}
+        # run -> jitted host-page upload (donated; swap-in / promote path)
+        self._upload_programs: Dict[int, Callable] = {}
 
-    # -- program table ---------------------------------------------------------
+    # -- program table (owned by the executor) ---------------------------------
+    @property
+    def _programs(self) -> Dict[Tuple[str, str], Callable]:
+        return self.executor.programs
+
+    @property
+    def compile_count(self) -> int:
+        return self.executor.compile_count
+
     def _program(self, group: str, kind: str) -> Callable:
-        """Jitted program for (worker group, phase kind).
-
-        Each (group, kind) pair is a SEPARATE jit instance — the software
-        analogue of phase disaggregation: on a cluster these are distinct
-        executables resident on different worker pools, and the strategy
-        table routes each phase to one of them.  ``kind``: "chunk"
-        (packed chunked prefill), "whole" (whole-prompt prefill + arena
-        splice, for SSM/hybrid plans), "decode" (one-token batched step).
-        """
-        key = (group, kind)
-        if key not in self._programs:
-            # the arena argument is donated: the engine rebinds self.cache
-            # to the program's output every call, so XLA updates the KV
-            # arena (dense or page pool) in place instead of copying it.
-            # ``all_greedy`` (the trailing argument of every impl) is
-            # STATIC: an all-greedy tick compiles to plain argmax with no
-            # sort/PRNG work, a mixed tick compiles the per-row path — at
-            # most two specializations per program.
-            impl, cache_arg, static_arg = {
-                "chunk": (self._prefill_chunk_impl, 5, 11),
-                "whole": (self._prefill_whole_impl, 3, 9),
-                "decode": (self._decode_impl, 2, 10),
-                "chunk_paged": (self._prefill_chunk_paged_impl, 5, 12),
-                "decode_paged": (self._decode_paged_impl, 2, 10),
-                "packed": (self._prefill_packed_impl, 6, 12),
-                "packed_paged": (self._prefill_packed_paged_impl, 6, 13),
-                "verify": (self._verify_impl, 5, 13)}[kind]
-            self._programs[key] = jax.jit(impl, donate_argnums=(cache_arg,),
-                                          static_argnums=(static_arg,))
-        return self._programs[key]
+        """Jitted program for (worker group, phase kind) — built and cached
+        by the executor layer.  Kept as an engine method so subclasses
+        (tests' host-only engines) can stub program dispatch in one place."""
+        return self.executor.program(group, kind)
 
     def _note_compile(self, group: str, kind: str, shape: Tuple[int, ...],
                       all_greedy: bool) -> None:
-        """Record one phase-program call's compilation key.
-
-        jit retraces on every new input-shape signature; with the pow2
-        buckets each phase has a small closed key set, so after warmup
-        every key is a cache hit.  The counter is what serving_bench and
-        the tier-2 smoke assert on: a second pass of the same traffic mix
-        must add ZERO new compiles — the recompile-stall guarantee the
-        bucket ladder exists to provide."""
-        key = (group, kind, shape, bool(all_greedy))
-        if key not in self._compile_keys:
-            self._compile_keys.add(key)
-            self.compile_count += 1
-            self._tick_new_compiles += 1
+        self.executor.note_compile(group, kind, shape, all_greedy)
 
     # -- jitted bodies ---------------------------------------------------------
     def _sample(self, logits, temps, top_ks, top_ps, seeds, counters,
@@ -652,6 +545,10 @@ class ServingEngine:
         for i, r in enumerate(self.queue):
             if r.req_id == req_id:
                 req = self.queue.pop(i)
+                if req.swap is not None:    # swapped-out KV dies with it
+                    for r_idx, host_pages in enumerate(req.swap.pages):
+                        self.host_tier.release(r_idx, host_pages)
+                    req.swap = None
                 break
         if req is None:
             for r in self.slot_req:
@@ -723,7 +620,20 @@ class ServingEngine:
         admitted = []
         free = self._free_slots()
         while free and self.queue:
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            if req.swap is not None:
+                # swap-resume: the head's KV lives in the host tier; it
+                # re-enters only when its device pages fit again.  On
+                # failure the head WAITS (FIFO order preserved) — this is
+                # deadlock-free because submit() guarantees a lone request
+                # fits the pool and cached pages are always reclaimable
+                if not self._try_swap_in(req, free[0]):
+                    break
+                self.queue.pop(0)
+                free.pop(0)
+                admitted.append(req)
+                continue
+            self.queue.pop(0)
             slot = free.pop(0)
             req.slot = slot
             req.state = RequestState.PREFILLING
@@ -829,17 +739,23 @@ class ServingEngine:
 
     def _preempt(self, req: Request) -> None:
         """Evict ``req`` from its slot: pages back to the pool, request
-        back to WAITING (age-ordered) for recompute-on-resume."""
+        back to WAITING (age-ordered).  With a host tier the victim's KV
+        swaps out (exact page copies, resumed with ZERO recomputation);
+        without one — or when the tier is full — it falls back to
+        recompute-on-resume."""
         assert self.paged and req.slot >= 0
         if self.drafter is not None:
             self.drafter.release(req.slot)
+        if not self._swap_out(req):
+            # recompute-on-resume: the re-prefill rebuilds the evicted KV
+            req.prefill_pos = 0
+            req.cached_tokens = 0       # re-matched at re-admission
+            self.recompute_preemptions += 1
         self.pool.release(req.slot)
         self.slot_req[req.slot] = None
         self.slot_pos[req.slot] = -1
         req.slot = -1
         req.state = RequestState.WAITING
-        req.prefill_pos = 0
-        req.cached_tokens = 0           # re-matched at re-admission
         req.n_preempted += 1
         self.preemptions += 1
         self._tick_preemptions += 1
@@ -886,6 +802,142 @@ class ServingEngine:
         if victim is not oldest:
             self._preempt(victim)
 
+    # -- tiered KV (host spill) --------------------------------------------------
+    def _read_page(self, r: int, page: int) -> Dict[str, np.ndarray]:
+        """Pull one device page across every layer to host numpy — pool
+        leaves are [L, n_pages, P, ...], so each leaf yields [L, P, ...]."""
+        return {k: np.asarray(leaf[:, page])
+                for k, leaf in self.cache[r].items()}
+
+    def _write_page(self, r: int, page: int,
+                    data: Dict[str, np.ndarray]) -> None:
+        """Upload one host-tier page into device page ``page``: a donated
+        in-place program per run (mirrors ``_copy_pages``), so the arena
+        is patched without a full-pool copy."""
+        if r not in self._upload_programs:
+            self._upload_programs[r] = jax.jit(
+                lambda c, dst, vals: jax.tree.map(
+                    lambda x, v: x.at[:, dst].set(v), c, vals),
+                donate_argnums=(0,))
+        self.cache[r] = self._upload_programs[r](
+            self.cache[r], jnp.int32(page),
+            {k: jnp.asarray(v) for k, v in data.items()})
+
+    def _swap_out(self, req: Request) -> bool:
+        """Copy a preemption victim's device pages into the host tier and
+        hang a ``_SwapHandle`` off the request.  All-or-nothing: False (no
+        state change) when the tier is absent, the slot holds nothing, or
+        host pages run short — the caller then falls back to
+        recompute-on-resume."""
+        if self.host_tier is None:
+            return False
+        length = self.pool.len_of(req.slot)
+        if length <= 0:
+            return False
+        pools = self.pool.pools
+        need = [p.pages_of(length) for p in pools]
+        if any(self.host_tier.free_pages(r) < n for r, n in enumerate(need)):
+            return False
+        pages: List[List[int]] = []
+        for r, p in enumerate(pools):
+            host = self.host_tier.alloc(r, need[r])
+            assert host is not None     # free_pages checked per run above
+            for i, hp in enumerate(host):
+                self.host_tier.store(
+                    r, hp, self._read_page(r, int(p.table[req.slot, i])))
+            pages.append(host)
+        req.swap = _SwapHandle(
+            length=length, pages=pages, prefill_pos=req.prefill_pos,
+            cached_tokens=req.cached_tokens,
+            pos=int(self.slot_pos[req.slot]), state=req.state)
+        self.swap_outs += 1
+        return True
+
+    def _try_swap_in(self, req: Request, slot: int) -> bool:
+        """Restore a swapped-out request into ``slot``: regrow its device
+        pages (reclaiming cached pages on a shortfall), upload the host
+        copies row for row, and resume EXACTLY where it left off — the
+        swap path re-prefills zero tokens.  False leaves the request at
+        the queue head with its handle intact."""
+        h = req.swap
+        if not self.pool.grow(slot, h.length):
+            deficit = max(p.pages_of(h.length) - p.free_pages()
+                          for p in self.pool.pools)
+            self._reclaim_cache(deficit)
+            if not self.pool.grow(slot, h.length):
+                return False
+        req.slot = slot
+        self.slot_req[slot] = req
+        for r, p in enumerate(self.pool.pools):
+            for i, hp in enumerate(h.pages[r]):
+                self._write_page(r, int(p.table[slot, i]),
+                                 self.host_tier.load(r, hp))
+            self.host_tier.release(r, h.pages[r])
+        req.prefill_pos = h.prefill_pos
+        req.cached_tokens = h.cached_tokens
+        req.state = h.state
+        self.slot_pos[slot] = h.pos     # -1 for a mid-prefill swap
+        req.swap = None
+        self.swap_resumes += 1
+        return True
+
+    def _demote_pages(self, dev_pages: List[int]) -> Optional[List[int]]:
+        """PrefixCache demote callback: copy one cached block (one device
+        page PER RUN) into the host tier.  All-or-nothing; None makes the
+        cache hard-drop the block instead."""
+        host: List[int] = []
+        for r, q in enumerate(dev_pages):
+            got = self.host_tier.alloc(r, 1)
+            if got is None:
+                for rr, hp in enumerate(host):
+                    self.host_tier.release(rr, [hp])
+                return None
+            host.append(got[0])
+            self.host_tier.store(r, got[0], self._read_page(r, int(q)))
+        return host
+
+    def _promote_pages(self, host_pages: List[int]) -> Optional[List[int]]:
+        """PrefixCache promote callback: re-materialise a demoted block on
+        device — fresh externally-owned pages (``alloc_external``: ref=1,
+        external=1, conservation holds from birth) — and free the host
+        copies.  None when any run's free list is empty (partial hit)."""
+        if any(not p.free for p in self.pool.pools):
+            return None
+        dev: List[int] = []
+        for r, hp in enumerate(host_pages):
+            q = self.pool.pools[r].alloc_external()
+            assert q is not None        # free list checked above
+            self._write_page(r, q, self.host_tier.load(r, hp))
+            self.host_tier.release(r, [hp])
+            dev.append(q)
+        return dev
+
+    def _discard_host_pages(self, host_pages: List[int]) -> None:
+        """PrefixCache discard callback: a demoted block died (evicted
+        subtree / re-published over) — drop its host copies."""
+        for r, hp in enumerate(host_pages):
+            self.host_tier.release(r, [hp])
+
+    # -- prefill -> decode handoff (the 2.5D-link analogue) ----------------------
+    def _record_handoff(self, req: Request) -> None:
+        """Price the KV a prefill->decode handoff moves across HALO's
+        2.5D interposer link (CiM prefill stack -> CiD decode stack).
+        Only NEWLY-built state moves — prefix-cache hits are already
+        decode-side resident.  Colocated executors have no link: no-op."""
+        if not self.executor.migrates_kv:
+            return
+        eff = self._effective_len(req)
+        if self.paged:
+            pages = nbytes = 0
+            for r, p in enumerate(self.pool.pools):
+                n = max(p.pages_of(eff) - p.pages_of(req.cached_tokens), 0)
+                pages += n
+                nbytes += n * self.pool.page_bytes(r)
+        else:
+            pages = 0
+            nbytes = eff * self._dense_token_bytes + self._dense_state_bytes
+        self.executor.record_handoff(pages, nbytes)
+
     def _append_token(self, req: Request, tok_row) -> None:
         flat = np.asarray(tok_row).reshape(-1)
         if self.cfg.n_codebooks > 1:
@@ -896,6 +948,7 @@ class ServingEngine:
     def _start_decoding(self, req: Request, tok_row) -> None:
         self._publish_prefix(req)       # prompt pages complete & unwrapped
         self.slot_pos[req.slot] = self._effective_len(req)
+        self._record_handoff(req)       # KV crosses the phase boundary here
         if req.sampling.max_new_tokens == 0 and not req.generated:
             # prefill-only request: the seeding sample is discarded, no
             # token ever emits (ttft/tpot stay NaN), reason is "length"
@@ -1339,8 +1392,10 @@ class ServingEngine:
         self._tick_preemptions = 0
         self._tick_spec_drafted = 0
         self._tick_spec_accepted = 0
-        self._tick_new_compiles = 0
+        self.executor.begin_tick()
         self._prefill_progress = False
+        swap0 = ((self.host_tier.swap_out_bytes, self.host_tier.swap_in_bytes)
+                 if self.host_tier is not None else (0, 0))
         # snapshot for incremental outputs: every request that can gain
         # tokens this tick is in the queue or a slot right now
         counts0 = {r.req_id: len(r.generated) for r in self.queue}
@@ -1396,7 +1451,15 @@ class ServingEngine:
             kv_resident_bytes=resident,
             spec_drafted=self._tick_spec_drafted,
             spec_accepted=self._tick_spec_accepted,
-            new_compiles=self._tick_new_compiles)
+            new_compiles=self.executor.tick_new_compiles,
+            migrated_pages=self.executor.tick_migrated_pages,
+            migrated_bytes=self.executor.tick_migrated_bytes,
+            swap_out_bytes=(self.host_tier.swap_out_bytes - swap0[0]
+                            if self.host_tier is not None else 0),
+            swap_in_bytes=(self.host_tier.swap_in_bytes - swap0[1]
+                           if self.host_tier is not None else 0),
+            host_resident_pages=(self.host_tier.used_pages()
+                                 if self.host_tier is not None else 0))
         self.tick_log.append(rec)
         self._n_ticks += 1
         self._n_prefill_ticks += bool(rec.prefill_reqs)
@@ -1425,16 +1488,40 @@ class ServingEngine:
         return outputs
 
     def counts(self) -> Dict[str, int]:
-        """Queue/slot/done occupancy (the old ``step()`` return value)."""
+        """Queue/slot/done occupancy (the old ``step()`` return value),
+        plus the lifetime migration / tiered-KV counters."""
         return {"queued": len(self.queue),
                 "active": sum(r is not None for r in self.slot_req),
-                "done": len(self.done)}
+                "done": len(self.done),
+                "migrated_pages": self.executor.migrated_pages,
+                "migrated_bytes": self.executor.migrated_bytes,
+                "swap_out_bytes": (self.host_tier.swap_out_bytes
+                                   if self.host_tier is not None else 0),
+                "swap_in_bytes": (self.host_tier.swap_in_bytes
+                                  if self.host_tier is not None else 0),
+                "swap_resumes": self.swap_resumes,
+                "recompute_preemptions": self.recompute_preemptions,
+                "host_resident_pages": (self.host_tier.used_pages()
+                                        if self.host_tier is not None else 0)}
+
+    def _check_drained(self, ticks: int, max_ticks: int) -> None:
+        """Fail LOUDLY when the tick budget runs out with live requests —
+        a silent partial drain poisons every downstream comparison."""
+        if ticks >= max_ticks and (
+                self.queue or any(r is not None for r in self.slot_req)):
+            c = self.counts()
+            raise RuntimeError(
+                f"max_ticks={max_ticks} exhausted with live requests "
+                f"({c['queued']} queued, {c['active']} active, "
+                f"{c['done']} done) — the engine did not drain; raise "
+                "max_ticks or check for a scheduling stall")
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0
         while (self.queue or any(self.slot_req)) and ticks < max_ticks:
             self.step()
             ticks += 1
+        self._check_drained(ticks, max_ticks)
         return self.done
 
     def stream(self, max_ticks: int = 10_000) -> Iterator[RequestOutput]:
@@ -1448,6 +1535,7 @@ class ServingEngine:
                 and ticks < max_ticks:
             yield from self.step()
             ticks += 1
+        self._check_drained(ticks, max_ticks)
 
     def generate(self, prompts: Sequence[np.ndarray],
                  sampling: Union[SamplingParams, Sequence[SamplingParams],

@@ -137,6 +137,19 @@ class PagePool:
         if self.ref[page] == 0:
             self.free.append(int(page))
 
+    def alloc_external(self) -> Optional[int]:
+        """Allocate one free page owned by an EXTERNAL holder from birth
+        (the prefix cache's host-tier PROMOTE path: a demoted block's KV
+        is uploaded into a page no block table references yet).  The page
+        starts at ref=1 external=1 — conservation (``ref == table_refs +
+        external``) holds immediately — and frees through the usual
+        ``release_ref``.  Returns None when the free list is empty."""
+        if not self.free:
+            return None
+        p = self._alloc()
+        self.external[p] += 1
+        return p
+
     def grow(self, slot: int, new_len: int) -> bool:
         """Allocate the pages taking ``slot`` to ``new_len`` logical tokens.
         All-or-nothing: returns False (state unchanged) if the pool cannot
@@ -568,4 +581,106 @@ class KVPool:
             "utilization": self.utilization(),
             "resident_bytes": self.resident_bytes(),
             "total_bytes": self.total_bytes(),
+        }
+
+
+class HostTier:
+    """Host-memory spill pool behind the device page pool — the second
+    level of the KV hierarchy (HALO reading: capacity memory behind the
+    CiD banks, in the spirit of the High-Bandwidth-Flash argument).
+
+    Holds ``n_pages`` host pages PER RUN, each mirroring the run's device
+    page layout (every leaf — k/v, scales, MLA latents — at the same
+    dtype, page axis dropped), plain numpy.  Two users:
+
+    * **preemption swap**: the engine copies a victim's device pages here
+      (``ServingEngine._swap_out``) and uploads them back at re-admission
+      — resume costs two page copies instead of re-prefilling the whole
+      prompt + generation (recompute stays the fallback when this tier is
+      full or disabled);
+    * **prefix demote/promote**: evicted prefix-cache blocks park their
+      page contents here instead of dying, and re-promote to a fresh
+      device page on the next hit (``PrefixCache`` callbacks).
+
+    Pure host-side storage + free-list accounting; the DEVICE side of
+    every copy lives in the engine (``_read_page``/``_write_page``), so
+    tests can property-check this class without jax arrays.
+    """
+
+    def __init__(self, pool: KVPool, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"HostTier needs n_pages >= 1, got {n_pages}")
+        self.n_pages = n_pages
+        self.n_runs = len(pool.caches)
+        self._page_bytes = [pool.page_bytes(r) for r in range(self.n_runs)]
+        # per-run page stores: leaf [L, n_dev_pages, P, ...] -> host
+        # [L, n_host_pages, P, ...] (page axis 1, same as the device side)
+        self._store: List[Dict[str, np.ndarray]] = [
+            {k: np.zeros((leaf.shape[0], n_pages) + tuple(leaf.shape[2:]),
+                         leaf.dtype)
+             for k, leaf in cache.items()}
+            for cache in pool.caches]
+        self.free: List[List[int]] = [
+            list(range(n_pages - 1, -1, -1)) for _ in range(self.n_runs)]
+        # byte counters (device->host is "swap out", host->device "swap in")
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+
+    # -- queries ---------------------------------------------------------------
+    def free_pages(self, run: Optional[int] = None) -> int:
+        """Free host pages of one run, or the binding min across runs."""
+        if run is not None:
+            return len(self.free[run])
+        return min(len(f) for f in self.free)
+
+    def used_pages(self) -> int:
+        """Host pages in use, summed across runs (the residency metric)."""
+        return sum(self.n_pages - len(f) for f in self.free)
+
+    def resident_bytes(self) -> int:
+        return sum((self.n_pages - len(f)) * b
+                   for f, b in zip(self.free, self._page_bytes))
+
+    # -- allocation ------------------------------------------------------------
+    def alloc(self, run: int, n: int) -> Optional[List[int]]:
+        """Claim ``n`` host pages of ``run`` — all-or-nothing."""
+        if n > len(self.free[run]):
+            return None
+        return [self.free[run].pop() for _ in range(n)]
+
+    def release(self, run: int, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages and p not in self.free[run], \
+                f"HostTier.release: page {p} of run {run} is not in use"
+            self.free[run].append(int(p))
+
+    # -- page contents ---------------------------------------------------------
+    def store(self, run: int, page: int, data: Dict[str, np.ndarray]) -> None:
+        """Copy one device page's host-fetched contents ({leaf: [L, P,
+        ...]}) into host page ``page`` of ``run``."""
+        for k, v in data.items():
+            self._store[run][k][:, page] = v
+        self.swap_out_bytes += self._page_bytes[run]
+
+    def load(self, run: int, page: int) -> Dict[str, np.ndarray]:
+        """Contents of host page ``page`` of ``run``, ready for a device
+        upload (views — the caller uploads before the page is reused)."""
+        self.swap_in_bytes += self._page_bytes[run]
+        return {k: v[:, page] for k, v in self._store[run].items()}
+
+    # -- invariants -------------------------------------------------------------
+    def check_invariants(self) -> None:
+        for r, f in enumerate(self.free):
+            assert len(set(f)) == len(f), f"run {r}: free-list duplicates"
+            assert all(0 <= p < self.n_pages for p in f), \
+                f"run {r}: free list out of range"
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "n_pages": self.n_pages,
+            "free_pages": self.free_pages(),
+            "used_pages": self.used_pages(),
+            "resident_bytes": self.resident_bytes(),
+            "swap_out_bytes": self.swap_out_bytes,
+            "swap_in_bytes": self.swap_in_bytes,
         }

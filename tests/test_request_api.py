@@ -200,7 +200,12 @@ def test_step_returns_incremental_outputs():
     for r in rs:
         assert streams[r.req_id] == r.generated
         assert finals[r.req_id] == "length" == r.finish_reason
-    assert eng.counts() == {"queued": 0, "active": 0, "done": 3}
+    c = eng.counts()
+    assert (c["queued"], c["active"], c["done"]) == (0, 0, 3)
+    # a colocated engine with no host tier moves and spills nothing
+    assert all(c[k] == 0 for k in (
+        "migrated_pages", "migrated_bytes", "swap_out_bytes",
+        "swap_in_bytes", "swap_resumes", "host_resident_pages"))
 
 
 def test_stream_yields_before_drain_and_generate_orders():
