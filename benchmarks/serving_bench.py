@@ -62,14 +62,17 @@ from typing import List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.serving.metrics import quantile
+
 Row = Tuple[str, float, str, str]
 
 
 def _p50(xs) -> float:
-    """NaN-guarded median: requests that never emitted a token carry NaN
-    ttft/tpot (see Request.ttft) and are excluded; all-NaN -> NaN."""
-    xs = [x for x in xs if not np.isnan(x)]
-    return float(np.median(xs)) if xs else float("nan")
+    """NaN-guarded median over the shared quantile helper
+    (repro.serving.metrics.quantile): requests that never emitted a token
+    carry NaN ttft/tpot (see Request.ttft) and are excluded; all-NaN ->
+    NaN."""
+    return quantile(xs, 0.5)
 
 
 def _cfg_params():
@@ -191,7 +194,7 @@ def bench_decode_tick() -> List[Row]:
     steady = decode_ticks[1:] or decode_ticks
     return [
         ("serve.decode_tick_p50_ms",
-         float(np.median(steady)) * 1e3, "ms", ""),
+         quantile(steady, 0.5) * 1e3, "ms", ""),
         ("serve.host_transfers_per_tick",
          eng.host_transfers / max(eng.n_ticks, 1), "x", "1.0"),
     ]

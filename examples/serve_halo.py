@@ -35,7 +35,8 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
                max_prefill_tokens=8192, paged=False, page_size=16,
                n_pages=64, prefix_cache=False, speculative=None,
                kv_dtype="f32", weights_dtype="f32",
-               executor="colocated", host_spill_pages=0):
+               executor="colocated", host_spill_pages=0,
+               tracer=None, slo=None):
     engine = ServingEngine(cfg, params, ServeConfig(
         max_batch=max_batch, max_len=max_len,
         phase=PhaseAwareConfig(strategy=strategy,
@@ -45,10 +46,11 @@ def run_stream(cfg, params, prompts, *, strategy="halo", max_new=12,
         paged=paged, page_size=page_size, n_pages=n_pages,
         prefix_cache=prefix_cache, speculative=speculative,
         kv_dtype=kv_dtype, weights_dtype=weights_dtype,
-        executor=executor, host_spill_pages=host_spill_pages))
+        executor=executor, host_spill_pages=host_spill_pages),
+        tracer=tracer)
     t0 = time.monotonic()
     for p in prompts:
-        engine.submit(p.copy(), max_new_tokens=max_new)
+        engine.submit(p.copy(), max_new_tokens=max_new, slo=slo)
     done = sorted(engine.run_until_drained(), key=lambda r: r.req_id)
     wall = time.monotonic() - t0
     return engine, done, wall
@@ -60,6 +62,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also write the observability section's Chrome "
+                         "trace-event JSON here (open in Perfetto)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
@@ -292,6 +297,62 @@ def main():
     print(f"streamed {streamed} incremental RequestOutputs over "
           f"{eng.n_ticks} ticks; aborted request freed its slot "
           f"mid-flight (finish reason above)")
+
+    # observability (docs/serving.md §Observability): rerun the hardest
+    # stream above — disaggregated executor, tight pool, host spill tier —
+    # with the lifecycle tracer ON and per-request SLOs attached.  Tracing
+    # is identity-preserving (same tokens as the untraced run), and the
+    # trace must RECONCILE with the engine's own accounting: summing the
+    # per-tick span args reproduces the lifetime counters exactly
+    from repro.serving import SLO, Tracer
+    tracer = Tracer()
+    eng, done, _ = run_stream(cfg, params, d_stream, max_new=args.max_new,
+                              prefill_chunk=16, max_prefill_tokens=32,
+                              paged=True, page_size=8, n_pages=26,
+                              executor="disaggregated", host_spill_pages=64,
+                              tracer=tracer,
+                              slo=SLO(ttft_ms=60_000.0, tpot_ms=60_000.0))
+    assert [r.generated for r in done] == d_base, \
+        "tracing changed the token streams"
+    evs = tracer.events()
+    ticks = [e for e in evs if e.get("cat") == "tick"]
+    spans = [e for e in evs if e.get("cat") == "phase"]
+
+    def tick_sum(key):
+        return sum(e["args"][key] for e in ticks)
+
+    recon = [
+        ("tick spans", len(ticks), eng.n_ticks),
+        ("prefill tokens", sum(s["args"]["take"] for s in spans
+                               if s["name"] == "prefill_chunk"),
+         int(eng.prefill_tokens_executed)),
+        ("decode tokens", sum(s["args"].get("tokens", 0) for s in spans
+                              if s["name"] == "decode")
+         + sum(s["args"].get("emitted", 0) for s in spans
+               if s["name"] == "verify_window"),
+         int(eng.decode_tokens_emitted)),
+        ("preemptions", tick_sum("preemptions"), int(eng.preemptions)),
+        ("migrated bytes", tick_sum("migrated_bytes"),
+         int(eng.executor.migrated_bytes)),
+        ("swap-out bytes", tick_sum("swap_out_bytes"),
+         int(eng.counts()["swap_out_bytes"])),
+        ("request envelopes",
+         sum(1 for e in evs if e.get("ph") == "b"), len(d_stream)),
+    ]
+    print(f"\n{'trace <-> engine':18s} {'trace':>9s} {'engine':>9s}  "
+          f"reconciles?")
+    for name, got, want in recon:
+        assert got == want, f"trace/{name}: {got} != engine {want}"
+        print(f"{name:18s} {got:9d} {want:9d}  yes")
+    g = eng.goodput()
+    print(f"slo attained={g['slo_attained']:.0f}/{g['slo_total']:.0f} "
+          f"goodput={g['goodput']:.2f} "
+          f"(ttft-viol={g['ttft_violations']:.0f} "
+          f"tpot-viol={g['tpot_violations']:.0f})  "
+          f"events={len(evs)}")
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"trace written -> {args.trace_out}")
 
     print("\nNote: strategies schedule the same math onto different worker "
           "groups (separate compiled programs); outputs must match exactly. "

@@ -1,0 +1,179 @@
+"""Perf-trajectory regression gate: compare fresh BENCH_*.json bench runs
+against the committed baselines in ``benchmarks/baselines/``.
+
+The serving benches already assert CORRECTNESS invariants inline (stream
+identity, acceptance > 0, int4 KV reduction, ...).  What they could not
+catch is a silent trajectory regression — a refactor that doubles
+compiled shapes, inflates pad waste, or stops skipping cached prefill
+tokens still passes every identity assert.  This gate closes that hole:
+every bench row is diffed against its committed baseline value, with a
+tolerance policy keyed on the row's UNIT:
+
+* **structural units** (``count``, ``frac``, ``rows``, ``tok``, ``MB``,
+  ``B``, ``pages``) are deterministic on CPU CI — compiled-shape counts,
+  prefill rows, KV bytes, cache hit fractions.  They gate: relative
+  drift beyond ``--default-tolerance`` (or a per-row ``--tolerance
+  NAME=FRAC`` override) fails the check, modulo a small absolute
+  epsilon so 0-vs-0 and tiny-count jitter never trip it.
+* **timing units** (``ms``, ``s``, ``tok/s``, ``x``) are hardware noise
+  on shared runners — they are reported (so the artifact preserves the
+  trajectory) but NEVER gate.
+
+A row present in the baseline but missing from the candidate FAILS (a
+deleted metric is a silent coverage loss — update the baseline
+deliberately instead); new candidate rows are reported as informational
+(they gate once committed to the baseline).
+
+  python scripts/check_bench_regression.py \\
+      --compare benchmarks/baselines/BENCH_serving.json=BENCH_serving.json \\
+      [--default-tolerance 0.05] [--tolerance NAME=FRAC ...] \\
+      [--abs-epsilon 1e-9] [--warn-only]
+
+``--warn-only`` prints GitHub ``::warning`` annotations for failures and
+exits 0 — the introduction mode while baselines stabilise.  Drop the
+flag to make drift fail the job.  To accept an intended change, rerun
+the bench and copy the fresh JSON over the committed baseline.
+
+Host-only, stdlib-only (the CI step runs it without jax).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+# units that gate (deterministic structure) vs report-only (wall time)
+STRUCTURAL_UNITS = {"count", "frac", "rows", "tok", "MB", "B", "pages"}
+TIMING_UNITS = {"ms", "s", "tok/s", "x"}
+
+
+def load_rows(path: str) -> Dict[str, Tuple[float, str]]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc["rows"]:
+        rows[row["name"]] = (float(row["value"]), str(row["unit"]))
+    return rows
+
+
+def compare(baseline: Dict[str, Tuple[float, str]],
+            candidate: Dict[str, Tuple[float, str]],
+            *, default_tol: float, abs_eps: float,
+            overrides: Dict[str, float],
+            label: str) -> Tuple[List[str], List[str]]:
+    """(failures, notes) for one baseline=candidate pair."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for name in sorted(baseline):
+        base_v, unit = baseline[name]
+        if name not in candidate:
+            failures.append(f"{label}: row '{name}' missing from candidate "
+                            f"(baseline {base_v:.6g} {unit})")
+            continue
+        cand_v, cand_unit = candidate[name]
+        if cand_unit != unit:
+            failures.append(f"{label}: row '{name}' changed unit "
+                            f"{unit!r} -> {cand_unit!r}")
+            continue
+        both_nan = math.isnan(base_v) and math.isnan(cand_v)
+        if both_nan:
+            continue
+        nan_flip = math.isnan(base_v) != math.isnan(cand_v)
+        diff = abs(cand_v - base_v) if not nan_flip else math.inf
+        rel = diff / max(abs(base_v), abs_eps)
+        tol = overrides.get(name, default_tol)
+        drifted = nan_flip or (diff > abs_eps and rel > tol)
+        line = (f"{label}: {name} [{unit}] baseline {base_v:.6g} -> "
+                f"candidate {cand_v:.6g} "
+                f"({'nan flip' if nan_flip else f'rel {rel:.1%}'}, "
+                f"tol {tol:.1%})")
+        if unit in STRUCTURAL_UNITS:
+            if drifted:
+                failures.append(line)
+        elif drifted:
+            notes.append(f"timing drift (informational) {line}")
+    for name in sorted(set(candidate) - set(baseline)):
+        v, unit = candidate[name]
+        notes.append(f"{label}: new row '{name}' ({v:.6g} {unit}) — "
+                     f"not in baseline, gates once committed")
+    return failures, notes
+
+
+def parse_tolerances(specs: List[str]) -> Dict[str, float]:
+    out = {}
+    for spec in specs:
+        name, _, frac = spec.partition("=")
+        if not name or not frac:
+            raise SystemExit(f"--tolerance expects NAME=FRAC, got {spec!r}")
+        out[name] = float(frac)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compare", action="append", default=[],
+                    metavar="BASELINE=CANDIDATE", required=True,
+                    help="baseline json = freshly generated json "
+                         "(repeatable, one per bench leg)")
+    ap.add_argument("--default-tolerance", type=float, default=0.05,
+                    help="relative drift allowed on structural rows "
+                         "without a per-row override (default 5%%)")
+    ap.add_argument("--tolerance", action="append", default=[],
+                    metavar="NAME=FRAC",
+                    help="per-row relative tolerance override "
+                         "(repeatable)")
+    ap.add_argument("--abs-epsilon", type=float, default=1e-9,
+                    help="absolute slack under which drift never gates "
+                         "(protects 0-vs-0 rows)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report failures as GitHub ::warning lines and "
+                         "exit 0 (baseline introduction mode)")
+    args = ap.parse_args(argv)
+    overrides = parse_tolerances(args.tolerance)
+
+    failures: List[str] = []
+    notes: List[str] = []
+    for pair in args.compare:
+        base_path, _, cand_path = pair.partition("=")
+        if not base_path or not cand_path:
+            raise SystemExit(f"--compare expects BASELINE=CANDIDATE, "
+                             f"got {pair!r}")
+        label = f"{base_path} vs {cand_path}"
+        try:
+            baseline = load_rows(base_path)
+            candidate = load_rows(cand_path)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"{label}: unreadable bench json: {e}")
+            continue
+        f, n = compare(baseline, candidate,
+                       default_tol=args.default_tolerance,
+                       abs_eps=args.abs_epsilon,
+                       overrides=overrides, label=label)
+        failures += f
+        notes += n
+        gated = sum(1 for _, (_, u) in baseline.items()
+                    if u in STRUCTURAL_UNITS)
+        print(f"check_bench_regression: {label}: {len(baseline)} baseline "
+              f"rows ({gated} gated), {len(f)} drift failure(s)")
+    for n in notes:
+        print(f"note: {n}")
+    for f in failures:
+        if args.warn_only:
+            print(f"::warning title=bench drift::{f}")
+        else:
+            print(f"FAIL: {f}", file=sys.stderr)
+    if failures and args.warn_only:
+        print(f"check_bench_regression: {len(failures)} drift(s) "
+              f"(warn-only: exit 0)")
+        return 0
+    if failures:
+        return 1
+    print("check_bench_regression: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,8 @@ module shapes are checked:
     out of engine.py: public names DEFINED here (classes, functions,
     assignments — imports are implementation detail, not surface) must
     match ``__all__``.
+  * ``src/repro/serving/metrics.py`` / ``tracing.py`` — the observability
+    layer (PR 9), same definition-surface rule as types.py.
 
 A name bound but not listed, or listed but never bound, fails the job;
 so does an unsorted or duplicated ``__all__``.
@@ -25,7 +27,8 @@ from pathlib import Path
 
 SERVING = Path(__file__).resolve().parent.parent / "src/repro/serving"
 # path -> do imports count as public surface (True only for the facade)
-TARGETS = [(SERVING / "__init__.py", True), (SERVING / "types.py", False)]
+TARGETS = [(SERVING / "__init__.py", True), (SERVING / "types.py", False),
+           (SERVING / "metrics.py", False), (SERVING / "tracing.py", False)]
 
 
 def check(path: Path, imports_are_surface: bool) -> list[str]:

@@ -33,6 +33,13 @@ request.  ``--mixed-sampling`` makes odd-indexed requests sample at the
 given temperature while even-indexed ones stay greedy — a mixed batch
 runs in ONE program per tick, and the report's finish-reason counts
 show what ended each stream.
+
+Observability (docs/serving.md §Observability): ``--trace-out t.json``
+records request-lifecycle spans and per-tick phase events as Chrome
+trace-event JSON (open in Perfetto), ``--metrics m.prom`` dumps the
+engine's metrics registry as Prometheus text, and ``--slo-ttft-ms`` /
+``--slo-tpot-ms`` attach per-request deadlines so the report includes
+goodput (fraction of requests meeting their SLO).
 """
 
 from __future__ import annotations
@@ -117,6 +124,19 @@ def main(argv=None) -> int:
                          "preemption swaps pages out instead of "
                          "recomputing, prefix evictions demote to host "
                          "(paged only; 0 = off)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request lifecycle spans + per-tick phase "
+                         "events; open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the metrics registry as Prometheus-style "
+                         "text exposition after the run")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="per-request TTFT deadline in ms; enables the "
+                         "goodput / SLO-attainment report")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="per-request TPOT deadline in ms; enables the "
+                         "goodput / SLO-attainment report")
     args = ap.parse_args(argv)
     if (args.draft or args.spec_k is not None) and not args.speculative:
         ap.error("--draft/--spec-k require --speculative")
@@ -139,8 +159,10 @@ def main(argv=None) -> int:
     from repro.configs.base import get_config
     from repro.models.transformer import init_params
     from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.metrics import SLO
     from repro.serving.sampling import SamplingParams
     from repro.serving.scheduler import PhaseAwareConfig
+    from repro.serving.tracing import Tracer
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -167,7 +189,13 @@ def main(argv=None) -> int:
         prefix_cache=args.prefix_cache,
         speculative=spec,
         executor=args.executor, host_spill_pages=args.host_spill_pages)
-    engine = ServingEngine(cfg, params, sc)
+    # tracing is opt-in: enabled=False keeps the hot loop at one branch
+    # per instrumentation point and the token streams bit-identical
+    tracer = Tracer(enabled=bool(args.trace_out))
+    slo = None
+    if args.slo_ttft_ms is not None or args.slo_tpot_ms is not None:
+        slo = SLO(ttft_ms=args.slo_ttft_ms, tpot_ms=args.slo_tpot_ms)
+    engine = ServingEngine(cfg, params, sc, tracer=tracer)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -191,7 +219,8 @@ def main(argv=None) -> int:
             temp = 0.0
         engine.submit(prompt, sampling=SamplingParams(
             temperature=temp, top_k=args.top_k, top_p=args.top_p,
-            seed=args.seed + i, max_new_tokens=args.max_new, stop=stop))
+            seed=args.seed + i, max_new_tokens=args.max_new, stop=stop),
+            slo=slo)
     done = engine.run_until_drained()
     wall = time.monotonic() - t0
 
@@ -264,6 +293,27 @@ def main(argv=None) -> int:
               f"swap-resumes={c['swap_resumes']} "
               f"recompute-resumes={c['recompute_preemptions']} "
               f"resident-pages={c['host_resident_pages']}")
+    if slo is not None:
+        g = engine.goodput()
+        slo_s = " ".join(
+            f"{k}={v}" for k, v in (("ttft_ms", args.slo_ttft_ms),
+                                    ("tpot_ms", args.slo_tpot_ms))
+            if v is not None)
+        print(f"slo[{slo_s}] attained={g['slo_attained']}/{g['slo_total']} "
+              f"goodput={g['goodput']:.2f} "
+              f"ttft-violations={g['ttft_violations']} "
+              f"tpot-violations={g['tpot_violations']}")
+    if args.trace_out:
+        engine.tracer.write(args.trace_out)
+        print(f"trace: {len(engine.tracer.events())} events -> "
+              f"{args.trace_out}")
+    if args.metrics:
+        snap = engine.metrics_snapshot()  # refreshes gauges before render
+        with open(args.metrics, "w") as f:
+            f.write(engine.metrics.render())
+        print(f"metrics: {len(snap['counters'])} counters "
+              f"{len(snap['gauges'])} gauges "
+              f"{len(snap['histograms'])} histograms -> {args.metrics}")
     return 0
 
 

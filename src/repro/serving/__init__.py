@@ -18,6 +18,12 @@ from repro.serving.executor import (
     make_executor,
 )
 from repro.serving.kv_pool import HostTier, KVPool
+from repro.serving.metrics import (
+    SLO,
+    MetricsRegistry,
+    quantile,
+    slo_attainment,
+)
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (
     SamplingParams,
@@ -34,6 +40,7 @@ from repro.serving.scheduler import (
     pack_chunks,
 )
 from repro.serving.speculative import SpecConfig
+from repro.serving.tracing import Tracer
 from repro.serving.types import (
     Request,
     RequestOutput,
@@ -48,6 +55,7 @@ __all__ = [
     "Executor",
     "HostTier",
     "KVPool",
+    "MetricsRegistry",
     "PackedPrefill",
     "PhaseAwareConfig",
     "PhaseScheduler",
@@ -55,16 +63,20 @@ __all__ = [
     "Request",
     "RequestOutput",
     "RequestState",
+    "SLO",
     "SamplingParams",
     "ServeConfig",
     "ServingEngine",
     "SpecConfig",
     "TickPlan",
     "TickRecord",
+    "Tracer",
     "make_executor",
     "pack_chunks",
+    "quantile",
     "sample_tokens",
     "sample_tokens_rows",
+    "slo_attainment",
     "verify_draft",
     "verify_draft_rows",
 ]

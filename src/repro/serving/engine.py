@@ -136,7 +136,15 @@ from repro.models.transformer import (
 )
 from repro.serving.executor import make_executor
 from repro.serving.kv_pool import HostTier, KVPool
+from repro.serving.metrics import (
+    SLO,
+    MetricsRegistry,
+    counter_attr,
+    gauge_attr,
+    slo_attainment,
+)
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.tracing import Tracer
 from repro.serving.sampling import (
     SamplingParams,
     row_keys,
@@ -181,8 +189,54 @@ class _SwapHandle:
 
 
 class ServingEngine:
+    # Lifetime counters live in the METRICS REGISTRY (serving/metrics.py):
+    # each attribute below is a view over one named registry cell, so the
+    # legacy dict APIs (counts() / spec_stats() / prefix_stats()) and
+    # MetricsRegistry.snapshot() / render() can never disagree.  The
+    # executor, HostTier, and PrefixCache share the same registry (the
+    # engine passes it at construction), covering their counters too.
+    host_transfers = counter_attr("serving_host_transfers_total")
+    aborted = counter_attr("serving_aborted_total")
+    preemptions = counter_attr("serving_preemptions_total")
+    swap_outs = counter_attr("serving_swap_outs_total")
+    swap_resumes = counter_attr("serving_swap_resumes_total")
+    recompute_preemptions = counter_attr("serving_recompute_preemptions_total")
+    prefill_tokens_executed = counter_attr("serving_prefill_tokens_total")
+    cow_copies = counter_attr("serving_cow_copies_total")
+    cache_evicted_pages = counter_attr("serving_cache_evicted_pages_total")
+    spec_windows = counter_attr("serving_spec_windows_total")
+    spec_drafted = counter_attr("serving_spec_drafted_total")
+    spec_accepted = counter_attr("serving_spec_accepted_total")
+    decode_tokens_emitted = counter_attr("serving_decode_tokens_total")
+    decode_slot_ticks = counter_attr("serving_decode_slot_ticks_total")
+    prefill_launches = counter_attr("serving_prefill_launches_total")
+    prefill_rows_executed = counter_attr("serving_prefill_rows_total")
+    kv_resident_peak = gauge_attr("serving_kv_resident_peak_bytes")
+    _n_ticks = counter_attr("serving_ticks_total")
+    _n_prefill_ticks = counter_attr("serving_prefill_ticks_total")
+    _n_decode_ticks = counter_attr("serving_decode_ticks_total")
+    _n_mixed_ticks = counter_attr("serving_mixed_ticks_total")
+
+    # the counters step() diffs to fill each TickRecord's per-tick fields
+    _TICK_DELTA_KEYS = (
+        "serving_preemptions_total",
+        "serving_spec_drafted_total",
+        "serving_spec_accepted_total",
+        "serving_swap_out_bytes_total",
+        "serving_swap_in_bytes_total",
+    )
+
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
-                 *, mesh=None):
+                 *, mesh=None, metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        # the registry IS the engine's counter state — construct it before
+        # anything that counts.  Pass a DEDICATED registry per engine (the
+        # per-tick deltas assume nobody else moves these counters); pass a
+        # Tracer(enabled=True) to record the Chrome trace timeline
+        # (serving/tracing.py) — tracing is OFF by default and leaves
+        # greedy token streams bit-identical when on.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         self.cfg = cfg
         if sc.weights_dtype not in ("f32", "int8"):
             raise ValueError(f"weights_dtype={sc.weights_dtype!r} "
@@ -238,7 +292,7 @@ class ServingEngine:
             raise ValueError("host_spill_pages > 0 requires paged=True "
                              "(the spill tier stores device pool pages)")
         self.host_tier: Optional[HostTier] = (
-            HostTier(self.pool, sc.host_spill_pages)
+            HostTier(self.pool, sc.host_spill_pages, metrics=self.metrics)
             if sc.paged and sc.host_spill_pages > 0 else None)
         self.prefix: Optional[PrefixCache] = None
         if sc.paged and sc.prefix_cache:
@@ -247,7 +301,8 @@ class ServingEngine:
                 sc.page_size, self.pool.shareable_capacity(),
                 demote=self._demote_pages if tiered else None,
                 promote=self._promote_pages if tiered else None,
-                discard=self._discard_host_pages if tiered else None)
+                discard=self._discard_host_pages if tiered else None,
+                metrics=self.metrics)
         self.spec = sc.speculative
         self.drafter = None
         if self.spec is not None:
@@ -274,6 +329,10 @@ class ServingEngine:
         # bounded record of recent ticks (a long-lived engine must not grow
         # per-tick state without bound); occupancy uses running counters
         self.tick_log: Deque[TickRecord] = deque(maxlen=65_536)
+        # baseline for TickRecord's registry deltas, carried ACROSS ticks
+        # (see step()): counter movement between ticks lands in the next
+        # record, so the tick_log sums conserve the lifetime totals
+        self._tick_delta_base = self.metrics.values(self._TICK_DELTA_KEYS)
         self._n_ticks = 0
         self._n_prefill_ticks = 0
         self._n_decode_ticks = 0
@@ -282,7 +341,6 @@ class ServingEngine:
         self.aborted = 0                 # requests cancelled via abort()
         self.preemptions = 0             # lifetime pool evictions (paged)
         self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
-        self._tick_preemptions = 0
         # tiered-KV counters: how preemptions resumed (swap vs recompute)
         self.swap_outs = 0               # victims whose pages went to host
         self.swap_resumes = 0            # swapped requests resumed from host
@@ -296,8 +354,6 @@ class ServingEngine:
         self.spec_accepted = 0           # draft tokens accepted
         self.decode_tokens_emitted = 0   # tokens from decode/verify phases
         self.decode_slot_ticks = 0       # (request, tick) decode occupancies
-        self._tick_spec_drafted = 0
-        self._tick_spec_accepted = 0
         # the dense arena pins its full footprint up front; computed here
         # because the cache arrays are donated (buffers move every call).
         # The per-token/per-slot split prices the dense prefill->decode
@@ -337,7 +393,7 @@ class ServingEngine:
             "packed": self._prefill_packed_impl,
             "packed_paged": self._prefill_packed_paged_impl,
             "verify": self._verify_impl,
-        }, mesh=mesh)
+        }, mesh=mesh, metrics=self.metrics)
         # run -> jitted COW page copy (donated in-place, one per run shape)
         self._copy_programs: Dict[int, Callable] = {}
         # run -> jitted host-page upload (donated; swap-in / promote path)
@@ -360,7 +416,12 @@ class ServingEngine:
 
     def _note_compile(self, group: str, kind: str, shape: Tuple[int, ...],
                       all_greedy: bool) -> None:
+        before = self.executor.compile_count
         self.executor.note_compile(group, kind, shape, all_greedy)
+        if self.tracer.enabled and self.executor.compile_count > before:
+            self.tracer.instant("compile", self.tracer.now(), group=group,
+                                kind=kind, shape=list(shape),
+                                all_greedy=bool(all_greedy))
 
     # -- jitted bodies ---------------------------------------------------------
     def _sample(self, logits, temps, top_ks, top_ps, seeds, counters,
@@ -492,14 +553,19 @@ class ServingEngine:
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, *,
-               sampling: Optional[SamplingParams] = None) -> Request:
+               sampling: Optional[SamplingParams] = None,
+               slo: Optional[SLO] = None) -> Request:
         """Queue one request.
 
         ``sampling`` carries the per-request parameters (temperature=0 is
         greedy); omitted, the ``ServeConfig`` legacy defaults apply.  The
         positional ``max_new_tokens`` / ``eos_id`` arguments are kept for
         existing callers and override the corresponding ``sampling``
-        fields when given."""
+        fields when given.  ``slo`` attaches TTFT/TPOT deadlines
+        (``repro.serving.SLO``, milliseconds): at retirement the request
+        counts into the ``serving_slo_*`` attainment counters and the
+        goodput fraction ``counts()``/``goodput()`` report — deadlines
+        never change scheduling, only accounting."""
         sp = sampling if sampling is not None else self._default_sampling
         if max_new_tokens is not None:
             sp = replace(sp, max_new_tokens=max_new_tokens)
@@ -525,7 +591,13 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {req.prompt_len} tokens does not fit "
                 f"max_len={self.sc.max_len} (need >= 1 decode position)")
+        if slo is not None and not isinstance(slo, SLO):
+            raise TypeError(f"slo={slo!r} (expected repro.serving.SLO)")
+        req.slo = slo
         req.t_submit = time.monotonic()
+        if self.tracer.enabled:
+            self.tracer.begin_request(req.req_id, req.t_submit,
+                                      prompt_len=req.prompt_len)
         self._next_id += 1
         self.queue.append(req)
         return req
@@ -568,6 +640,12 @@ class ServingEngine:
         req.state = RequestState.DONE
         req.finish_reason = "abort"
         req.t_done = time.monotonic()
+        # aborts are client cancellations, not serving failures: they are
+        # EXCLUDED from SLO attainment (goodput measures what the engine
+        # did with requests it was allowed to finish)
+        if self.tracer.enabled:
+            self.tracer.end_request(req.req_id, req.t_done, reason="abort",
+                                    generated=len(req.generated))
         self.done.append(req)
         return RequestOutput(req_id=req.req_id, new_token_ids=[],
                              n_generated=len(req.generated), finished=True,
@@ -640,6 +718,13 @@ class ServingEngine:
             self.slot_req[slot] = req
             self._try_prefix_attach(req)
             admitted.append(req)
+        if self.tracer.enabled and admitted:
+            t = self.tracer.now()
+            for req in admitted:
+                self.tracer.request_span(
+                    req.req_id, "queued", req.t_requeue or req.t_submit, t,
+                    cached_tokens=req.cached_tokens,
+                    n_preempted=req.n_preempted)
         return admitted
 
     def _by_id(self) -> Dict[int, Request]:
@@ -758,7 +843,10 @@ class ServingEngine:
         req.state = RequestState.WAITING
         req.n_preempted += 1
         self.preemptions += 1
-        self._tick_preemptions += 1
+        req.t_requeue = time.monotonic()    # the next queued span starts here
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", req.t_requeue, req_id=req.req_id,
+                                swapped=req.swap is not None)
         # keep the queue age-ordered: older (smaller id) requests first,
         # so the re-queued victim outranks later submissions
         i = 0
@@ -838,6 +926,7 @@ class ServingEngine:
         need = [p.pages_of(length) for p in pools]
         if any(self.host_tier.free_pages(r) < n for r, n in enumerate(need)):
             return False
+        t_sw0, b0 = self.tracer.now(), self.host_tier.swap_out_bytes
         pages: List[List[int]] = []
         for r, p in enumerate(pools):
             host = self.host_tier.alloc(r, need[r])
@@ -851,6 +940,10 @@ class ServingEngine:
             cached_tokens=req.cached_tokens,
             pos=int(self.slot_pos[req.slot]), state=req.state)
         self.swap_outs += 1
+        if self.tracer.enabled:
+            self.tracer.request_span(
+                req.req_id, "swap_out", t_sw0, self.tracer.now(),
+                bytes=self.host_tier.swap_out_bytes - b0, tokens=length)
         return True
 
     def _try_swap_in(self, req: Request, slot: int) -> bool:
@@ -866,6 +959,7 @@ class ServingEngine:
             self._reclaim_cache(deficit)
             if not self.pool.grow(slot, h.length):
                 return False
+        t_sw0, b0 = self.tracer.now(), self.host_tier.swap_in_bytes
         req.slot = slot
         self.slot_req[slot] = req
         for r, p in enumerate(self.pool.pools):
@@ -879,6 +973,10 @@ class ServingEngine:
         self.slot_pos[slot] = h.pos     # -1 for a mid-prefill swap
         req.swap = None
         self.swap_resumes += 1
+        if self.tracer.enabled:
+            self.tracer.request_span(
+                req.req_id, "swap_in", t_sw0, self.tracer.now(),
+                bytes=self.host_tier.swap_in_bytes - b0, tokens=h.length)
         return True
 
     def _demote_pages(self, dev_pages: List[int]) -> Optional[List[int]]:
@@ -958,6 +1056,9 @@ class ServingEngine:
         self._append_token(req, tok_row)
         if req.t_first_token == 0.0:    # a resumed prefill keeps its TTFT
             req.t_first_token = time.monotonic()
+            if self.tracer.enabled:
+                self.tracer.instant("first_token", req.t_first_token,
+                                    req_id=req.req_id)
         req.state = RequestState.DECODING
         if self._finished(req):
             self._retire(req)
@@ -998,6 +1099,12 @@ class ServingEngine:
     def _retire(self, req: Request) -> None:
         req.state = RequestState.DONE
         req.t_done = time.monotonic()
+        self._account_latency(req)
+        if self.tracer.enabled:
+            self.tracer.end_request(req.req_id, req.t_done,
+                                    reason=req.finish_reason,
+                                    generated=len(req.generated),
+                                    n_preempted=req.n_preempted)
         if self.drafter is not None:
             self.drafter.release(req.slot)
         if self.paged:
@@ -1005,6 +1112,26 @@ class ServingEngine:
         self.slot_req[req.slot] = None
         self.slot_pos[req.slot] = -1
         self.done.append(req)
+
+    def _account_latency(self, req: Request) -> None:
+        """Retirement-time latency/SLO bookkeeping: TTFT/TPOT histogram
+        samples (NaN = never emitted — skipped by ``observe``) and, for
+        requests submitted with deadlines, the ``serving_slo_*``
+        attainment counters behind ``goodput()``.  Aborted requests never
+        reach here (see ``abort``): goodput measures served requests."""
+        m = self.metrics
+        m.observe("serving_ttft_seconds", req.ttft)
+        m.observe("serving_tpot_seconds", req.tpot)
+        if req.slo is None:
+            return
+        ok, ttft_ok, tpot_ok = slo_attainment(req.ttft, req.tpot, req.slo)
+        m.inc("serving_slo_requests_total")
+        if ok:
+            m.inc("serving_slo_attained_total")
+        if not ttft_ok:
+            m.inc("serving_slo_ttft_violations_total")
+        if not tpot_ok:
+            m.inc("serving_slo_tpot_violations_total")
 
     def _grow_for_decode(self, r: Request) -> bool:
         """Secure this tick's one-token write for ``r``: grow the slot by
@@ -1041,11 +1168,16 @@ class ServingEngine:
             for req, take in chunks:
                 tokens = jnp.asarray(req.prompt[None], jnp.int32)
                 pp, all_greedy = self._pack_params([(0, req)], 1)
+                tw0 = self.tracer.now()
                 self._note_compile(plan.prefill_group, "whole",
                                    (req.prompt_len,), all_greedy)
                 toks, self.cache = self._program(plan.prefill_group, "whole")(
                     self.params, tokens, jnp.int32(req.slot), self.cache,
                     *pp, all_greedy)
+                if self.tracer.enabled:
+                    self.tracer.request_span(
+                        req.req_id, "prefill_chunk", tw0, self.tracer.now(),
+                        take=req.prompt_len, offset=0)
                 req.prefill_pos = req.prompt_len
                 self.prefill_tokens_executed += req.prompt_len
                 self.prefill_launches += 1
@@ -1077,10 +1209,17 @@ class ServingEngine:
                 return
         self._prefill_progress = True
 
+        tp0 = self.tracer.now()
         if self._packed:
             toks = self._launch_packed_prefill(plan, chunks)
         else:
             toks = self._launch_padded_prefill(plan, chunks)
+        if self.tracer.enabled:
+            tp1 = self.tracer.now()     # one launch serves every chunk
+            for req, take in chunks:
+                self.tracer.request_span(req.req_id, "prefill_chunk",
+                                         tp0, tp1, take=take,
+                                         offset=req.prefill_pos)
         self.prefill_tokens_executed += sum(take for _, take in chunks)
         self.prefill_launches += 1
         sampled = None
@@ -1220,12 +1359,14 @@ class ServingEngine:
             slots[i] = r.slot
         pp, all_greedy = self._pack_params(
             [(i, r) for i, (r, _) in enumerate(rows)], N)
+        tv0 = self.tracer.now()
         self._note_compile(plan.verify_group, "verify", (N, C), all_greedy)
         out, self.cache = self._program(plan.verify_group, "verify")(
             self.params, jnp.asarray(tokens), jnp.asarray(offs),
             jnp.asarray(lens), jnp.asarray(slots), self.cache,
             self.pool.block_tables(), jnp.asarray(draft), *pp, all_greedy)
         packed = self._to_host(out)                 # [N, C+1], one transfer
+        tv1 = self.tracer.now()
         for i, (r, d) in enumerate(rows):
             kd = int(d.shape[-1])
             n_emit = int(packed[i, -1])
@@ -1234,19 +1375,23 @@ class ServingEngine:
             self.spec_windows += 1
             self.spec_drafted += kd
             self.spec_accepted += accepted
-            self._tick_spec_drafted += kd
-            self._tick_spec_accepted += accepted
             # the emitted tokens' KV: window inputs [gen[-1], d_1..d_acc]
             # are committed; the final emitted token is fed next tick; the
             # rejected tail (positions past pos + acc + 1) rolls back
             new_pos = int(self.slot_pos[r.slot]) + accepted + 1
             self.pool.truncate(r.slot, new_pos)
             self.slot_pos[r.slot] = new_pos
+            appended = 0
             for t in packed[i, :n_emit]:
                 self._append_token(r, t)
                 self.decode_tokens_emitted += 1
+                appended += 1
                 if self._stream_done(r):        # eos / max_new clip only
                     break
+            if self.tracer.enabled:
+                self.tracer.request_span(r.req_id, "verify_window", tv0, tv1,
+                                         drafted=kd, accepted=accepted,
+                                         emitted=appended)
             if self.drafter is not None:
                 self.drafter.observe(r.slot, r.req_id,
                                      self._effective_len(r))
@@ -1331,6 +1476,7 @@ class ServingEngine:
                 pos[i] = self.slot_pos[r.slot]
             pp, all_greedy = self._pack_params(
                 [(i, r) for i, r in enumerate(active)], nb)
+            td0 = self.tracer.now()
             self._note_compile(plan.decode_group, "decode_paged", (nb,),
                                all_greedy)
             # pad rows carry all-sentinel block-table rows: their scatters
@@ -1359,12 +1505,14 @@ class ServingEngine:
                            self.slot_pos, 0).astype(np.int32)
             pp, all_greedy = self._pack_params(
                 [(r.slot, r) for r in active], B)
+            td0 = self.tracer.now()
             self._note_compile(plan.decode_group, "decode", (B,), all_greedy)
             toks, self.cache = self._program(plan.decode_group, "decode")(
                 self.params, jnp.asarray(tokens), self.cache,
                 jnp.asarray(pos), jnp.asarray(mask), *pp, all_greedy)
             sampled = self._to_host(toks)           # one transfer per tick
             emitted = [(r.slot, r) for r in active]
+        td1 = self.tracer.now()
         for row, r in emitted:
             self._append_token(r, sampled[row])
             # occupancy is counted at emission, not at planning: a request
@@ -1373,6 +1521,9 @@ class ServingEngine:
             self.decode_tokens_emitted += 1
             self.decode_slot_ticks += 1
             self.slot_pos[r.slot] += 1
+            if self.tracer.enabled:
+                self.tracer.request_span(r.req_id, "decode", td0, td1,
+                                         tokens=1)
             if self._finished(r):
                 self._retire(r)
 
@@ -1389,13 +1540,8 @@ class ServingEngine:
         ``abort()`` between ticks returns its terminal output directly
         from ``abort``."""
         t0 = time.monotonic()
-        self._tick_preemptions = 0
-        self._tick_spec_drafted = 0
-        self._tick_spec_accepted = 0
         self.executor.begin_tick()
         self._prefill_progress = False
-        swap0 = ((self.host_tier.swap_out_bytes, self.host_tier.swap_in_bytes)
-                 if self.host_tier is not None else (0, 0))
         # snapshot for incremental outputs: every request that can gain
         # tokens this tick is in the queue or a slot right now
         counts0 = {r.req_id: len(r.generated) for r in self.queue}
@@ -1439,6 +1585,14 @@ class ServingEngine:
             self._break_prefill_stall()
         resident = self.pool.resident_bytes() if self.paged else 0
         self.kv_resident_peak = max(self.kv_resident_peak, resident)
+        # per-tick counters are registry DELTAS against the previous
+        # record's baseline — preemption/spec/swap totals have exactly one
+        # home (the registry), each TickRecord reports what accrued since
+        # the last one, and Σ tick_log.<field> == the lifetime counter
+        # even for movement BETWEEN ticks (e.g. a caller-driven preempt)
+        cur = self.metrics.values(self._TICK_DELTA_KEYS)
+        delta = {k: cur[k] - self._tick_delta_base[k] for k in cur}
+        self._tick_delta_base = cur
         rec = TickRecord(
             index=self._n_ticks,
             prefill_reqs=list(plan.prefill_reqs),
@@ -1447,19 +1601,39 @@ class ServingEngine:
             prefill_group=plan.prefill_group,
             decode_group=plan.decode_group,
             wall_s=time.monotonic() - t0,
-            preemptions=self._tick_preemptions,
+            preemptions=int(delta["serving_preemptions_total"]),
             kv_resident_bytes=resident,
-            spec_drafted=self._tick_spec_drafted,
-            spec_accepted=self._tick_spec_accepted,
+            spec_drafted=int(delta["serving_spec_drafted_total"]),
+            spec_accepted=int(delta["serving_spec_accepted_total"]),
             new_compiles=self.executor.tick_new_compiles,
             migrated_pages=self.executor.tick_migrated_pages,
             migrated_bytes=self.executor.tick_migrated_bytes,
-            swap_out_bytes=(self.host_tier.swap_out_bytes - swap0[0]
-                            if self.host_tier is not None else 0),
-            swap_in_bytes=(self.host_tier.swap_in_bytes - swap0[1]
-                           if self.host_tier is not None else 0),
+            swap_out_bytes=int(delta["serving_swap_out_bytes_total"]),
+            swap_in_bytes=int(delta["serving_swap_in_bytes_total"]),
             host_resident_pages=(self.host_tier.used_pages()
                                  if self.host_tier is not None else 0))
+        self.metrics.observe("serving_tick_wall_seconds", rec.wall_s)
+        if self.tracer.enabled:
+            # the TickRecord twin: every rec counter appears as a tick-span
+            # arg, so summing an arg across the tick track reproduces the
+            # registry total (the conservation law the tests pin)
+            self.tracer.tick_span(
+                t0, t0 + rec.wall_s, index=rec.index,
+                prefill_reqs=list(rec.prefill_reqs),
+                prefill_tokens=rec.prefill_tokens,
+                decode_reqs=list(rec.decode_reqs),
+                prefill_group=rec.prefill_group or "",
+                decode_group=rec.decode_group or "",
+                preemptions=rec.preemptions,
+                kv_resident_bytes=rec.kv_resident_bytes,
+                spec_drafted=rec.spec_drafted,
+                spec_accepted=rec.spec_accepted,
+                new_compiles=rec.new_compiles,
+                migrated_pages=rec.migrated_pages,
+                migrated_bytes=rec.migrated_bytes,
+                swap_out_bytes=rec.swap_out_bytes,
+                swap_in_bytes=rec.swap_in_bytes,
+                host_resident_pages=rec.host_resident_pages)
         self.tick_log.append(rec)
         self._n_ticks += 1
         self._n_prefill_ticks += bool(rec.prefill_reqs)
@@ -1489,7 +1663,10 @@ class ServingEngine:
 
     def counts(self) -> Dict[str, int]:
         """Queue/slot/done occupancy (the old ``step()`` return value),
-        plus the lifetime migration / tiered-KV counters."""
+        plus the lifetime migration / tiered-KV counters and SLO
+        attainment — every value is a view over the metrics registry
+        (or derived from one), never a second copy."""
+        g = self.goodput()
         return {"queued": len(self.queue),
                 "active": sum(r is not None for r in self.slot_req),
                 "done": len(self.done),
@@ -1502,19 +1679,70 @@ class ServingEngine:
                 "swap_resumes": self.swap_resumes,
                 "recompute_preemptions": self.recompute_preemptions,
                 "host_resident_pages": (self.host_tier.used_pages()
-                                        if self.host_tier is not None else 0)}
+                                        if self.host_tier is not None else 0),
+                "slo_total": g["slo_total"],
+                "slo_attained": g["slo_attained"],
+                "goodput": g["goodput"]}
+
+    def goodput(self) -> Dict[str, float]:
+        """SLO attainment over retired requests submitted with deadlines
+        (``submit(..., slo=SLO(...))``); aborted requests are excluded.
+
+        ``goodput`` is the attained fraction — 1.0 vacuously when no
+        request carried an SLO, so SLO-free runs read as unconstrained
+        rather than failing.  The per-axis violation counts say WHICH
+        deadline was missed (a request can violate both)."""
+        m = self.metrics
+        total = int(m.counter("serving_slo_requests_total"))
+        attained = int(m.counter("serving_slo_attained_total"))
+        return {
+            "slo_total": total,
+            "slo_attained": attained,
+            "ttft_violations":
+                int(m.counter("serving_slo_ttft_violations_total")),
+            "tpot_violations":
+                int(m.counter("serving_slo_tpot_violations_total")),
+            "goodput": attained / total if total else 1.0,
+        }
+
+    def metrics_snapshot(self) -> Dict[str, Dict]:
+        """The full registry snapshot (counters / gauges / histograms)
+        with the point-in-time occupancy gauges refreshed first — the
+        machine-readable superset of ``counts()`` / ``spec_stats()`` /
+        ``prefix_stats()``."""
+        m = self.metrics
+        m.set_gauge("serving_requests_queued", len(self.queue))
+        m.set_gauge("serving_requests_active",
+                    sum(r is not None for r in self.slot_req))
+        m.set_gauge("serving_requests_done", len(self.done))
+        m.set_gauge("serving_kv_resident_bytes",
+                    self.pool.resident_bytes() if self.paged else 0)
+        m.set_gauge("serving_host_resident_pages",
+                    self.host_tier.used_pages()
+                    if self.host_tier is not None else 0)
+        return m.snapshot()
 
     def _check_drained(self, ticks: int, max_ticks: int) -> None:
         """Fail LOUDLY when the tick budget runs out with live requests —
-        a silent partial drain poisons every downstream comparison."""
+        a silent partial drain poisons every downstream comparison.  The
+        message carries the counts() snapshot, the per-state request
+        breakdown, and the last TickRecord so a stuck engine is
+        diagnosable from the exception alone."""
         if ticks >= max_ticks and (
                 self.queue or any(r is not None for r in self.slot_req)):
             c = self.counts()
+            states: Dict[str, int] = {}
+            for r in list(self.queue) + [r for r in self.slot_req
+                                         if r is not None]:
+                states[r.state.value] = states.get(r.state.value, 0) + 1
+            last = self.tick_log[-1] if self.tick_log else None
             raise RuntimeError(
                 f"max_ticks={max_ticks} exhausted with live requests "
                 f"({c['queued']} queued, {c['active']} active, "
-                f"{c['done']} done) — the engine did not drain; raise "
-                "max_ticks or check for a scheduling stall")
+                f"{c['done']} done; states={states}, "
+                f"preemptions={self.preemptions}) — the engine did not "
+                f"drain; raise max_ticks or check for a scheduling stall. "
+                f"counts={c} last_tick={last}")
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0

@@ -39,6 +39,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.launch.mesh import phase_device_groups
+from repro.serving.metrics import MetricsRegistry, counter_attr
 
 
 class Executor:
@@ -77,7 +78,17 @@ class Executor:
     #: (the engine consults this before computing handoff footprints)
     migrates_kv: bool = False
 
-    def __init__(self, impls: Dict[str, Callable], *, mesh=None):
+    # lifetime counters live in the metrics registry (the engine shares
+    # its own via make_executor(..., metrics=...), so counts()/snapshot()
+    # and these attributes read the same cells — serving/metrics.py)
+    compile_count = counter_attr("serving_compiles_total")
+    migrated_pages = counter_attr("serving_migrated_pages_total")
+    migrated_bytes = counter_attr("serving_migrated_bytes_total")
+    migration_batches = counter_attr("serving_migration_batches_total")
+
+    def __init__(self, impls: Dict[str, Callable], *, mesh=None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.impls = impls
         self.mesh = mesh
         # (group, kind) -> jitted program; built lazily so each strategy
@@ -172,8 +183,9 @@ class DisaggregatedExecutor(Executor):
     migrates_kv = True
 
     def __init__(self, impls: Dict[str, Callable], *, mesh=None,
+                 metrics: Optional[MetricsRegistry] = None,
                  devices: Optional[Tuple[List[Any], List[Any]]] = None):
-        super().__init__(impls, mesh=mesh)
+        super().__init__(impls, mesh=mesh, metrics=metrics)
         groups = devices if devices is not None else phase_device_groups()
         self.prefill_devices, self.decode_devices = groups
 
@@ -208,13 +220,13 @@ def _pin(fn: Callable, dev) -> Callable:
     return run
 
 
-def make_executor(name: str, impls: Dict[str, Callable], *,
-                  mesh=None) -> Executor:
+def make_executor(name: str, impls: Dict[str, Callable], *, mesh=None,
+                  metrics: Optional[MetricsRegistry] = None) -> Executor:
     """ServeConfig.executor -> Executor instance."""
     if name == "colocated":
-        return ColocatedExecutor(impls, mesh=mesh)
+        return ColocatedExecutor(impls, mesh=mesh, metrics=metrics)
     if name == "disaggregated":
-        return DisaggregatedExecutor(impls, mesh=mesh)
+        return DisaggregatedExecutor(impls, mesh=mesh, metrics=metrics)
     raise ValueError(f"executor={name!r} (expected 'colocated' or "
                      "'disaggregated')")
 

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import build_plan, cache_len
+from repro.serving.metrics import MetricsRegistry, counter_attr
 from repro.serving.scheduler import pages_for
 
 
@@ -607,9 +608,17 @@ class HostTier:
     tests can property-check this class without jax arrays.
     """
 
-    def __init__(self, pool: KVPool, n_pages: int):
+    # swap byte totals live in the metrics registry (the engine passes its
+    # own, making these attributes views over the same cells counts() and
+    # MetricsRegistry.snapshot() report — serving/metrics.py)
+    swap_out_bytes = counter_attr("serving_swap_out_bytes_total")
+    swap_in_bytes = counter_attr("serving_swap_in_bytes_total")
+
+    def __init__(self, pool: KVPool, n_pages: int, *,
+                 metrics: Optional[MetricsRegistry] = None):
         if n_pages < 1:
             raise ValueError(f"HostTier needs n_pages >= 1, got {n_pages}")
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.n_pages = n_pages
         self.n_runs = len(pool.caches)
         self._page_bytes = [pool.page_bytes(r) for r in range(self.n_runs)]

@@ -42,6 +42,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.kv_pool import KVPool
+from repro.serving.metrics import MetricsRegistry, counter_attr
 
 
 def _block_digest(parent: bytes, block: np.ndarray) -> bytes:
@@ -101,10 +102,18 @@ class PrefixCache:
       discard(host_pages)   -> free the host pages (node truly dying)
     """
 
+    # hit counters live in the metrics registry (the engine passes its
+    # own, so prefix_stats() and MetricsRegistry.snapshot() read the
+    # same cells — serving/metrics.py)
+    hits = counter_attr("serving_prefix_hits_total")
+    hit_tokens = counter_attr("serving_prefix_hit_tokens_total")
+
     def __init__(self, page_size: int, max_tokens: int, *,
                  demote: Optional[Callable] = None,
                  promote: Optional[Callable] = None,
-                 discard: Optional[Callable] = None):
+                 discard: Optional[Callable] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.page_size = page_size
         # sharing is only position-pure up to the narrowest ring span
         self.max_blocks = max_tokens // page_size

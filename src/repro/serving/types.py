@@ -26,6 +26,7 @@ from typing import Any, List, Optional
 
 import numpy as np
 
+from repro.serving.metrics import SLO
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import PhaseAwareConfig
 from repro.serving.speculative import SpecConfig
@@ -56,6 +57,10 @@ class Request:
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    t_requeue: float = 0.0              # last preemption re-queue instant
+    # latency deadlines for goodput accounting (serving/metrics.py);
+    # None = best-effort, excluded from SLO attainment
+    slo: Optional[SLO] = None
     # host-tier swap handle (set while the request's KV pages live in the
     # host spill pool between a swap-out preemption and its swap-in resume)
     swap: Optional[Any] = None
