@@ -12,6 +12,8 @@ module shapes are checked:
     match ``__all__``.
   * ``src/repro/serving/metrics.py`` / ``tracing.py`` — the observability
     layer (PR 9), same definition-surface rule as types.py.
+  * ``src/repro/serving/frontend.py`` / ``traffic.py`` — the async
+    front-end and traffic harness (PR 10), same rule.
 
 A name bound but not listed, or listed but never bound, fails the job;
 so does an unsorted or duplicated ``__all__``.
@@ -28,7 +30,8 @@ from pathlib import Path
 SERVING = Path(__file__).resolve().parent.parent / "src/repro/serving"
 # path -> do imports count as public surface (True only for the facade)
 TARGETS = [(SERVING / "__init__.py", True), (SERVING / "types.py", False),
-           (SERVING / "metrics.py", False), (SERVING / "tracing.py", False)]
+           (SERVING / "metrics.py", False), (SERVING / "tracing.py", False),
+           (SERVING / "frontend.py", False), (SERVING / "traffic.py", False)]
 
 
 def check(path: Path, imports_are_surface: bool) -> list[str]:

@@ -40,6 +40,21 @@ trace-event JSON (open in Perfetto), ``--metrics m.prom`` dumps the
 engine's metrics registry as Prometheus text, and ``--slo-ttft-ms`` /
 ``--slo-tpot-ms`` attach per-request deadlines so the report includes
 goodput (fraction of requests meeting their SLO).
+
+``--traffic`` replaces the fixed submit-everything-at-once batch with a
+seeded arrival trace replayed through the ASYNC front-end
+(serving/frontend.py + serving/traffic.py): ``--rate-rps`` arrivals per
+second for ``--duration-s`` seconds (``--arrival onoff`` for bursty
+ON-OFF instead of Poisson), prompt/output lengths drawn per request up
+to --prompt-len/--max-new, paced in real time (``--time-scale`` scales
+the clock; 0 submits in trace order with no waiting — deterministic).
+``--admission`` turns on shed-before-thrash admission control: requests
+whose projected TTFT busts their deadline are refused at submit
+(``--admission-tick-cost-s`` fixes the projection's seconds-per-tick —
+deterministic decisions — instead of the live tick-wall EMA;
+``--max-pending-tokens`` adds the structural backpressure cap).  The
+report becomes the traffic scorecard: goodput under SLO, TTFT/TPOT
+percentiles over served requests, shed/defer rates, preemption counts.
 """
 
 from __future__ import annotations
@@ -137,6 +152,35 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-tpot-ms", type=float, default=None,
                     help="per-request TPOT deadline in ms; enables the "
                          "goodput / SLO-attainment report")
+    ap.add_argument("--traffic", action="store_true",
+                    help="replace the fixed batch with a seeded arrival "
+                         "trace replayed through the async front-end "
+                         "(one client task per arrival); --requests is "
+                         "ignored, the trace is --rate-rps x --duration-s")
+    ap.add_argument("--rate-rps", type=float, default=None,
+                    help="mean arrivals per second (traffic; default 4)")
+    ap.add_argument("--duration-s", type=float, default=None,
+                    help="trace horizon in seconds (traffic; default 2)")
+    ap.add_argument("--arrival", default=None,
+                    choices=["poisson", "onoff"],
+                    help="arrival process (traffic; default poisson; "
+                         "onoff = bursty exponential ON/OFF dwells)")
+    ap.add_argument("--time-scale", type=float, default=None,
+                    help="replay clock multiplier (traffic; default 1 = "
+                         "real time; 0 = submit in trace order with no "
+                         "waiting — deterministic)")
+    ap.add_argument("--admission", action="store_true",
+                    help="SLO-aware admission control: shed requests "
+                         "whose projected TTFT busts their deadline "
+                         "instead of letting the pool thrash")
+    ap.add_argument("--admission-tick-cost-s", type=float, default=None,
+                    help="fix the admission projection's seconds-per-tick "
+                         "(deterministic decisions) instead of the live "
+                         "tick-wall EMA")
+    ap.add_argument("--max-pending-tokens", type=int, default=None,
+                    help="structural backpressure cap on queued prefill "
+                         "tokens: beyond it best-effort submits defer, "
+                         "deadline-carrying ones shed")
     args = ap.parse_args(argv)
     if (args.draft or args.spec_k is not None) and not args.speculative:
         ap.error("--draft/--spec-k require --speculative")
@@ -154,6 +198,25 @@ def main(argv=None) -> int:
                  "stores device pool pages)")
     if args.spec_k is None:
         args.spec_k = 4
+    if not args.traffic and any(v is not None for v in (
+            args.rate_rps, args.duration_s, args.arrival, args.time_scale)):
+        ap.error("--rate-rps/--duration-s/--arrival/--time-scale require "
+                 "--traffic")
+    if not args.admission and (args.admission_tick_cost_s is not None
+                               or args.max_pending_tokens is not None):
+        ap.error("--admission-tick-cost-s/--max-pending-tokens require "
+                 "--admission")
+    if args.traffic and args.mixed_sampling:
+        ap.error("--traffic and --mixed-sampling are exclusive (trace "
+                 "requests share one SamplingParams)")
+    if args.rate_rps is None:
+        args.rate_rps = 4.0
+    if args.duration_s is None:
+        args.duration_s = 2.0
+    if args.arrival is None:
+        args.arrival = "poisson"
+    if args.time_scale is None:
+        args.time_scale = 1.0
 
     import jax
     from repro.configs.base import get_config
@@ -161,7 +224,7 @@ def main(argv=None) -> int:
     from repro.serving.engine import ServeConfig, ServingEngine
     from repro.serving.metrics import SLO
     from repro.serving.sampling import SamplingParams
-    from repro.serving.scheduler import PhaseAwareConfig
+    from repro.serving.scheduler import AdmissionConfig, PhaseAwareConfig
     from repro.serving.tracing import Tracer
 
     cfg = get_config(args.arch)
@@ -177,6 +240,11 @@ def main(argv=None) -> int:
             k=args.spec_k,
             drafter="model" if args.draft else "ngram",
             draft_arch=args.draft)
+    admission = None
+    if args.admission:
+        admission = AdmissionConfig(
+            tick_cost_s=args.admission_tick_cost_s,
+            max_pending_tokens=args.max_pending_tokens)
     sc = ServeConfig(
         max_batch=args.max_batch, max_len=args.max_len,
         phase=PhaseAwareConfig(strategy=args.strategy,
@@ -188,7 +256,8 @@ def main(argv=None) -> int:
         kv_dtype=args.kv_dtype, weights_dtype=args.weights_dtype,
         prefix_cache=args.prefix_cache,
         speculative=spec,
-        executor=args.executor, host_spill_pages=args.host_spill_pages)
+        executor=args.executor, host_spill_pages=args.host_spill_pages,
+        admission=admission)
     # tracing is opt-in: enabled=False keeps the hot loop at one branch
     # per instrumentation point and the token streams bit-identical
     tracer = Tracer(enabled=bool(args.trace_out))
@@ -198,59 +267,106 @@ def main(argv=None) -> int:
     engine = ServingEngine(cfg, params, sc, tracer=tracer)
 
     rng = np.random.default_rng(args.seed)
-    shared = rng.integers(0, cfg.vocab_size,
-                          (min(args.shared_prefix, args.prompt_len),),
-                          dtype=np.int32)
     stop = tuple(args.stop_token)
-    t0 = time.monotonic()
-    for i in range(args.requests):
-        L = args.prompt_len
-        if cfg.n_codebooks > 1:
-            prompt = rng.integers(0, cfg.vocab_size,
-                                  (cfg.n_codebooks, L), dtype=np.int32)
-        else:
-            tail = rng.integers(0, cfg.vocab_size, (L - len(shared),),
-                                dtype=np.int32)
-            prompt = np.concatenate([shared, tail])
-        # per-request sampling: --temperature 0 IS greedy (no 1e-6
-        # rewrite); --mixed-sampling keeps even-indexed requests greedy
-        temp = args.temperature
-        if args.mixed_sampling and i % 2 == 0:
-            temp = 0.0
-        engine.submit(prompt, sampling=SamplingParams(
-            temperature=temp, top_k=args.top_k, top_p=args.top_p,
-            seed=args.seed + i, max_new_tokens=args.max_new, stop=stop),
-            slo=slo)
-    done = engine.run_until_drained()
-    wall = time.monotonic() - t0
-
-    # NaN-guarded latency stats: a request that never emitted a token
-    # (max_new 0, abort, stop on submit) reports NaN ttft/tpot and is
-    # excluded here; its finish_reason is surfaced below instead
-    ttfts = [r.ttft for r in done if not np.isnan(r.ttft)]
-    tpots = [r.tpot for r in done if not np.isnan(r.tpot)]
-    reasons = {}
-    for r in done:
-        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
-    total_new = sum(len(r.generated) for r in done)
-    occ = engine.phase_occupancy()
-    decode_ticks = [t.wall_s for t in engine.tick_log
-                    if t.decode_reqs and not t.prefill_reqs]
     mode_s = "mixed" if args.mixed_sampling else (
         "greedy" if args.temperature <= 0.0 else
         f"t={args.temperature}")
-    reasons_s = " ".join(f"{k}={v}" for k, v in sorted(
-        reasons.items(), key=lambda kv: str(kv[0])))
-    print(f"arch={cfg.name} strategy={args.strategy} "
-          f"chunk={args.prefill_chunk} chunked={engine.chunked} "
-          f"sampling={mode_s} "
-          f"requests={len(done)} tokens={total_new} wall={wall:.2f}s")
-    ttft_p50 = np.median(ttfts) * 1e3 if ttfts else float("nan")
-    tpot_p50 = np.median(tpots) * 1e3 if tpots else float("nan")
-    print(f"TTFT p50={ttft_p50:.1f}ms  "
-          f"TPOT p50={tpot_p50:.1f}ms  "
-          f"throughput={total_new / wall:.1f} tok/s  "
-          f"finish[{reasons_s}]")
+    t0 = time.monotonic()
+    if args.traffic:
+        import asyncio
+
+        from repro.serving.frontend import AsyncEngine
+        from repro.serving.traffic import (TenantSpec, TrafficConfig,
+                                           replay, synthesize)
+        if cfg.n_codebooks > 1:
+            ap.error("--traffic supports single-codebook archs only "
+                     "(trace prompts are 1-D token sequences)")
+        if args.shared_prefix >= args.prompt_len:
+            ap.error("--traffic needs --shared-prefix < --prompt-len "
+                     "(a prompt needs at least one non-shared token)")
+        # prompt/output lengths draw uniformly from [half, full] so the
+        # trace exercises mixed shapes the way real traffic does
+        p_lo = max(args.shared_prefix + 1, (args.prompt_len + 1) // 2)
+        tenant = TenantSpec(
+            name="cli", rate_rps=args.rate_rps, arrival=args.arrival,
+            prompt_len=(min(p_lo, args.prompt_len), args.prompt_len),
+            output_len=(max(1, (args.max_new + 1) // 2), args.max_new),
+            shared_prefix_len=args.shared_prefix,
+            n_prefixes=2 if args.shared_prefix else 1,
+            slo=slo)
+        events = synthesize(TrafficConfig(
+            tenants=(tenant,), duration_s=args.duration_s,
+            seed=args.seed, vocab_size=cfg.vocab_size))
+        sp = SamplingParams(temperature=args.temperature,
+                            top_k=args.top_k, top_p=args.top_p,
+                            seed=args.seed, stop=stop)
+
+        async def _go():
+            async with AsyncEngine(engine) as fe:
+                return await replay(fe, events,
+                                    time_scale=args.time_scale,
+                                    sampling=sp)
+
+        report = asyncio.run(_go())
+        wall = time.monotonic() - t0
+        print(f"arch={cfg.name} strategy={args.strategy} "
+              f"chunk={args.prefill_chunk} chunked={engine.chunked} "
+              f"sampling={mode_s} "
+              f"traffic[{args.arrival} rate={args.rate_rps:g}rps "
+              f"dur={args.duration_s:g}s scale={args.time_scale:g}] "
+              f"admission={'on' if admission else 'off'}")
+        print(report.render())
+    else:
+        shared = rng.integers(0, cfg.vocab_size,
+                              (min(args.shared_prefix, args.prompt_len),),
+                              dtype=np.int32)
+        for i in range(args.requests):
+            L = args.prompt_len
+            if cfg.n_codebooks > 1:
+                prompt = rng.integers(0, cfg.vocab_size,
+                                      (cfg.n_codebooks, L), dtype=np.int32)
+            else:
+                tail = rng.integers(0, cfg.vocab_size, (L - len(shared),),
+                                    dtype=np.int32)
+                prompt = np.concatenate([shared, tail])
+            # per-request sampling: --temperature 0 IS greedy (no 1e-6
+            # rewrite); --mixed-sampling keeps even-indexed requests
+            # greedy
+            temp = args.temperature
+            if args.mixed_sampling and i % 2 == 0:
+                temp = 0.0
+            engine.submit(prompt, sampling=SamplingParams(
+                temperature=temp, top_k=args.top_k, top_p=args.top_p,
+                seed=args.seed + i, max_new_tokens=args.max_new,
+                stop=stop),
+                slo=slo)
+        done = engine.run_until_drained()
+        wall = time.monotonic() - t0
+
+        # NaN-guarded latency stats: a request that never emitted a token
+        # (max_new 0, abort, stop on submit) reports NaN ttft/tpot and is
+        # excluded here; its finish_reason is surfaced below instead
+        ttfts = [r.ttft for r in done if not np.isnan(r.ttft)]
+        tpots = [r.tpot for r in done if not np.isnan(r.tpot)]
+        reasons = {}
+        for r in done:
+            reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+        total_new = sum(len(r.generated) for r in done)
+        reasons_s = " ".join(f"{k}={v}" for k, v in sorted(
+            reasons.items(), key=lambda kv: str(kv[0])))
+        print(f"arch={cfg.name} strategy={args.strategy} "
+              f"chunk={args.prefill_chunk} chunked={engine.chunked} "
+              f"sampling={mode_s} "
+              f"requests={len(done)} tokens={total_new} wall={wall:.2f}s")
+        ttft_p50 = np.median(ttfts) * 1e3 if ttfts else float("nan")
+        tpot_p50 = np.median(tpots) * 1e3 if tpots else float("nan")
+        print(f"TTFT p50={ttft_p50:.1f}ms  "
+              f"TPOT p50={tpot_p50:.1f}ms  "
+              f"throughput={total_new / wall:.1f} tok/s  "
+              f"finish[{reasons_s}]")
+    occ = engine.phase_occupancy()
+    decode_ticks = [t.wall_s for t in engine.tick_log
+                    if t.decode_reqs and not t.prefill_reqs]
     print(f"ticks={engine.n_ticks} "
           f"occupancy prefill={occ['prefill']:.2f} decode={occ['decode']:.2f} "
           f"mixed={occ['mixed']:.2f}  "

@@ -17,6 +17,7 @@ from repro.serving.executor import (
     Executor,
     make_executor,
 )
+from repro.serving.frontend import AsyncEngine, AsyncRequest
 from repro.serving.kv_pool import HostTier, KVPool
 from repro.serving.metrics import (
     SLO,
@@ -33,6 +34,11 @@ from repro.serving.sampling import (
     verify_draft_rows,
 )
 from repro.serving.scheduler import (
+    PRIORITY_BATCH,
+    PRIORITY_INTERACTIVE,
+    PRIORITY_STANDARD,
+    AdmissionConfig,
+    AdmissionController,
     PackedPrefill,
     PhaseAwareConfig,
     PhaseScheduler,
@@ -41,6 +47,15 @@ from repro.serving.scheduler import (
 )
 from repro.serving.speculative import SpecConfig
 from repro.serving.tracing import Tracer
+from repro.serving.traffic import (
+    ArrivalEvent,
+    RequestResult,
+    TenantSpec,
+    TrafficConfig,
+    TrafficReport,
+    replay,
+    synthesize,
+)
 from repro.serving.types import (
     Request,
     RequestOutput,
@@ -50,33 +65,47 @@ from repro.serving.types import (
 )
 
 __all__ = [
+    "AdmissionConfig",
+    "AdmissionController",
+    "ArrivalEvent",
+    "AsyncEngine",
+    "AsyncRequest",
     "ColocatedExecutor",
     "DisaggregatedExecutor",
     "Executor",
     "HostTier",
     "KVPool",
     "MetricsRegistry",
+    "PRIORITY_BATCH",
+    "PRIORITY_INTERACTIVE",
+    "PRIORITY_STANDARD",
     "PackedPrefill",
     "PhaseAwareConfig",
     "PhaseScheduler",
     "PrefixCache",
     "Request",
     "RequestOutput",
+    "RequestResult",
     "RequestState",
     "SLO",
     "SamplingParams",
     "ServeConfig",
     "ServingEngine",
     "SpecConfig",
+    "TenantSpec",
     "TickPlan",
     "TickRecord",
     "Tracer",
+    "TrafficConfig",
+    "TrafficReport",
     "make_executor",
     "pack_chunks",
     "quantile",
+    "replay",
     "sample_tokens",
     "sample_tokens_rows",
     "slo_attainment",
+    "synthesize",
     "verify_draft",
     "verify_draft_rows",
 ]

@@ -111,6 +111,7 @@ decode shardings from distributed/sharding.py.
 
 from __future__ import annotations
 
+import math
 import time
 import warnings
 from collections import deque
@@ -153,6 +154,7 @@ from repro.serving.sampling import (
     verify_draft_rows,
 )
 from repro.serving.scheduler import (
+    AdmissionController,
     PhaseScheduler,
     TickPlan,
     bucket_pow2 as _bucket,
@@ -197,6 +199,8 @@ class ServingEngine:
     # engine passes it at construction), covering their counters too.
     host_transfers = counter_attr("serving_host_transfers_total")
     aborted = counter_attr("serving_aborted_total")
+    admission_shed = counter_attr("serving_admission_shed_total")
+    admission_deferred = counter_attr("serving_admission_deferred_total")
     preemptions = counter_attr("serving_preemptions_total")
     swap_outs = counter_attr("serving_swap_outs_total")
     swap_resumes = counter_attr("serving_swap_resumes_total")
@@ -326,6 +330,18 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * B
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # admission control (ServeConfig.admission): submit() consults the
+        # controller against the live backlog — shed requests retire
+        # immediately (finish_reason "shed"), deferred ones park here and
+        # are reconsidered at every step() until the backlog has room
+        self.admission: Optional[AdmissionController] = (
+            AdmissionController(sc.admission, sc.phase)
+            if sc.admission is not None else None)
+        self.deferred: List[Request] = []
+        # live seconds-per-tick estimate (EMA over TickRecord.wall_s) the
+        # controller projects TTFT with when no fixed tick_cost_s is set
+        self._tick_wall_ema = 0.0
+        self._tick_wall_n = 0
         # bounded record of recent ticks (a long-lived engine must not grow
         # per-tick state without bound); occupancy uses running counters
         self.tick_log: Deque[TickRecord] = deque(maxlen=65_536)
@@ -339,6 +355,8 @@ class ServingEngine:
         self._n_mixed_ticks = 0
         self.host_transfers = 0          # device->host syncs (see _to_host)
         self.aborted = 0                 # requests cancelled via abort()
+        self.admission_shed = 0          # submits refused by admission
+        self.admission_deferred = 0      # submits parked by the backlog cap
         self.preemptions = 0             # lifetime pool evictions (paged)
         self.kv_resident_peak = 0        # peak allocated KV bytes (paged)
         # tiered-KV counters: how preemptions resumed (swap vs recompute)
@@ -554,7 +572,8 @@ class ServingEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, *,
                sampling: Optional[SamplingParams] = None,
-               slo: Optional[SLO] = None) -> Request:
+               slo: Optional[SLO] = None,
+               priority: Optional[int] = None) -> Request:
         """Queue one request.
 
         ``sampling`` carries the per-request parameters (temperature=0 is
@@ -562,10 +581,23 @@ class ServingEngine:
         positional ``max_new_tokens`` / ``eos_id`` arguments are kept for
         existing callers and override the corresponding ``sampling``
         fields when given.  ``slo`` attaches TTFT/TPOT deadlines
-        (``repro.serving.SLO``, milliseconds): at retirement the request
-        counts into the ``serving_slo_*`` attainment counters and the
-        goodput fraction ``counts()``/``goodput()`` report — deadlines
-        never change scheduling, only accounting."""
+        (``repro.serving.SLO``, milliseconds): the request counts into
+        the ``serving_slo_*`` attainment counters at retirement, and —
+        SLO-aware scheduling (PR 10) — its TTFT deadline steers prefill
+        ordering (EDF within a priority class) and, with
+        ``ServeConfig.admission`` set, the admission decision.
+
+        ``priority`` is a ``scheduler.PRIORITY_*`` lane (default
+        STANDARD): slot admission and the prefill budget serve lower
+        values first.
+
+        With admission control on, the returned ``Request`` may come back
+        ALREADY RETIRED (``finish_reason == "shed"``: projected TTFT
+        busts the deadline under current load, or the prompt alone
+        overflows the pending-token cap) or parked in ``self.deferred``
+        (best-effort request over the cap; it joins the queue once the
+        backlog drains).  Callers that must distinguish these check
+        ``req.finish_reason`` / ``req in engine.deferred``."""
         sp = sampling if sampling is not None else self._default_sampling
         if max_new_tokens is not None:
             sp = replace(sp, max_new_tokens=max_new_tokens)
@@ -594,13 +626,116 @@ class ServingEngine:
         if slo is not None and not isinstance(slo, SLO):
             raise TypeError(f"slo={slo!r} (expected repro.serving.SLO)")
         req.slo = slo
+        if priority is not None:
+            req.priority = int(priority)
         req.t_submit = time.monotonic()
+        self._next_id += 1
         if self.tracer.enabled:
             self.tracer.begin_request(req.req_id, req.t_submit,
                                       prompt_len=req.prompt_len)
-        self._next_id += 1
+        if self.admission is not None:
+            decision = self.admission.decide(
+                req.prompt_len,
+                ttft_deadline_s=(slo.ttft_ms / 1e3
+                                 if slo is not None and slo.ttft_ms is not None
+                                 else math.inf),
+                backlog_tokens=self._pending_prefill_tokens(),
+                decode_backlog_tokens=self._pending_decode_tokens(),
+                n_live=(len(self.queue) + len(self.deferred)
+                        + sum(r is not None for r in self.slot_req)),
+                ema_value=self._tick_wall_ema,
+                ema_ticks=self._tick_wall_n)
+            if decision == "shed":
+                return self._shed(req)
+            if decision == "defer":
+                self.admission_deferred += 1
+                self.deferred.append(req)
+                return req
         self.queue.append(req)
         return req
+
+    def _shed(self, req: Request) -> Request:
+        """Refuse ``req`` at admission: retired immediately with
+        finish_reason "shed" (terminal — it never holds a slot or a
+        page).  Unlike an abort (the CLIENT's choice, excluded from
+        goodput), a shed is the engine declining demand: a
+        deadline-carrying request counts into
+        ``serving_slo_requests_total`` un-attained (its NaN TTFT fails
+        the bound), so ``goodput()`` is measured over ALL submitted SLO
+        demand and shedding only wins by letting the survivors meet
+        their deadlines."""
+        self.admission_shed += 1
+        req.state = RequestState.DONE
+        req.finish_reason = "shed"
+        req.t_done = time.monotonic()
+        self._account_latency(req)
+        if self.tracer.enabled:
+            self.tracer.end_request(req.req_id, req.t_done, reason="shed",
+                                    generated=0)
+        self.done.append(req)
+        return req
+
+    def _pending_prefill_tokens(self, include_deferred: bool = True) -> int:
+        """Queued-but-uncomputed prefill tokens: the backlog a new prompt
+        must wait behind — the admission controller's projection input
+        and the structural ``max_pending_tokens`` cap's measure."""
+        pend = sum(max(r.prompt_len - r.prefill_pos, 0) for r in self.queue)
+        if include_deferred:
+            pend += sum(max(r.prompt_len - r.prefill_pos, 0)
+                        for r in self.deferred)
+        pend += sum(max(self._effective_len(r) - r.prefill_pos, 0)
+                    for r in self.slot_req
+                    if r is not None and r.state == RequestState.PREFILLING)
+        return pend
+
+    def _pending_decode_tokens(self, include_deferred: bool = True) -> int:
+        """Remaining generation budget over every live request — the
+        decode-side queueing a new prompt waits behind (drains at
+        ``max_decode_batch`` tokens per tick)."""
+        rem = sum(max(r.max_new_tokens - len(r.generated), 0)
+                  for r in self.queue)
+        if include_deferred:
+            rem += sum(max(r.max_new_tokens - len(r.generated), 0)
+                       for r in self.deferred)
+        rem += sum(max(r.max_new_tokens - len(r.generated), 0)
+                   for r in self.slot_req if r is not None)
+        return rem
+
+    def _reconsider_deferred(self) -> None:
+        """Re-evaluate deferred requests against the current backlog;
+        admitted ones join the queue tail in deferral order.  Deferral is
+        only ever STRUCTURAL (best-effort request over the pending-token
+        cap — deadline busts shed instead, and a prompt that alone
+        overflows the cap was shed at submit), so every deferred request
+        re-enters as soon as enough backlog drains: no starvation."""
+        if not self.deferred or self.admission is None:
+            return
+        backlog = self._pending_prefill_tokens(include_deferred=False)
+        n_live = (len(self.queue)
+                  + sum(r is not None for r in self.slot_req))
+        still = []
+        for req in self.deferred:
+            decision = self.admission.decide(
+                req.prompt_len, ttft_deadline_s=math.inf,
+                backlog_tokens=backlog, n_live=n_live,
+                ema_value=self._tick_wall_ema, ema_ticks=self._tick_wall_n)
+            # decode backlog omitted: deferral is structural (prefill-
+            # token cap only), a best-effort request has no deadline to
+            # project against
+            if decision == "admit":
+                self.queue.append(req)
+                backlog += max(req.prompt_len - req.prefill_pos, 0)
+                n_live += 1
+            else:
+                still.append(req)
+        self.deferred = still
+
+    @property
+    def tick_wall_ema(self) -> float:
+        """EMA of ``TickRecord.wall_s`` over ticks that compiled nothing
+        (0.0 until the first such tick) — the live steady-state tick-cost
+        estimate admission projections use."""
+        return self._tick_wall_ema
 
     def abort(self, req_id: int) -> Optional[RequestOutput]:
         """Cancel a request at ANY lifecycle stage.
@@ -622,6 +757,13 @@ class ServingEngine:
                         self.host_tier.release(r_idx, host_pages)
                     req.swap = None
                 break
+        if req is None:
+            # deferred (admission-parked) requests hold no slot, pages,
+            # or swap state — cancellation is pure list removal
+            for i, r in enumerate(self.deferred):
+                if r.req_id == req_id:
+                    req = self.deferred.pop(i)
+                    break
         if req is None:
             for r in self.slot_req:
                 if r is not None and r.req_id == req_id:
@@ -697,6 +839,14 @@ class ServingEngine:
     def _admit(self) -> List[Request]:
         admitted = []
         free = self._free_slots()
+        # SLO-aware slot order: (class, TTFT deadline, age).  Stable and
+        # deterministic — all-default submissions sort (STANDARD, inf,
+        # req_id), i.e. exactly the old FIFO.  The swap-resume head-wait
+        # below is order-independent: deadlock freedom rests on a lone
+        # request always fitting the pool, not on WHICH request is head
+        if self.queue:
+            self.queue.sort(
+                key=lambda r: (r.priority, r.ttft_deadline_s, r.req_id))
         while free and self.queue:
             req = self.queue[0]
             if req.swap is not None:
@@ -1542,6 +1692,9 @@ class ServingEngine:
         t0 = time.monotonic()
         self.executor.begin_tick()
         self._prefill_progress = False
+        # deferred submits re-enter as soon as the backlog has room —
+        # BEFORE this tick's admission so they compete for freed slots
+        self._reconsider_deferred()
         # snapshot for incremental outputs: every request that can gain
         # tokens this tick is in the queue or a slot right now
         counts0 = {r.req_id: len(r.generated) for r in self.queue}
@@ -1549,12 +1702,15 @@ class ServingEngine:
                         for r in self.slot_req if r is not None})
         done0 = len(self.done)
         self._admit()
-        # age order (FIFO): under page contention the oldest request gets
-        # the prefill budget/pages first — with slot order a recycled low
-        # slot would starve older requests and thrash the pool
+        # entries carry (priority, TTFT deadline) so plan_tick can order
+        # the prefill budget SLO-aware: class first, then EDF, then age
+        # (FIFO) — for deadline-free requests this is the original pure
+        # age order, where under page contention the oldest request gets
+        # the budget/pages first (slot order would starve older requests
+        # behind a recycled low slot and thrash the pool)
         prefilling = sorted(
             ((r.req_id, self._effective_len(r) - r.prefill_pos,
-              self.chunked, r.prefill_pos)
+              self.chunked, r.prefill_pos, r.priority, r.ttft_deadline_s)
              for r in self.slot_req
              if r is not None and r.state == RequestState.PREFILLING),
             key=lambda e: e[0])
@@ -1613,6 +1769,17 @@ class ServingEngine:
             host_resident_pages=(self.host_tier.used_pages()
                                  if self.host_tier is not None else 0))
         self.metrics.observe("serving_tick_wall_seconds", rec.wall_s)
+        # tick-cost EMA for admission TTFT projections: alpha 0.2 tracks a
+        # load shift within ~5 ticks.  Ticks that compiled a new phase
+        # program are excluded outright — a compile stall is paid once per
+        # shape, not per tick, and folding even one multi-second compile
+        # into the EMA would have admission shedding everything on a
+        # near-idle engine until the average decays
+        if rec.new_compiles == 0:
+            self._tick_wall_n += 1
+            self._tick_wall_ema = (rec.wall_s if self._tick_wall_n == 1 else
+                                   0.8 * self._tick_wall_ema
+                                   + 0.2 * rec.wall_s)
         if self.tracer.enabled:
             # the TickRecord twin: every rec counter appears as a tick-span
             # arg, so summing an arg across the tick track reproduces the
@@ -1668,8 +1835,10 @@ class ServingEngine:
         (or derived from one), never a second copy."""
         g = self.goodput()
         return {"queued": len(self.queue),
+                "deferred": len(self.deferred),
                 "active": sum(r is not None for r in self.slot_req),
                 "done": len(self.done),
+                "shed": self.admission_shed,
                 "migrated_pages": self.executor.migrated_pages,
                 "migrated_bytes": self.executor.migrated_bytes,
                 "swap_out_bytes": (self.host_tier.swap_out_bytes
@@ -1727,26 +1896,41 @@ class ServingEngine:
         a silent partial drain poisons every downstream comparison.  The
         message carries the counts() snapshot, the per-state request
         breakdown, and the last TickRecord so a stuck engine is
-        diagnosable from the exception alone."""
+        diagnosable from the exception alone.  Admission-control
+        outcomes appear as their OWN buckets: ``deferred`` (parked
+        outside the queue, still owed service) and the ``shed`` tally —
+        an admission stall must read differently from a scheduling
+        stall of live queued requests."""
         if ticks >= max_ticks and (
-                self.queue or any(r is not None for r in self.slot_req)):
+                self.queue or self.deferred
+                or any(r is not None for r in self.slot_req)):
             c = self.counts()
             states: Dict[str, int] = {}
             for r in list(self.queue) + [r for r in self.slot_req
                                          if r is not None]:
                 states[r.state.value] = states.get(r.state.value, 0) + 1
+            if self.deferred:
+                # WAITING but not in the queue — their own bucket, not
+                # lumped into "waiting"
+                states["deferred"] = len(self.deferred)
             last = self.tick_log[-1] if self.tick_log else None
             raise RuntimeError(
                 f"max_ticks={max_ticks} exhausted with live requests "
-                f"({c['queued']} queued, {c['active']} active, "
-                f"{c['done']} done; states={states}, "
+                f"({c['queued']} queued, {c['deferred']} deferred, "
+                f"{c['active']} active, {c['done']} done of which "
+                f"{c['shed']} shed; states={states}, "
                 f"preemptions={self.preemptions}) — the engine did not "
                 f"drain; raise max_ticks or check for a scheduling stall. "
                 f"counts={c} last_tick={last}")
 
+    def _live(self) -> bool:
+        """Requests still owed service: queued, deferred, or in a slot."""
+        return bool(self.queue or self.deferred
+                    or any(r is not None for r in self.slot_req))
+
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0
-        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+        while self._live() and ticks < max_ticks:
             self.step()
             ticks += 1
         self._check_drained(ticks, max_ticks)
@@ -1759,8 +1943,7 @@ class ServingEngine:
         may be called from the consuming loop (an abort's terminal output
         is returned by ``abort`` itself, not re-yielded here)."""
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and ticks < max_ticks:
+        while self._live() and ticks < max_ticks:
             yield from self.step()
             ticks += 1
         self._check_drained(ticks, max_ticks)

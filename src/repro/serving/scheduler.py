@@ -31,8 +31,19 @@ carried out by ``ServingEngine.step``.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
+
+# Priority classes (smaller = more urgent).  A class is a COARSE lane:
+# the scheduler orders prefill work by (class, TTFT deadline, age), so an
+# interactive request always outranks a batch one, and within a class the
+# earliest deadline goes first (EDF) with age as the deterministic tie
+# break.  These are plain ints (not an Enum) so they sort, serialize, and
+# default naturally in dataclasses and trace JSON.
+PRIORITY_INTERACTIVE = 0
+PRIORITY_STANDARD = 1
+PRIORITY_BATCH = 2
 
 
 def pages_for(length: int, page_size: int, capacity: int) -> int:
@@ -200,13 +211,23 @@ class PhaseScheduler:
                   capacity: Optional[int] = None,
                   spec_k: int = 0) -> TickPlan:
         """waiting: [(req_id, remaining_prompt_tokens[, chunkable[,
-        cur_len]])]; decoding: [req_id].
+        cur_len[, priority[, ttft_deadline]]]])]; decoding: [req_id].
 
         Greedy: fill decode slots first (latency), then admit prefill work
         up to the token budget.  Chunkable requests take at most
         ``prefill_chunk`` tokens per tick; non-chunkable ones (SSM /
         shared-attention plans, whose recurrent state cannot resume
         mid-prompt) are scheduled atomically as one whole-prompt chunk.
+
+        SLO-AWARE ORDERING: prefill admission walks ``waiting`` in
+        ``(priority, ttft_deadline, req_id)`` order — priority classes
+        first (``PRIORITY_INTERACTIVE`` outranks ``PRIORITY_BATCH``),
+        earliest-TTFT-deadline first within a class (EDF: the request
+        closest to busting its deadline gets the tick's prefill budget),
+        age (req_id) as the deterministic tie break.  Entries that omit
+        the two trailing fields default to ``PRIORITY_STANDARD`` with no
+        deadline, which makes the order degrade to the pre-SLO pure age
+        order — existing callers see identical plans.
 
         TOKEN-LEVEL ADMISSION (paged arena): with ``free_pages`` /
         ``page_size`` set, prefill work is additionally admitted only
@@ -248,7 +269,12 @@ class PhaseScheduler:
         budget = self.cfg.max_prefill_tokens
         free_slots = self.cfg.max_decode_batch - len(plan.decode_reqs)
         pages_left = free_pages
-        for entry in waiting:
+        ordered = sorted(
+            waiting,
+            key=lambda e: (e[4] if len(e) > 4 else PRIORITY_STANDARD,
+                           e[5] if len(e) > 5 else math.inf,
+                           e[0]))
+        for entry in ordered:
             rid, remaining = entry[0], entry[1]
             chunkable = entry[2] if len(entry) > 2 else True
             cur_len = entry[3] if len(entry) > 3 else 0
@@ -298,3 +324,134 @@ class PhaseScheduler:
             plan.packed = pack_chunks(plan.prefill_chunks,
                                       align=self.cfg.pack_align)
         return plan
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    """Policy knobs for shed-before-thrash admission control.
+
+    Under overload the engine's failure mode is PREEMPTION THRASH: every
+    admitted request evicts another's KV pages, recompute-on-resume burns
+    the prefill budget, and NOBODY meets their deadline.  The admission
+    controller refuses work at ``submit()`` time instead — a request whose
+    projected TTFT already busts its deadline is turned away while the
+    pages it would have churned keep serving requests that can still win.
+    Goodput-under-SLO goes UP by serving fewer requests.
+
+    ``tick_cost_s``: fixed seconds-per-tick for the TTFT projection.
+    ``None`` uses the engine's live tick-wall EMA (production); a fixed
+    value makes every admission decision a pure function of queue
+    occupancy — deterministic across runs/machines, which the
+    async-vs-sync identity tests and the committed bench baseline need.
+
+    ``margin`` scales the deadline before comparison (>1 sheds earlier,
+    <1 later).  ``min_ema_ticks``: below this many observed ticks the EMA
+    is noise — admit optimistically rather than shed on a cold start.
+
+    ``max_pending_tokens`` is a STRUCTURAL backpressure cap on queued-but
+    -unstarted prefill tokens, independent of any deadline: best-effort
+    requests (no SLO) are deferred — parked and retried each tick — once
+    the backlog exceeds it, rather than piling onto the queue; a prompt
+    that ALONE exceeds the cap is shed outright (it could never start).
+    """
+    enabled: bool = True
+    margin: float = 1.0
+    tick_cost_s: Optional[float] = None
+    min_ema_ticks: int = 2
+    max_pending_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if self.margin <= 0:
+            raise ValueError(f"margin must be > 0, got {self.margin}")
+        if self.tick_cost_s is not None and self.tick_cost_s <= 0:
+            raise ValueError(
+                f"tick_cost_s must be > 0, got {self.tick_cost_s}")
+        if self.min_ema_ticks < 0:
+            raise ValueError(
+                f"min_ema_ticks must be >= 0, got {self.min_ema_ticks}")
+        if self.max_pending_tokens is not None and self.max_pending_tokens < 1:
+            raise ValueError(
+                f"max_pending_tokens must be >= 1, got "
+                f"{self.max_pending_tokens}")
+
+
+class AdmissionController:
+    """Stateless admit/defer/shed decisions (the engine owns the EMA).
+
+    Pure host logic like ``PhaseScheduler`` — every decision is a
+    function of its arguments, so unit tests need no engine and the
+    deterministic mode (fixed ``tick_cost_s``) is reproducible by
+    construction.
+    """
+
+    def __init__(self, cfg: AdmissionConfig, sched_cfg: PhaseAwareConfig):
+        self.cfg = cfg
+        self.sched = sched_cfg
+
+    def resolve_tick_cost(self, ema_value: float,
+                          ema_ticks: int) -> Optional[float]:
+        """Seconds-per-tick to project with: the configured fixed cost,
+        else the live EMA once it has seen enough ticks, else ``None``
+        (no usable estimate — admit optimistically)."""
+        if self.cfg.tick_cost_s is not None:
+            return self.cfg.tick_cost_s
+        if ema_ticks >= max(self.cfg.min_ema_ticks, 1) and ema_value > 0:
+            return ema_value
+        return None
+
+    def project_ttft_s(self, prompt_len: int, *, backlog_tokens: int,
+                       decode_backlog_tokens: int = 0, n_live: int = 0,
+                       tick_cost_s: float) -> float:
+        """Projected time-to-first-token under CURRENT occupancy.
+
+        Three queueing terms, all in ticks: (a) prefill-budget ticks to
+        chew through the prefill backlog ahead of this prompt plus the
+        prompt itself (``max_prefill_tokens`` per tick); (b) decode
+        backlog — every live/queued request's REMAINING generation
+        budget drains at ``max_decode_batch`` tokens per tick, and a
+        prompt behind a deep queue waits for those generations whether
+        or not a slot is nominally free (this term is what keeps the
+        controller honest under sustained overload — slot count alone
+        underprices queueing by the whole generation length); (c) slot
+        pressure — each live request beyond the decode-slot count adds
+        one more tick.  This deliberately ignores page pressure and
+        chunking detail: it is an admission ESTIMATE, not a simulation,
+        and erring simple keeps it monotone in occupancy (more load
+        never projects a lower TTFT).
+        """
+        work = max(backlog_tokens, 0) + max(prompt_len, 0)
+        prefill_ticks = -(-work // self.sched.max_prefill_tokens)
+        decode_ticks = -(-max(decode_backlog_tokens, 0)
+                         // self.sched.max_decode_batch)
+        slot_wait = max(0, n_live + 1 - self.sched.max_decode_batch)
+        return (prefill_ticks + decode_ticks + slot_wait) * tick_cost_s
+
+    def decide(self, prompt_len: int, *, ttft_deadline_s: float = math.inf,
+               backlog_tokens: int = 0, decode_backlog_tokens: int = 0,
+               n_live: int = 0,
+               ema_value: float = 0.0, ema_ticks: int = 0) -> str:
+        """One of ``"admit"`` / ``"defer"`` / ``"shed"``.
+
+        Shed beats defer for deadline-carrying requests: parking a
+        request whose deadline is already lost just converts a fast
+        refusal into a slow violation.  Best-effort requests have no
+        deadline to lose, so the structural cap defers them instead.
+        """
+        if not self.cfg.enabled:
+            return "admit"
+        cap = self.cfg.max_pending_tokens
+        if cap is not None:
+            if prompt_len > cap:
+                return "shed"          # could never start, even alone
+            if backlog_tokens + prompt_len > cap:
+                return "shed" if math.isfinite(ttft_deadline_s) else "defer"
+        if math.isfinite(ttft_deadline_s):
+            cost = self.resolve_tick_cost(ema_value, ema_ticks)
+            if cost is not None:
+                projected = self.project_ttft_s(
+                    prompt_len, backlog_tokens=backlog_tokens,
+                    decode_backlog_tokens=decode_backlog_tokens,
+                    n_live=n_live, tick_cost_s=cost)
+                if projected > self.cfg.margin * ttft_deadline_s:
+                    return "shed"
+        return "admit"

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.serving.metrics import SLO
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import PhaseAwareConfig
+from repro.serving.scheduler import (AdmissionConfig, PhaseAwareConfig,
+                                     PRIORITY_STANDARD)
 from repro.serving.speculative import SpecConfig
 
 
@@ -61,6 +62,9 @@ class Request:
     # latency deadlines for goodput accounting (serving/metrics.py);
     # None = best-effort, excluded from SLO attainment
     slo: Optional[SLO] = None
+    # scheduling lane (scheduler.PRIORITY_*): prefill admission orders by
+    # (priority, TTFT deadline, age) — see PhaseScheduler.plan_tick
+    priority: int = PRIORITY_STANDARD
     # host-tier swap handle (set while the request's KV pages live in the
     # host spill pool between a swap-out preemption and its swap-in resume)
     swap: Optional[Any] = None
@@ -72,6 +76,16 @@ class Request:
     @property
     def eos_id(self) -> Optional[int]:
         return self.sampling.eos_id
+
+    @property
+    def ttft_deadline_s(self) -> float:
+        """Absolute wall-clock instant the first token is due (``inf``
+        for best-effort requests or an SLO with no TTFT term) — the EDF
+        key ``PhaseScheduler.plan_tick`` orders prefill admission by,
+        and the bound the admission controller projects against."""
+        if self.slo is not None and self.slo.ttft_ms is not None:
+            return self.t_submit + self.slo.ttft_ms / 1e3
+        return float("inf")
 
     @property
     def ttft(self) -> float:
@@ -198,6 +212,11 @@ class ServeConfig:
     # demote to host and promote on re-hit.  0 disables the tier
     # (recompute-on-resume, prefix eviction is terminal — PR 2/3 behavior)
     host_spill_pages: int = 0
+    # admission control (scheduler.AdmissionController): shed/defer work
+    # at submit() when projected TTFT under current occupancy busts the
+    # request's deadline, instead of admitting into preemption thrash.
+    # None disables it (every submit is admitted — pre-PR-10 behavior)
+    admission: Optional[AdmissionConfig] = None
 
     def __post_init__(self):
         if self.executor not in ("colocated", "disaggregated"):
